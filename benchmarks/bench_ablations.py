@@ -1,0 +1,91 @@
+"""Paper Fig. 12/13 ablations, one flag per optimization:
+
+  dag       — Fig. 12a: orientation on/off for CF
+  prune     — Fig. 12a: eager pruning (toExtend last-only) on/off for CF
+  custompat — Fig. 12c: O(1) motif classification vs generic canonical
+              labeling (with/without quick patterns)
+  fuse      — Fig. 12d: toAdd fused into extension vs materialize-then-
+              filter (Arabesque/RStream style)
+  bsearch   — Fig. 13b: binary vs linear connectivity search
+  soa       — Fig. 13a: SoA backtracking reconstruction vs carried AoS
+              row matrix (storage bytes reported in bench_memory)
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import Miner, make_cf_app, make_mc_app
+from repro.core.embedding_list import materialize
+from repro.graph import generators as G
+
+
+def _time_miner(m: Miner, repeats: int = 3) -> tuple[float, int]:
+    m.run()
+    ts = []
+    r = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = m.run()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], r
+
+
+def run(small: bool = True) -> list[str]:
+    g = G.erdos_renyi(300 if small else 800, 0.04 if small else 0.02,
+                      seed=3)
+    out = []
+
+    # Fig 12a: DAG + eager pruning on 4-CF
+    variants = [("dag+prune", make_cf_app(4, use_dag=True,
+                                          eager_prune=True)),
+                ("dag", make_cf_app(4, use_dag=True, eager_prune=False)),
+                ("prune", make_cf_app(4, use_dag=False, eager_prune=True)),
+                ("neither", make_cf_app(4, use_dag=False,
+                                        eager_prune=False))]
+    base = None
+    for name, app in variants:
+        dt, r = _time_miner(Miner(g, app))
+        base = base or dt
+        out.append(emit(f"fig12a/4cf/{name}", dt,
+                        f"count={r.count};speedup={base / dt:.2f}x"))
+
+    # Fig 12c: customized pattern classification on 4-MC
+    for name, app in [("custom", make_mc_app(4, mode="custom")),
+                      ("memo", make_mc_app(4, mode="memo")),
+                      ("generic+quick", make_mc_app(4, mode="generic",
+                                                    use_quick=True)),
+                      ("generic", make_mc_app(4, mode="generic",
+                                              use_quick=False))]:
+        dt, r = _time_miner(Miner(g, app))
+        out.append(emit(f"fig12c/4mc/{name}", dt))
+
+    # Fig 12d: materialization avoidance (fused toAdd)
+    for name, fuse in [("fused", True), ("materialized", False)]:
+        dt, r = _time_miner(Miner(g, make_mc_app(3), fuse_filter=fuse))
+        out.append(emit(f"fig12d/3mc/{name}", dt))
+
+    # Fig 13b: binary vs linear search
+    for name, search in [("binary", "binary"), ("linear", "linear")]:
+        dt, r = _time_miner(Miner(g, make_cf_app(4), search=search))
+        out.append(emit(f"fig13b/4cf/{name}", dt))
+
+    # Fig 13a: SoA backtracking materialization vs carried rows
+    dt, _ = _time_miner(Miner(g, make_mc_app(3)))
+    out.append(emit("fig13a/3mc/aos_carried_rows", dt))
+    m_soa = Miner(g, make_mc_app(3))
+    r = m_soa.run()
+    import jax
+    mat = jax.jit(lambda lv: materialize(lv))
+    jax.block_until_ready(mat(r.levels))
+    t0 = time.perf_counter()
+    jax.block_until_ready(mat(r.levels))
+    out.append(emit("fig13a/3mc/soa_backtrack_reconstruct",
+                    time.perf_counter() - t0,
+                    "reconstruction cost of the columnar form"))
+    return out
+
+
+if __name__ == "__main__":
+    run(small=False)

@@ -1,0 +1,52 @@
+"""Paper Table 3 analogue: the four mining apps on synthetic graphs.
+
+No Mico/Patents/Youtube on this box; RMAT (power-law, web-like) and ER
+graphs scaled to the single CPU core stand in.  Columns: app, graph,
+seconds, result.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (Miner, make_cf_app, make_fsm_app, make_mc_app,
+                        make_tc_app)
+from repro.graph import generators as G
+
+
+def graphs(small: bool):
+    if small:
+        return {"er200": G.erdos_renyi(200, 0.05, seed=1),
+                "rmat9": G.rmat(9, edge_factor=4, seed=1, labels=4)}
+    return {"er1k": G.erdos_renyi(1000, 0.02, seed=1),
+            "rmat12": G.rmat(12, edge_factor=8, seed=1, labels=4),
+            "rmat14": G.rmat(14, edge_factor=8, seed=1, labels=4)}
+
+
+def run(small: bool = True) -> list[str]:
+    out = []
+    for gname, g in graphs(small).items():
+        apps = [("tc", make_tc_app()),
+                ("3-cf", make_cf_app(3)), ("4-cf", make_cf_app(4)),
+                ("3-mc", make_mc_app(3)), ("4-mc", make_mc_app(4))]
+        if g.labels is not None:
+            apps.append(("3-fsm(ms=16)",
+                         make_fsm_app(3, min_support=16,
+                                      max_patterns=128)))
+        for aname, app in apps:
+            m = Miner(g, app)
+            m.run()                       # warm the jit cache
+            t0 = time.perf_counter()
+            r = m.run()
+            dt = time.perf_counter() - t0
+            derived = (f"count={r.count}" if r.p_map is None
+                       else "pmap=" + "/".join(str(int(x))
+                                               for x in r.p_map[:6]))
+            out.append(emit(f"table3/{aname}/{gname}", dt, derived))
+    return out
+
+
+if __name__ == "__main__":
+    run(small=False)

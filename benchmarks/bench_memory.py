@@ -1,0 +1,34 @@
+"""Paper Fig. 11 analogue: peak embedding-storage bytes per level, with
+and without edge blocking; SoA columnar bytes vs AoS row-matrix bytes."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import Miner, make_mc_app
+from repro.core.embedding_list import total_bytes
+from repro.graph import generators as G
+
+
+def run(small: bool = True) -> list[str]:
+    g = G.erdos_renyi(300 if small else 600, 0.04, seed=5)
+    out = []
+    m = Miner(g, make_mc_app(3))
+    r = m.run(collect_stats=True)
+    soa = total_bytes(r.levels)
+    # AoS equivalent: every level stores full [n, k] rows
+    aos = sum((lvl + 2) * 4 * s.n_embeddings
+              for lvl, s in enumerate(r.stats))
+    aos += 2 * 4 * (g.n_edges // 2)
+    out.append(emit("fig11/3mc/soa_bytes", 0.0, f"bytes={soa}"))
+    out.append(emit("fig11/3mc/aos_bytes", 0.0,
+                    f"bytes={aos};ratio={aos / max(soa, 1):.2f}x"))
+    # edge blocking bounds the peak worklist
+    for bs in (None, max(g.n_edges // 8, 64)):
+        rb = m.run(block_size=bs, collect_stats=True)
+        peak = max((s.bytes for s in rb.stats), default=0)
+        out.append(emit(f"fig11/3mc/peak_block={bs or 'off'}", 0.0,
+                        f"peak_bytes={peak}"))
+    return out
+
+
+if __name__ == "__main__":
+    run(small=False)

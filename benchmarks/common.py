@@ -1,0 +1,30 @@
+"""Benchmark helpers: timed runs with warmup, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    """Median seconds per call (after warmup compiles)."""
+    for _ in range(warmup):
+        jax.block_until_ready(_leaves(fn(*args, **kw)))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(_leaves(fn(*args, **kw)))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _leaves(x):
+    return [l for l in jax.tree.leaves(x) if hasattr(l, "block_until_ready")
+            or hasattr(l, "dtype")]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line)
+    return line

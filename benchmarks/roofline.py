@@ -1,0 +1,92 @@
+"""Render the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+MODEL_FLOPS: 6*N*D for dense LM train, 6*N_active*D for MoE (D = tokens);
+2*N*D for serve (no backward); per-family analytic counts otherwise.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.registry import get_arch
+
+
+def model_flops(arch_id: str, shape_name: str) -> float | None:
+    try:
+        arch = get_arch(arch_id)
+    except KeyError:
+        return None
+    shp = arch.shapes.get(shape_name) or {}
+    if arch.family != "lm":
+        return None
+    cfg = arch.config
+    if cfg.moe is not None:
+        d, dh = cfg.d_model, cfg.head_dim
+        attn = d * dh * (cfg.n_heads + 2 * cfg.n_kv_heads) + \
+            cfg.n_heads * dh * d
+        ffn_active = 3 * (cfg.moe.top_k + cfg.moe.n_shared) * d * \
+            cfg.moe.d_ff + d * cfg.moe.n_routed
+        n_active = cfg.n_layers * (attn + ffn_active) + cfg.vocab * d
+    else:
+        n_active = cfg.param_count()
+    kind = shp.get("kind", "train")
+    if kind == "train":
+        tokens = shp["seq_len"] * shp["global_batch"]
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shp["seq_len"] * shp["global_batch"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shp["global_batch"]
+
+
+def load_artifacts(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render_table(rows: list[dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | HLO GFLOPs/dev | model/HLO flops | mem GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        ratio = ""
+        if mf and r["flops"]:
+            ratio = f"{mf / (r['flops'] * r['n_chips']):.2f}"
+        mem = ""
+        ma = r.get("memory_analysis")
+        if ma:
+            tot = sum(ma.get(k, 0) for k in
+                      ("argument_size_in_bytes", "temp_size_in_bytes",
+                       "output_size_in_bytes"))
+            mem = f"{tot / 1e9:.1f}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.2e} | "
+            f"{rl['memory_s']:.2e} | {rl['collective_s']:.2e} | "
+            f"{rl['dominant'].replace('_s', '')} | "
+            f"{r['flops'] / 1e9:.1f} | {ratio} | {mem} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    rows = load_artifacts()
+    print(f"{len(rows)} artifacts\n")
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in rows if r["mesh"] == mesh]
+        if sub:
+            print(f"## mesh {mesh} ({len(sub)} cells)\n")
+            print(render_table(rows, mesh))
+            print()
+
+
+if __name__ == "__main__":
+    main()

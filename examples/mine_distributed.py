@@ -1,0 +1,41 @@
+"""Distributed mining across host devices with shard_map — the paper's
+edge blocking as the distribution unit, pattern maps merged by one psum.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/mine_distributed.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import jax                                                  # noqa: E402
+import numpy as np                                          # noqa: E402
+
+from repro.core import Miner, make_mc_app, mine_sharded    # noqa: E402
+from repro.core.pattern import MOTIF_NAMES                  # noqa: E402
+from repro.graph import generators as G                     # noqa: E402
+
+
+def main():
+    n_dev = jax.device_count()
+    print(f"devices: {n_dev}")
+    g = G.erdos_renyi(60, 0.15, seed=3)
+    mesh = jax.make_mesh((n_dev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    app = make_mc_app(4)
+    ref = Miner(g, app).run()
+    cnt, pmap, overflow = mine_sharded(
+        g, app, mesh, caps=((16384, 16384), (65536, 65536)))
+    print("4-motif census (sharded == single-device?):")
+    for name, a, b in zip(MOTIF_NAMES[4], pmap, ref.p_map):
+        marker = "ok" if a == b else "MISMATCH"
+        print(f"  {name:16s} {int(a):>8d} {marker}")
+    assert not overflow and (pmap == ref.p_map).all()
+    print("exact match across", n_dev, "devices")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end training driver: train a small qwen3-family model for a few
+hundred steps on synthetic data with checkpointing, and show the loss
+falling.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--d-model 256]
+
+The default (~10M params) runs on this 1-core CPU box in a few minutes;
+``--d-model 768 --n-layers 12`` gives a ~100M model for real hardware.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import lm_batch
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--moe", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(
+        name="example", n_layers=args.n_layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 2),
+        n_kv_heads=max(args.d_model // 128, 1),
+        d_ff=0 if args.moe else args.d_model * 4, vocab=args.vocab,
+        qk_norm=True, dtype="float32", attn_impl="naive", remat=False,
+        moe=MoEConfig(n_routed=8, top_k=2, d_ff=args.d_model,
+                      n_shared=1, capacity_factor=2.0) if args.moe
+        else None)
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params")
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = init_opt_state(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch))(params)
+        params, opt = apply_updates(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    start = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        (params, opt), start, _ = ckpt.restore_checkpoint(
+            args.ckpt_dir, (params, opt))
+        print(f"resumed at step {start}")
+    t0 = time.time()
+    first = None
+    for s in range(start, args.steps):
+        batch = lm_batch(0, s, args.batch, args.seq, cfg.vocab)
+        params, opt, loss = step(params, opt, batch)
+        if first is None:
+            first = float(loss)
+        if s % 20 == 0 or s == args.steps - 1:
+            print(f"step {s:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.0f}s)")
+        if args.ckpt_dir and (s + 1) % 100 == 0:
+            ckpt.save_checkpoint(args.ckpt_dir, s + 1, (params, opt))
+    print(f"loss: {first:.4f} -> {float(loss):.4f} "
+          f"({'improved' if float(loss) < first else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCH_IDS, get_arch, list_archs

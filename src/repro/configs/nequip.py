@@ -1,0 +1,12 @@
+"""nequip [arXiv:2101.03164; paper] — E(3) tensor-product potential,
+5 layers, 32 channels, l_max=2, 8 RBF, cutoff 5."""
+from repro.models.gnn.nequip import NequIPConfig
+
+FAMILY = "gnn"
+
+CONFIG = NequIPConfig(
+    name="nequip", n_layers=5, d_hidden=32, l_max=2, n_rbf=8, cutoff=5.0)
+
+SMOKE = NequIPConfig(
+    name="nequip-smoke", n_layers=2, d_hidden=8, l_max=1, n_rbf=4,
+    cutoff=5.0)

@@ -1,0 +1,171 @@
+"""Pangolin programming interface (paper §3.2, Listing 1/2).
+
+A mining application is a :class:`MiningApp` providing the paper's six
+hooks — ``toExtend``, ``toAdd``, ``getPattern``, ``getSupport``,
+``Aggregate``, ``toPrune`` — as *vectorized* callables over embedding
+batches (the TPU analogue of the paper's per-embedding C++/CUDA functions).
+Every hook is optional and has the paper's default semantics: extend all
+vertices, default automorphism-canonical test, generic canonical pattern,
+count support, sum aggregation, no pruning.
+
+:class:`GraphCtx` packages the device-resident graph arrays plus the static
+search parameters; it is what the helper routines of Listing 2
+(``isConnected``, ``isAutoCanonical``, ...) consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.sparse.intersect import adj_contains
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCtx:
+    """Device-side graph context threaded through all hooks."""
+
+    row_ptr: jnp.ndarray          # i32[n+1]
+    col_idx: jnp.ndarray          # i32[m]
+    labels: Optional[jnp.ndarray]  # i32[n] or None
+    n_vertices: int
+    n_edges: int
+    max_degree: int               # static bound for ragged expansion
+    n_steps: int                  # binary search depth (ceil log2 max_degree)
+    search: str = "binary"        # "binary" | "linear" (Fig. 13b ablation)
+    n_labels: int = 1
+    # edge-induced support: undirected edge ids
+    edge_uid: Optional[jnp.ndarray] = None   # i32[m] uid per directed edge
+    usrc: Optional[jnp.ndarray] = None       # i32[m/2] endpoints per uid
+    udst: Optional[jnp.ndarray] = None
+    n_uedges: int = 0
+
+    def is_connected(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        """Listing 2 ``isConnected`` — binary search on sorted adjacency."""
+        return adj_contains(self.row_ptr, self.col_idx, u, v, self.n_steps,
+                            method=self.search)
+
+    def degree(self, v: jnp.ndarray) -> jnp.ndarray:
+        v = jnp.clip(v, 0, self.n_vertices - 1)
+        return self.row_ptr[v + 1] - self.row_ptr[v]
+
+
+def make_ctx(g: CSRGraph, search: str = "binary",
+             n_labels: Optional[int] = None,
+             with_edge_uids: bool = False) -> GraphCtx:
+    """Build a GraphCtx from a CSR graph (host-side preprocessing)."""
+    max_deg = max(g.max_degree, 1)
+    n_steps = max(1, math.ceil(math.log2(max_deg + 1)))
+    if n_labels is None:
+        n_labels = (int(np.asarray(g.labels).max()) + 1
+                    if g.labels is not None else 1)
+    edge_uid = usrc = udst = None
+    n_uedges = 0
+    if with_edge_uids:
+        src, dst = map(np.asarray, g.edge_list())
+        lo = np.minimum(src, dst).astype(np.int64)
+        hi = np.maximum(src, dst).astype(np.int64)
+        key = lo * np.int64(g.n_vertices) + hi
+        uniq, inv = np.unique(key, return_inverse=True)
+        edge_uid = jnp.asarray(inv.astype(np.int32))
+        usrc = jnp.asarray((uniq // g.n_vertices).astype(np.int32))
+        udst = jnp.asarray((uniq % g.n_vertices).astype(np.int32))
+        n_uedges = int(uniq.shape[0])
+    return GraphCtx(
+        row_ptr=g.row_ptr, col_idx=g.col_idx, labels=g.labels,
+        n_vertices=g.n_vertices, n_edges=g.n_edges, max_degree=max_deg,
+        n_steps=n_steps, search=search, n_labels=n_labels,
+        edge_uid=edge_uid, usrc=usrc, udst=udst, n_uedges=n_uedges)
+
+
+# ---------------------------------------------------------------------------
+# Default canonicality tests (Listing 2 ``isAutoCanonical``)
+
+
+def is_auto_canonical_vertex(ctx: GraphCtx, emb: jnp.ndarray,
+                             u: jnp.ndarray,
+                             src_slot: Optional[jnp.ndarray] = None
+                             ) -> jnp.ndarray:
+    """Vertex-induced automorphism-canonical extension test.
+
+    emb: i32[N, k] parent vertices (extension order); u: i32[N] candidates;
+    src_slot: i32[N] — which embedding position generated the candidate.
+    Accept iff (Arabesque/Pangolin rule): u > v_0; u not in emb; u was
+    extended from the *first* embedding vertex it is adjacent to (kills
+    within-parent duplicates when u neighbors several members); and for
+    every position after that first neighbor, u > that vertex.
+    """
+    k = emb.shape[1]
+    ok = u > emb[:, 0]
+    found = jnp.zeros(u.shape, bool)
+    for j in range(k):
+        adj = ctx.is_connected(u, emb[:, j])
+        # "else if (found && u < emb_j) reject" — strict else-branch
+        ok = ok & ~(found & (u < emb[:, j]))
+        found = found | adj
+        ok = ok & (u != emb[:, j])
+        if src_slot is not None:
+            # u adjacent to an earlier slot => this (slot, u) pair is the
+            # duplicate; the canonical one extends from the first neighbor.
+            ok = ok & ~(adj & (jnp.int32(j) < src_slot))
+    return ok & found
+
+
+def is_auto_canonical_edge(ctx: GraphCtx, eids: jnp.ndarray,
+                           new_eid: jnp.ndarray, new_src: jnp.ndarray,
+                           new_dst: jnp.ndarray, e_src: jnp.ndarray,
+                           e_dst: jnp.ndarray) -> jnp.ndarray:
+    """Edge-induced canonical extension test over undirected edge ids.
+
+    eids: i32[N, E] existing edge uids (extension order); new_eid: i32[N];
+    (new_src, new_dst): endpoints of the candidate; (e_src, e_dst):
+    i32[N, E] endpoints of existing edges.  Same total-order rule as the
+    vertex case, with "neighbour" = shares an endpoint.
+    """
+    E = eids.shape[1]
+    ok = new_eid > eids[:, 0]
+    found = jnp.zeros(new_eid.shape, bool)
+    for j in range(E):
+        shares = ((new_src == e_src[:, j]) | (new_src == e_dst[:, j])
+                  | (new_dst == e_src[:, j]) | (new_dst == e_dst[:, j]))
+        ok = ok & ~(found & (new_eid < eids[:, j]))
+        found = found | shares
+        ok = ok & (new_eid != eids[:, j])
+    return ok & found
+
+
+# ---------------------------------------------------------------------------
+# Application definition
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningApp:
+    """One graph-mining application (paper Listing 1).
+
+    Hook signatures (all vectorized; N = candidate/embedding batch):
+      to_extend(ctx, emb[N,k])                           -> bool[N,k]
+      to_add(ctx, emb[N,k], u[N], src_slot[N], state[N]) -> bool[N]
+      get_pattern(ctx, emb[N,k], state[N]|None)     -> (pat[N], new_state)
+      to_prune(support[P], pat_id[N])               -> bool[N] (True = drop)
+    ``state`` is the per-embedding memo slot (paper §4.2 memoization) —
+    e.g. the previous level's motif id; it flows level to level.
+    """
+
+    name: str
+    kind: str = "vertex"            # "vertex" | "edge"
+    max_size: int = 3               # target #vertices (vertex) / #edges+1
+    use_dag: bool = False           # §4.1 orientation
+    needs_reduce: bool = False
+    needs_filter: bool = False
+    support_mode: str = "count"     # "count" | "domain" (MNI)
+    max_patterns: int = 8           # static bound on distinct patterns
+    min_support: int = 0
+    to_extend: Optional[Callable] = None
+    to_add: Optional[Callable] = None
+    get_pattern: Optional[Callable] = None
+    to_prune: Optional[Callable] = None
+    init_state: Optional[Callable] = None   # (ctx, emb[N,2]) -> state[N]

@@ -1,0 +1,50 @@
+"""k-clique finding (paper Listing 3).
+
+Eager pruning: only the *last* vertex of each embedding is extended
+(``toExtend``), and a candidate survives ``toAdd`` iff it is connected to
+every embedding vertex.  With DAG orientation (§4.1) every clique is
+generated exactly once (vertices appear in total order), so no canonical
+test is needed at all; without DAG the same uniqueness is enforced with
+``u > last`` (ablation mode for Fig. 12a).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.api import GraphCtx, MiningApp, is_auto_canonical_vertex
+
+
+def make_cf_app(k: int, use_dag: bool = True,
+                eager_prune: bool = True) -> MiningApp:
+    def to_extend(ctx: GraphCtx, emb: jnp.ndarray) -> jnp.ndarray:
+        mask = jnp.zeros(emb.shape, bool)
+        if eager_prune:
+            return mask.at[:, emb.shape[1] - 1].set(True)
+        return jnp.ones(emb.shape, bool)
+
+    def to_add(ctx: GraphCtx, emb: jnp.ndarray, u: jnp.ndarray,
+               src_slot: jnp.ndarray, state):
+        kk = emb.shape[1]
+        ok = u >= 0
+        # connected to all current vertices (clique property). The extension
+        # edge (last, u) is already a graph edge; checking it again is
+        # harmless and keeps the code uniform (paper Listing 3 does same).
+        for j in range(kk):
+            ok = ok & ctx.is_connected(emb[:, j], u)
+        if use_dag:
+            # DAG: out-neighbors always rank higher; uniqueness is free —
+            # but with all slots extendable the same clique arrives from
+            # every member, so keep only the last-slot extension.
+            for j in range(kk):
+                ok = ok & (u != emb[:, j])
+            if not eager_prune:
+                ok = ok & (src_slot == kk - 1)
+        elif eager_prune:
+            # undirected with last-vertex extension: enforce sorted order
+            ok = ok & (u > emb[:, kk - 1])
+        else:
+            ok = ok & is_auto_canonical_vertex(ctx, emb, u, src_slot)
+        return ok
+
+    return MiningApp(name=f"{k}-clique", kind="vertex", max_size=k,
+                     use_dag=use_dag, to_extend=to_extend, to_add=to_add)

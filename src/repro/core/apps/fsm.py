@@ -1,0 +1,23 @@
+"""Frequent subgraph mining (paper Listing 5).
+
+Edge-induced exploration over a labeled graph; MNI (domain) support
+(Fig. 2); FILTER drops embeddings whose pattern's support is below the
+threshold — the anti-monotonic property of MNI makes this sound (§2.1
+footnote 2).  k-FSM mines frequent patterns with k-1 edges (§6.1).
+
+The engine wires the edge-induced default canonical test
+(:func:`repro.core.api.is_auto_canonical_edge`) and the domain-support
+reduce (:func:`repro.core.reduce.reduce_domain`); this module only sets the
+knobs, mirroring how short the paper's Listing 5 is.
+"""
+from __future__ import annotations
+
+from repro.core.api import MiningApp
+
+
+def make_fsm_app(k: int, min_support: int,
+                 max_patterns: int = 64) -> MiningApp:
+    return MiningApp(name=f"{k}-fsm", kind="edge", max_size=k,
+                     needs_reduce=True, needs_filter=True,
+                     support_mode="domain", min_support=min_support,
+                     max_patterns=max_patterns)

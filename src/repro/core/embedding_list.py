@@ -1,0 +1,132 @@
+"""SoA embedding lists (paper §5.1, Fig. 8).
+
+Level ``L_i`` stores two (three for edge-induced) columnar int32 arrays:
+
+  vid[i]  — the (i+1)-th vertex of each embedding (destination vertex for
+            edge-induced),
+  idx[i]  — index of the parent entry in level ``L_{i-1}``,
+  his[i]  — (edge-induced only) which earlier level holds the edge's source
+            vertex.
+
+Level 0 holds the initial single-edge embeddings as two columns (v0, v1)
+(and the undirected edge id for edge-induced canonicality checks).
+
+Arrays are allocated at a static ``capacity`` with a scalar valid count
+``n`` — the TPU/XLA replacement for the paper's dynamic allocators.  The
+prefix tree is exactly the paper's: embeddings are reconstructed by
+backtracking ``idx`` pointers, here as vectorized chained gathers
+(:func:`materialize`).
+
+For the Fig. 13a/14 ablation an AoS layout (one [n, k] row-matrix) is
+provided in :mod:`repro.core.aos` — the SoA layout is the default
+everywhere else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EmbeddingLevel:
+    """One level of the prefix tree (static capacity, scalar valid count)."""
+
+    vid: jnp.ndarray                 # i32[cap]
+    idx: jnp.ndarray                 # i32[cap]  (parent pointer)
+    n: jnp.ndarray                   # i32[]     (valid prefix length)
+    his: Optional[jnp.ndarray] = None   # i32[cap] (edge-induced)
+    eid: Optional[jnp.ndarray] = None   # i32[cap] (undirected edge id)
+
+    @property
+    def capacity(self) -> int:
+        return self.vid.shape[0]
+
+    def nbytes(self) -> int:
+        total = self.vid.nbytes + self.idx.nbytes + 4
+        if self.his is not None:
+            total += self.his.nbytes
+        if self.eid is not None:
+            total += self.eid.nbytes
+        return total
+
+    def tree_flatten(self):
+        return (self.vid, self.idx, self.n, self.his, self.eid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_level0_vertex(src: jnp.ndarray, dst: jnp.ndarray,
+                       n: jnp.ndarray | int) -> list[EmbeddingLevel]:
+    """Initial worklist of single-edge embeddings (Alg. 1 line 4).
+
+    Level "-1"/"0" of Fig. 8 are fused: level 0 stores v0 in ``idx`` (the
+    dummy level's vertex id equals its index, per the paper) and v1 in
+    ``vid``.
+    """
+    n = jnp.asarray(n, jnp.int32)
+    return [EmbeddingLevel(vid=dst.astype(jnp.int32),
+                           idx=src.astype(jnp.int32), n=n)]
+
+
+def init_level0_edge(src: jnp.ndarray, dst: jnp.ndarray, eid: jnp.ndarray,
+                     n: jnp.ndarray | int) -> list[EmbeddingLevel]:
+    n = jnp.asarray(n, jnp.int32)
+    return [EmbeddingLevel(vid=dst.astype(jnp.int32),
+                           idx=src.astype(jnp.int32), n=n,
+                           his=jnp.zeros_like(dst, jnp.int32),
+                           eid=eid.astype(jnp.int32))]
+
+
+def materialize(levels: list[EmbeddingLevel]) -> jnp.ndarray:
+    """Backtrack the prefix tree into an [cap_last, k] vertex matrix.
+
+    k = len(levels) + 1.  Row r of the result lists the vertices of the
+    embedding ending at entry r of the last level, in extension order
+    (v0, v1, ..., v_k-1).  Rows beyond the last level's valid count are
+    garbage and must be masked by the caller.
+    """
+    last = levels[-1]
+    cols = [last.vid]
+    ptr = last.idx
+    for lvl in reversed(levels[:-1]):
+        cols.append(lvl.vid[ptr])
+        ptr = lvl.idx[ptr]
+    cols.append(ptr)  # level-0 idx column == v0
+    return jnp.stack(cols[::-1], axis=1)
+
+
+def materialize_edges(levels: list[EmbeddingLevel]
+                      ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Edge-induced backtracking: (vid[k, cap], his[k, cap], eid[k, cap]).
+
+    Column j of the outputs holds the j-th edge's destination vertex /
+    source-level / undirected edge id for every embedding of the last level.
+    vid row 0's source vertex is in idx (v0).  Returns arrays shaped
+    [cap_last, n_edges(=len(levels))] plus the v0 column.
+    """
+    last = levels[-1]
+    vids = [last.vid]
+    hiss = [last.his]
+    eids = [last.eid]
+    ptr = last.idx
+    for lvl in reversed(levels[:-1]):
+        vids.append(lvl.vid[ptr])
+        hiss.append(lvl.his[ptr])
+        eids.append(lvl.eid[ptr])
+        ptr = lvl.idx[ptr]
+    v0 = ptr
+    k = len(levels)
+    vid = jnp.stack(vids[::-1], axis=1)      # [cap, k]
+    his = jnp.stack(hiss[::-1], axis=1)
+    eid = jnp.stack(eids[::-1], axis=1)
+    return v0, vid, his, eid
+
+
+def total_bytes(levels: list[EmbeddingLevel]) -> int:
+    return sum(l.nbytes() for l in levels)

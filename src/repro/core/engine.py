@@ -1,0 +1,329 @@
+"""Execution engine (paper Alg. 1): extend -> reduce -> filter per level.
+
+Two modes:
+
+* :class:`Miner` — the host driver.  Per level it runs the *inspection*
+  jit (exact candidate/survivor counts), allocates exact static capacities
+  (bucketed to powers of two so retraces are logarithmic), then runs the
+  *execution* jit.  This is the paper's inspection-execution applied at
+  the host/XLA boundary, and doubles as the paper's dynamic-memory story:
+  capacities replace allocators.
+
+* :func:`bounded_mine_vertex` — a single pure-jit function with fixed
+  capacities and no host sync, used for (a) the multi-pod dry-run and
+  (b) ``shard_map`` distributed mining, where level-0 edges are sharded
+  over the ("pod", "data") mesh axes (the paper's edge blocking as the
+  distribution unit) and pattern maps are merged with one ``psum`` per
+  mining run.
+
+Fault tolerance: :meth:`Miner.run` optionally checkpoints (level, SoA
+levels, pattern map) after every level via a user callback; restart resumes
+from the last completed level (see repro.train.checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import GraphCtx, MiningApp, make_ctx
+from repro.core import extend as EXT
+from repro.core import reduce as RED
+from repro.core.embedding_list import (EmbeddingLevel, init_level0_edge,
+                                       init_level0_vertex, materialize,
+                                       total_bytes)
+from repro.graph.csr import CSRGraph
+from repro.graph.dag import orient_dag
+
+
+def _bucket(n: int, minimum: int = 128) -> int:
+    """Round up to the next power of two (bounded retrace count)."""
+    n = max(int(n), minimum)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass
+class LevelStats:
+    level: int
+    n_candidates: int
+    n_embeddings: int
+    capacity: int
+    bytes: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class MineResult:
+    count: int
+    p_map: Optional[np.ndarray] = None          # count support per pattern
+    codes: Optional[np.ndarray] = None          # canonical codes (FSM)
+    supports: Optional[np.ndarray] = None       # MNI supports (FSM)
+    stats: list[LevelStats] = dataclasses.field(default_factory=list)
+    levels: Optional[list[EmbeddingLevel]] = None
+
+
+class Miner:
+    """Host-driver mining engine for one (graph, app) pair.
+
+    Jitted phase closures are built once per Miner and reused across runs
+    (and across edge blocks), so benchmark loops pay compilation once.
+    """
+
+    def __init__(self, graph: CSRGraph, app: MiningApp,
+                 search: str = "binary", fuse_filter: bool = True,
+                 materialize_fn=None):
+        self.app = app
+        self.graph_in = graph
+        g = orient_dag(graph) if app.use_dag else graph
+        self.graph = g
+        self.ctx = make_ctx(g, search=search,
+                            with_edge_uids=(app.kind == "edge"))
+        self.fuse_filter = fuse_filter
+        self._materialize = materialize_fn or materialize
+        ctx, a = self.ctx, self.app
+        if app.kind == "vertex":
+            self._inspect = jax.jit(
+                lambda emb, n, st, *, cand_cap: EXT.inspect_vertex(
+                    ctx, a, emb, n, st, cand_cap),
+                static_argnames=("cand_cap",))
+            self._bound = jax.jit(
+                lambda emb, n: EXT.candidate_bound_vertex(ctx, a, emb, n))
+            self._extend = jax.jit(
+                lambda emb, n, st, *, cand_cap, out_cap: EXT.extend_vertex(
+                    ctx, a, emb, n, st, cand_cap, out_cap,
+                    fuse_filter=self.fuse_filter),
+                static_argnames=("cand_cap", "out_cap"))
+            self._reduce = jax.jit(
+                lambda emb, n, st: RED.reduce_count(ctx, a, emb, n, st))
+        else:
+            self._bound_e = jax.jit(
+                lambda v0, vid, his, n: EXT.candidate_bound_edge(
+                    ctx, a, v0, vid, his, n))
+            self._inspect_e = jax.jit(
+                lambda v0, vid, his, eid, n, *, cand_cap: EXT.inspect_edge(
+                    ctx, a, v0, vid, his, eid, n, cand_cap),
+                static_argnames=("cand_cap",))
+
+    # -- vertex-induced ----------------------------------------------------
+
+    def _run_vertex(self, src, dst, n0, collect_stats=False,
+                    checkpoint_cb: Optional[Callable] = None) -> MineResult:
+        app, ctx = self.app, self.ctx
+        levels = init_level0_vertex(src, dst, n0)
+        emb = self._materialize(levels)
+        n = levels[0].n
+        state = (app.init_state(ctx, emb, n) if app.init_state is not None
+                 else jnp.zeros(emb.shape[:1], jnp.int32))
+        stats: list[LevelStats] = []
+        p_map = None
+        for level in range(2, app.max_size):
+            t0 = time.perf_counter()
+            cand_cap = _bucket(int(self._bound(emb, n)))
+            n_cand, n_next = self._inspect(emb, n, state, cand_cap=cand_cap)
+            out_cap = _bucket(int(n_next))
+            new_level, emb = self._extend(emb, n, state, cand_cap=cand_cap,
+                                          out_cap=out_cap)
+            levels.append(new_level)
+            n = new_level.n
+            state = state[new_level.idx]    # memo state follows the tree
+            if app.get_pattern is not None or (app.needs_reduce
+                                               and level == app.max_size - 1):
+                pm, pat, state = self._reduce(emb, n, state)
+                p_map = pm
+            else:
+                state = jnp.zeros(emb.shape[:1], jnp.int32)
+            if collect_stats:
+                jax.block_until_ready(emb)
+                stats.append(LevelStats(level, int(n_cand), int(n),
+                                        out_cap, total_bytes(levels),
+                                        time.perf_counter() - t0))
+            if checkpoint_cb is not None:
+                checkpoint_cb(level, levels, p_map)
+        return MineResult(count=int(n),
+                          p_map=None if p_map is None else np.asarray(p_map),
+                          stats=stats, levels=levels)
+
+    # -- edge-induced (FSM) ------------------------------------------------
+
+    def _run_edge(self, collect_stats=False) -> MineResult:
+        app, ctx = self.app, self.ctx
+        usrc, udst = ctx.usrc, ctx.udst
+        n_ue = ctx.n_uedges
+        eid0 = jnp.arange(n_ue, dtype=jnp.int32)
+        levels = init_level0_edge(usrc, udst, eid0, n_ue)
+        stats: list[LevelStats] = []
+        reduce_j = jax.jit(lambda lvls: RED.reduce_domain(ctx, app, lvls))
+        filter_j = jax.jit(
+            lambda lvls, keep, *, out_cap: RED.filter_levels(lvls, keep,
+                                                             out_cap),
+            static_argnames=("out_cap",))
+        codes = supports = None
+
+        def reduce_filter(levels, level_no):
+            nonlocal codes, supports
+            t0 = time.perf_counter()
+            codes_, supports_, pat, pat_valid = reduce_j(levels)
+            codes, supports = codes_, supports_
+            if app.needs_filter:
+                sup_of = supports_[jnp.clip(pat, 0, app.max_patterns - 1)]
+                keep = sup_of >= app.min_support
+                n_keep = int(jnp.sum(
+                    keep & (jnp.arange(keep.shape[0]) < levels[-1].n)))
+                out_cap = _bucket(n_keep)
+                levels = filter_j(levels, keep, out_cap=out_cap)
+            if collect_stats:
+                stats.append(LevelStats(level_no, 0, int(levels[-1].n),
+                                        levels[-1].capacity,
+                                        total_bytes(levels),
+                                        time.perf_counter() - t0))
+            return levels
+
+        levels = reduce_filter(levels, 1)
+        max_edges = app.max_size - 1        # k-FSM: patterns of k-1 edges
+        for e in range(2, max_edges + 1):
+            from repro.core.embedding_list import materialize_edges
+            v0, vid, his, eidm = materialize_edges(levels)
+            n = levels[-1].n
+            cand_cap = _bucket(int(self._bound_e(v0, vid, his, n)))
+            n_cand, n_next = self._inspect_e(v0, vid, his, eidm, n,
+                                             cand_cap=cand_cap)
+            out_cap = _bucket(int(n_next))
+            ext_j = jax.jit(
+                lambda v0, vid, his, eidm, n, *, cand_cap, out_cap:
+                EXT.extend_edge(ctx, app, v0, vid, his, eidm, n, cand_cap,
+                                out_cap),
+                static_argnames=("cand_cap", "out_cap"))
+            new_level = ext_j(v0, vid, his, eidm, n, cand_cap=cand_cap,
+                              out_cap=out_cap)
+            levels = levels + [new_level]
+            levels = reduce_filter(levels, e)
+        mask = np.asarray(supports) >= app.min_support
+        mask &= np.asarray(codes) != np.iinfo(np.int32).max
+        return MineResult(count=int(mask.sum()), codes=np.asarray(codes),
+                          supports=np.asarray(supports), stats=stats,
+                          levels=levels)
+
+    # -- public ------------------------------------------------------------
+
+    def init_edges(self):
+        """Level-0 worklist: DAG edges (directed) or undirected src<dst."""
+        if self.app.use_dag:
+            return self.graph.edge_list()
+        return self.graph.undirected_edge_list()
+
+    def run(self, block_size: Optional[int] = None, collect_stats=False,
+            checkpoint_cb=None) -> MineResult:
+        if self.app.kind == "edge":
+            # paper §5.2: blocking disabled for FSM (global support sync)
+            return self._run_edge(collect_stats=collect_stats)
+        src, dst = self.init_edges()
+        m = int(src.shape[0])
+        if not block_size or block_size >= m:
+            return self._run_vertex(src, dst, m, collect_stats,
+                                    checkpoint_cb)
+        # Edge blocking (§5.2): process level-0 chunks sequentially,
+        # bounding peak memory; pattern maps / counts accumulate.
+        total = 0
+        p_map = None
+        stats = []
+        cap0 = _bucket(block_size)
+        for lo in range(0, m, block_size):
+            n_blk = min(block_size, m - lo)
+            pad = cap0 - n_blk
+            s = jnp.pad(jax.lax.dynamic_slice_in_dim(src, lo, n_blk), (0, pad))
+            d = jnp.pad(jax.lax.dynamic_slice_in_dim(dst, lo, n_blk), (0, pad))
+            r = self._run_vertex(s, d, n_blk, collect_stats)
+            total += r.count
+            if r.p_map is not None:
+                p_map = r.p_map if p_map is None else p_map + r.p_map
+            stats.extend(r.stats)
+        return MineResult(count=total, p_map=p_map, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Bounded single-jit mining step (dry-run / shard_map distribution)
+
+
+def bounded_mine_vertex(ctx: GraphCtx, app: MiningApp,
+                        src: jnp.ndarray, dst: jnp.ndarray,
+                        n_valid: jnp.ndarray, caps: tuple[int, ...]):
+    """Whole mining run as one jittable function with static capacities.
+
+    caps[i] = (cand_cap, out_cap) for extension level i.  Returns
+    (count i32[], p_map i32[max_patterns], overflowed bool[]).
+    Capacities overflowing truncate the worklist; ``overflowed`` reports it
+    (callers re-run with bigger caps — the bounded-mode contract).
+    """
+    levels = init_level0_vertex(src, dst, n_valid)
+    emb = materialize(levels)
+    n = levels[0].n
+    state = (app.init_state(ctx, emb, n) if app.init_state is not None
+             else jnp.zeros(emb.shape[:1], jnp.int32))
+    overflow = jnp.zeros((), bool)
+    p_map = jnp.zeros((app.max_patterns,), jnp.int32)
+    for level in range(2, app.max_size):
+        cand_cap, out_cap = caps[level - 2]
+        total, n_next = EXT.inspect_vertex(ctx, app, emb, n, state, cand_cap)
+        overflow = overflow | (total > cand_cap) | (n_next > out_cap)
+        new_level, emb = EXT.extend_vertex(ctx, app, emb, n, state,
+                                           cand_cap, out_cap)
+        n = new_level.n
+        state = state[new_level.idx]        # memo state follows the tree
+        if app.get_pattern is not None or (app.needs_reduce
+                                           and level == app.max_size - 1):
+            p_map, _, state = RED.reduce_count(ctx, app, emb, n, state)
+        else:
+            state = jnp.zeros(emb.shape[:1], jnp.int32)
+    return n, p_map, overflow
+
+
+def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
+                 caps: tuple[tuple[int, int], ...],
+                 axis_names: tuple[str, ...] = ("data",)):
+    """Distributed mining: level-0 edges sharded over mesh axes.
+
+    The graph CSR is replicated (in-memory GPM practice); each device mines
+    its edge block with :func:`bounded_mine_vertex`; one psum merges counts
+    and pattern maps.  Returns (count, p_map, overflowed) as global values.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as PSpec
+    from jax.experimental.shard_map import shard_map
+
+    app_dag = app
+    miner = Miner(graph, app)    # reuse ctx/orientation preprocessing
+    ctx = miner.ctx
+    src, dst = miner.init_edges()
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    m = int(src.shape[0])
+    per_dev = -(-m // n_dev)
+    cap0 = _bucket(per_dev)
+    pad = cap0 * n_dev - m
+    src_p = jnp.pad(src, (0, pad), constant_values=0)
+    dst_p = jnp.pad(dst, (0, pad), constant_values=0)
+    counts = jnp.minimum(jnp.maximum(m - cap0 * jnp.arange(n_dev), 0), cap0)
+
+    def local(src_blk, dst_blk, n_blk):
+        cnt, p_map, ovf = bounded_mine_vertex(ctx, app_dag, src_blk[0],
+                                              dst_blk[0], n_blk[0], caps)
+        for ax in axis_names:
+            cnt = jax.lax.psum(cnt, ax)
+            p_map = jax.lax.psum(p_map, ax)
+            ovf = jax.lax.pmax(ovf.astype(jnp.int32), ax).astype(bool)
+        return cnt, p_map, ovf
+
+    spec = PSpec(axis_names)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(spec, spec, spec),
+                   out_specs=(PSpec(), PSpec(), PSpec()),
+                   check_rep=False)
+    src_b = src_p.reshape(n_dev, 1, cap0).reshape(n_dev, cap0)
+    dst_b = dst_p.reshape(n_dev, cap0)
+    with mesh:
+        cnt, p_map, ovf = jax.jit(fn)(src_b, dst_b,
+                                      counts.astype(jnp.int32).reshape(n_dev, 1)[:, 0])
+    return int(cnt), np.asarray(p_map), bool(ovf)

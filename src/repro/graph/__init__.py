@@ -1,0 +1,3 @@
+from repro.graph.csr import CSRGraph, build_csr, from_edge_list
+from repro.graph.dag import orient_dag
+from repro.graph import generators

@@ -1,0 +1,124 @@
+"""Compressed-sparse-row graph storage (sorted adjacency, symmetric input).
+
+The paper keeps the input graph in CSR with neighbor lists sorted by
+ascending vertex ID (§6.1); sorted adjacency is what makes the binary-search
+connectivity check (§5.4) possible.  We mirror that exactly: ``row_ptr`` /
+``col_idx`` int32 arrays, optional per-vertex labels for FSM.
+
+Everything here is host-side preprocessing (numpy) producing device arrays;
+mining/jit code only ever sees the dense arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Immutable CSR graph. Neighbor lists sorted ascending.
+
+    Attributes:
+      row_ptr: int32[n_vertices + 1]
+      col_idx: int32[n_edges]           (directed edge count; symmetric graphs
+                                         store both directions)
+      labels:  int32[n_vertices] or None (vertex labels, FSM)
+      n_vertices / n_edges: python ints (static for jit tracing)
+    """
+
+    row_ptr: jnp.ndarray
+    col_idx: jnp.ndarray
+    n_vertices: int
+    n_edges: int
+    labels: Optional[jnp.ndarray] = None
+
+    def degrees(self) -> jnp.ndarray:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    @property
+    def max_degree(self) -> int:
+        return int(np.max(np.asarray(self.degrees()))) if self.n_vertices else 0
+
+    def edge_list(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Return (src, dst) arrays for all directed edges in CSR order."""
+        src = np.repeat(np.arange(self.n_vertices, dtype=np.int32),
+                        np.asarray(self.degrees()))
+        return jnp.asarray(src), self.col_idx
+
+    def undirected_edge_list(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(src, dst) with src < dst — each undirected edge once."""
+        src, dst = self.edge_list()
+        src_np, dst_np = np.asarray(src), np.asarray(dst)
+        keep = src_np < dst_np
+        return jnp.asarray(src_np[keep]), jnp.asarray(dst_np[keep])
+
+
+def build_csr(n_vertices: int, src: np.ndarray, dst: np.ndarray,
+              labels: Optional[np.ndarray] = None) -> CSRGraph:
+    """Build a CSR graph from directed edge arrays (already deduplicated)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    counts = np.bincount(src, minlength=n_vertices)
+    row_ptr = np.zeros(n_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    return CSRGraph(
+        row_ptr=jnp.asarray(row_ptr, dtype=jnp.int32),
+        col_idx=jnp.asarray(dst, dtype=jnp.int32),
+        n_vertices=int(n_vertices),
+        n_edges=int(dst.shape[0]),
+        labels=None if labels is None else jnp.asarray(labels, dtype=jnp.int32),
+    )
+
+
+def from_edge_list(edges, n_vertices: Optional[int] = None,
+                   labels: Optional[np.ndarray] = None,
+                   symmetrize: bool = True) -> CSRGraph:
+    """Build a symmetric, loop-free, deduplicated CSR graph from (u, v) pairs.
+
+    Matches the paper's input contract: symmetric, no self loops, no
+    duplicate edges (§6.1, Table 1).
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    u, v = edges[:, 0], edges[:, 1]
+    keep = u != v  # drop self loops
+    u, v = u[keep], v[keep]
+    if symmetrize:
+        uu = np.concatenate([u, v])
+        vv = np.concatenate([v, u])
+    else:
+        uu, vv = u, v
+    if n_vertices is None:
+        n_vertices = int(max(uu.max(initial=-1), vv.max(initial=-1)) + 1) if uu.size else 0
+    # dedup via flat keys
+    key = uu * np.int64(n_vertices) + vv
+    _, uniq = np.unique(key, return_index=True)
+    uu, vv = uu[uniq], vv[uniq]
+    return build_csr(n_vertices, uu, vv, labels=labels)
+
+
+def neighbors_np(g: CSRGraph, v: int) -> np.ndarray:
+    rp = np.asarray(g.row_ptr)
+    ci = np.asarray(g.col_idx)
+    return ci[rp[v]:rp[v + 1]]
+
+
+def to_networkx(g: CSRGraph):
+    """Convert to networkx for oracle checks (tests only)."""
+    import networkx as nx
+
+    G = nx.Graph()
+    G.add_nodes_from(range(g.n_vertices))
+    src, dst = g.edge_list()
+    for s, d in zip(np.asarray(src), np.asarray(dst)):
+        if s < d:
+            G.add_edge(int(s), int(d))
+    if g.labels is not None:
+        lab = np.asarray(g.labels)
+        for i in range(g.n_vertices):
+            G.nodes[i]["label"] = int(lab[i])
+    return G

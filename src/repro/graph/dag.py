@@ -1,0 +1,35 @@
+"""DAG orientation (paper §4.1, Fig. 7).
+
+Converts the undirected input graph into a DAG by keeping only edges that
+point "up" a total order on vertices.  The paper orders by degree (edges
+point toward the higher-degree endpoint, ties broken by larger vertex ID);
+vertex-ID order is also provided.  Orientation halves the directed edge
+count and — more importantly — makes each k-clique enumerable exactly once,
+removing the need for canonical tests in TC/CF.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, build_csr
+
+
+def _rank(g: CSRGraph, order: str) -> np.ndarray:
+    """Total-order rank per vertex; edge u->v kept iff rank[u] < rank[v]."""
+    n = g.n_vertices
+    if order == "id":
+        return np.arange(n, dtype=np.int64)
+    if order == "degree":
+        deg = np.asarray(g.degrees(), dtype=np.int64)
+        # degree-major, vertex-ID minor (paper: point toward higher degree,
+        # ties toward larger ID)
+        return deg * np.int64(n) + np.arange(n, dtype=np.int64)
+    raise ValueError(f"unknown orientation order: {order}")
+
+
+def orient_dag(g: CSRGraph, order: str = "degree") -> CSRGraph:
+    """Return the DAG-oriented graph (directed CSR, neighbor lists sorted)."""
+    rank = _rank(g, order)
+    src, dst = map(np.asarray, g.edge_list())
+    keep = rank[src] < rank[dst]
+    return build_csr(g.n_vertices, src[keep], dst[keep], labels=g.labels)

@@ -1,0 +1,72 @@
+"""Deterministic graph generators for tests and benchmarks.
+
+The paper evaluates on real web/social graphs (Table 1); this box has no
+datasets and one CPU core, so benchmarks use scaled-down synthetic graphs
+with comparable structure: Erdos-Renyi and RMAT (power-law, like the
+paper's web crawls), plus tiny named graphs for exactness tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, from_edge_list
+
+
+def erdos_renyi(n: int, p: float, seed: int = 0,
+                labels: int | None = None) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, k=1)
+    mask = rng.random(iu[0].shape[0]) < p
+    edges = np.stack([iu[0][mask], iu[1][mask]], axis=1)
+    lab = rng.integers(0, labels, size=n) if labels else None
+    return from_edge_list(edges, n_vertices=n, labels=lab)
+
+
+def rmat(scale: int, edge_factor: int = 8, seed: int = 0,
+         a: float = 0.57, b: float = 0.19, c: float = 0.19,
+         labels: int | None = None) -> CSRGraph:
+    """RMAT power-law generator (Graph500-style parameters)."""
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for level in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities a, b, c, d
+        go_right = (r >= a) & (r < a + b) | (r >= a + b + c)
+        go_down = r >= a + b
+        src |= go_down.astype(np.int64) << level
+        dst |= go_right.astype(np.int64) << level
+    edges = np.stack([src, dst], axis=1)
+    lab = rng.integers(0, labels, size=n) if labels else None
+    return from_edge_list(edges, n_vertices=n, labels=lab)
+
+
+def clique(n: int) -> CSRGraph:
+    iu = np.triu_indices(n, k=1)
+    return from_edge_list(np.stack(iu, axis=1), n_vertices=n)
+
+
+def cycle(n: int) -> CSRGraph:
+    u = np.arange(n, dtype=np.int64)
+    return from_edge_list(np.stack([u, (u + 1) % n], axis=1), n_vertices=n)
+
+
+def star(n: int) -> CSRGraph:
+    """Star with center 0 and n-1 leaves."""
+    edges = np.stack([np.zeros(n - 1, dtype=np.int64),
+                      np.arange(1, n, dtype=np.int64)], axis=1)
+    return from_edge_list(edges, n_vertices=n)
+
+
+def paper_fig2_graph() -> CSRGraph:
+    """The labeled example graph of Fig. 2 (5 vertices).
+
+    Labels: 0=blue, 1=red, 2=green. Vertices 0,1 blue; 2,3 red; 4 green.
+    Edges: 0-2, 0-3, 1-2, 1-3, 2-3, 2-4, 3-4 (a house-like labeled graph
+    containing four blue-red-green chains).
+    """
+    edges = [(0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (2, 4), (3, 4)]
+    labels = np.array([0, 0, 1, 1, 2], dtype=np.int64)
+    return from_edge_list(edges, n_vertices=5, labels=labels)

@@ -1,0 +1,34 @@
+"""Fanout neighbor sampler (GraphSAGE minibatch training).
+
+Host-side numpy sampling (the standard place for samplers — the TPU step
+consumes fixed-shape [B * prod(fanout)] blocks).  Sampling with
+replacement from each vertex's CSR segment; isolated vertices self-loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def sample_fanout(g: CSRGraph, seeds: np.ndarray,
+                  fanouts: tuple[int, ...], seed: int = 0
+                  ) -> list[np.ndarray]:
+    """Returns frontiers [seeds, hop1, hop2, ...]; hop_k has
+    len(seeds) * prod(fanouts[:k]) vertex ids."""
+    rng = np.random.default_rng(seed)
+    rp = np.asarray(g.row_ptr)
+    ci = np.asarray(g.col_idx)
+    frontiers = [np.asarray(seeds, np.int32)]
+    cur = frontiers[0]
+    for fan in fanouts:
+        deg = rp[cur + 1] - rp[cur]
+        # sample with replacement; degree-0 vertices self-loop
+        r = rng.integers(0, np.maximum(deg, 1)[:, None],
+                         size=(len(cur), fan))
+        idx = rp[cur][:, None] + r
+        nbrs = np.where(deg[:, None] > 0, ci[np.minimum(idx, len(ci) - 1)],
+                        cur[:, None])
+        cur = nbrs.reshape(-1).astype(np.int32)
+        frontiers.append(cur)
+    return frontiers

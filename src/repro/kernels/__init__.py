@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot spots:
+#   intersect/        binary-search adjacency intersection (TC/CF, paper §5.4)
+#   segsum/           sorted-segment reduction as one-hot MXU matmul (GNN/recsys)
+#   flash_attention/  tiled online-softmax attention (LM archs)
+# Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+# ref.py (pure-jnp oracle). Validated in interpret mode on CPU.

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: tiled online-softmax attention (FlashAttention-style).
+
+Supports causal masking and GQA (kv_heads < q_heads) via BlockSpec index
+maps — the K/V block for query head ``h`` is head ``h // group`` of the KV
+tensor, so grouped heads share K/V tiles with zero data movement.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); the kv axis is the innermost,
+sequential dimension.  Scratch (VMEM): running max ``m``, normalizer ``l``,
+and fp32 accumulator ``acc`` per (q_block row).  Causal blocks strictly
+above the diagonal are skipped with ``pl.when`` (compute and DMA both
+elided on TPU).
+
+Block sizes default to (128, 128) — MXU-aligned on both matmul dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  kv_len: int, q_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # queries sit at the END of the kv sequence (decode convention)
+    off = kv_len - q_len
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # causal: skip blocks entirely above the diagonal
+    run = (q_start + off + block_q - 1 >= k_start) if causal else True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # [block_q, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [block_k, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [block_k, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                # [block_q, block_k]
+        if causal:
+            rows = q_start + off + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)[:, None]             # [block_q, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                          # [block_q, block_k]
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True,
+                           sm_scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, Lq, D]; k, v: [B, Hkv, Lk, D]; Hq % Hkv == 0."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    lq_pad = -(-lq // block_q) * block_q
+    lk_pad = -(-lk // block_k) * block_k
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, lq_pad - lq), (0, 0)))
+    # pad keys so padded columns never win the softmax: rely on causal mask
+    # or explicit masking of padded rows via l == 0 guard in finalize.
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, lk_pad - lk), (0, 0)),
+                constant_values=0.0)
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, lk_pad - lk), (0, 0)))
+    if lk_pad != lk:
+        raise NotImplementedError(
+            "kv_len must be divisible by block_k (pad upstream)")
+
+    grid = (b, hq, lq_pad // block_q, lk_pad // block_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                          block_q=block_q, block_k=block_k, kv_len=lk,
+                          q_len=lq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # normalizer l
+            pltpu.VMEM((block_q, d), jnp.float32),      # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :lq, :]

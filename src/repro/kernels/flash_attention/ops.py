@@ -1,0 +1,33 @@
+"""Public attention entry point: impl dispatch (pallas / flash_jnp / naive)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash import flash_attention_pallas
+from repro.kernels.flash_attention.ref import (attention_flash_jnp,
+                                               attention_ref)
+
+
+@partial(jax.jit, static_argnames=("causal", "sm_scale", "impl", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None, impl: str = "flash_jnp",
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """Attention with GQA support. q: [B,Hq,Lq,D]; k,v: [B,Hkv,Lk,D].
+
+    impl: "pallas" (TPU kernel), "flash_jnp" (blockwise scan, any backend),
+    "naive" (full score matrix — the roofline baseline).
+    """
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      sm_scale=sm_scale, block_q=block_q,
+                                      block_k=block_k, interpret=interpret)
+    if impl == "flash_jnp":
+        return attention_flash_jnp(q, k, v, causal=causal,
+                                   sm_scale=sm_scale, block_k=block_k)
+    if impl == "naive":
+        return attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+    raise ValueError(impl)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracle (naive full-materialization attention) + a blockwise
+jnp variant (lax.scan online softmax) used on non-TPU backends."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_kv(k, hq):
+    hkv = k.shape[1]
+    if hkv == hq:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=1)
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  sm_scale: float | None = None) -> jnp.ndarray:
+    """Naive attention: materializes the [Lq, Lk] score matrix."""
+    b, hq, lq, d = q.shape
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        lk = k.shape[2]
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_flash_jnp(q, k, v, *, causal: bool = True,
+                        sm_scale: float | None = None,
+                        block_k: int = 512) -> jnp.ndarray:
+    """Blockwise online-softmax attention in pure jnp (lax.scan over KV).
+
+    Same IO behavior as the Pallas kernel — peak memory O(Lq * block_k)
+    instead of O(Lq * Lk) — but lowerable on any backend.  This is the
+    implementation the dry-run/roofline uses for long sequences.
+    """
+    b, hq, lq, d = q.shape
+    lk = k.shape[2]
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    block_k = min(block_k, lk)
+    if lk % block_k:
+        pad = block_k - lk % block_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k.shape[2] // block_k
+    kb = k.reshape(b, hq, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hq, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32)
+
+    # remat the block body: without it, differentiating the scan stores
+    # every per-block carry (m, l, acc — O(nk * Lq * d) fp32), defeating
+    # the whole point of blockwise attention in training.
+    @jax.checkpoint
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        ki, kblk, vblk = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk.astype(jnp.float32))
+        s = s * sm_scale
+        cols = ki * block_k + jnp.arange(block_k)
+        col_ok = cols < lk                                   # kv padding
+        if causal:
+            rows = jnp.arange(lq) + (lk - lq)
+            keep = col_ok[None, :] & (rows[:, None] >= cols[None, :])
+        else:
+            keep = jnp.broadcast_to(col_ok[None, :], (lq, block_k))
+        s = jnp.where(keep[None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hq, lq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, lq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, lq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.arange(nk), kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.intersect.ops import intersect_count

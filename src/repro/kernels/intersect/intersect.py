@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: sorted-adjacency intersection counting (paper §5.4).
+
+The TC/CF hot loop: for each directed DAG edge (a, b), count
+``|N+(a) ∩ N+(b)|`` where neighbor lists are sorted CSR segments.  The
+paper's GPU insight — replace linear merges with *binary search* because it
+improves memory-access efficiency — adapts to TPU as a fully branchless,
+lane-parallel search: every probe step is one vectorized gather + compare
++ select over an (8, 128)-shaped tile of (pair, candidate) lanes, with the
+adjacency chunk resident in VMEM (the paper's edge-blocking bounds the
+chunk size; 16 MB VMEM holds 4M int32 edges).
+
+Tiling: grid over pair-blocks; per step the kernel holds
+  col  : [m_pad]           adjacency chunk (whole, VMEM)
+  lo/hi: [block_n]          segment bounds for A and B
+  out  : [block_n]          intersection counts
+A-segments are expanded to a [block_n, max_deg_pad] candidate tile
+(inspection-execution style ragged expand, in-register), then each lane
+binary-searches segment B.  FLOPs ≈ n_pairs * max_deg * log2(max_deg)
+compares — VPU-bound by design, matching the paper's GPU kernel shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _intersect_kernel(col_ref, lo_a_ref, hi_a_ref, lo_b_ref, hi_b_ref,
+                      out_ref, *, max_deg: int, n_steps: int, m: int):
+    col = col_ref[...]                              # [m_pad] VMEM chunk
+    lo_a = lo_a_ref[...]
+    hi_a = hi_a_ref[...]
+    lo_b = lo_b_ref[...]
+    hi_b = hi_b_ref[...]
+    block_n = lo_a.shape[0]
+
+    # ragged expand of segment A into candidate lanes [block_n, max_deg]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (block_n, max_deg), 1)
+    idx = lo_a[:, None] + offs
+    live = idx < hi_a[:, None]
+    idx = jnp.clip(idx, 0, m - 1)
+    targets = jnp.take(col, idx.reshape(-1), axis=0).reshape(block_n,
+                                                             max_deg)
+
+    # branchless binary search of each target in segment B
+    low = jnp.broadcast_to(lo_b[:, None], (block_n, max_deg))
+    high = jnp.broadcast_to(hi_b[:, None] - 1, (block_n, max_deg))
+    for _ in range(n_steps):
+        mid = (low + high) >> 1
+        mid_c = jnp.clip(mid, 0, m - 1)
+        val = jnp.take(col, mid_c.reshape(-1), axis=0).reshape(block_n,
+                                                               max_deg)
+        go_right = val < targets
+        low = jnp.where(go_right, mid + 1, low)
+        high = jnp.where(go_right, high, mid - 1)
+    probe = jnp.clip(low, 0, m - 1)
+    found = (jnp.take(col, probe.reshape(-1), axis=0)
+             .reshape(block_n, max_deg) == targets)
+    found = found & (low < hi_b[:, None]) & (lo_b < hi_b)[:, None] & live
+    out_ref[...] = jnp.sum(found.astype(jnp.int32), axis=1)
+
+
+def intersect_count_pallas(col_idx: jnp.ndarray,
+                           lo_a: jnp.ndarray, hi_a: jnp.ndarray,
+                           lo_b: jnp.ndarray, hi_b: jnp.ndarray,
+                           *, max_deg: int, n_steps: int,
+                           block_n: int = 512,
+                           interpret: bool = False) -> jnp.ndarray:
+    n = lo_a.shape[0]
+    m = col_idx.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    pad = n_pad - n
+
+    def pad1(x):
+        return jnp.pad(x, (0, pad))
+
+    lo_a, hi_a, lo_b, hi_b = map(pad1, (lo_a, hi_a, lo_b, hi_b))
+    m_pad = -(-m // 128) * 128
+    col = jnp.pad(col_idx, (0, m_pad - m), constant_values=2**31 - 1)
+
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_intersect_kernel, max_deg=max_deg,
+                          n_steps=n_steps, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_pad,), lambda i: (0,)),        # adjacency chunk
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(col, lo_a, hi_a, lo_b, hi_b)
+    return out[:n]

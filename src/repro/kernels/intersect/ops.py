@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the intersect kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.intersect.intersect import intersect_count_pallas
+
+
+@partial(jax.jit, static_argnames=("max_deg", "n_steps", "block_n",
+                                   "interpret"))
+def intersect_count(col_idx, lo_a, hi_a, lo_b, hi_b, *, max_deg: int,
+                    n_steps: int, block_n: int = 512,
+                    interpret: bool = False):
+    """|N(a) ∩ N(b)| per pair over a sorted CSR chunk (Pallas TPU kernel)."""
+    return intersect_count_pallas(col_idx, lo_a, hi_a, lo_b, hi_b,
+                                  max_deg=max_deg, n_steps=n_steps,
+                                  block_n=block_n, interpret=interpret)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the intersect kernel."""
+from repro.sparse.intersect import intersect_count_sorted
+
+
+def intersect_count_ref(col_idx, lo_a, hi_a, lo_b, hi_b, *, max_deg,
+                        n_steps):
+    return intersect_count_sorted(col_idx, lo_a, hi_a, lo_b, hi_b,
+                                  max_deg=max_deg, n_steps=n_steps)

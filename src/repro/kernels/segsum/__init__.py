@@ -1,0 +1,1 @@
+from repro.kernels.segsum.ops import sorted_segment_sum

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the segment-sum kernel."""
+import jax
+
+
+def sorted_segment_sum_ref(data, seg_ids, n_segments):
+    return jax.ops.segment_sum(data, seg_ids, num_segments=n_segments)

@@ -1,0 +1,465 @@
+"""Unified (arch x shape) cell construction: step functions, input specs
+(ShapeDtypeStruct stand-ins — zero allocation), and shardings.
+
+Every one of the 40 assigned cells resolves here to a jittable function +
+abstract inputs + NamedShardings, consumed by launch/dryrun.py (lower +
+compile on the production mesh) and by the smoke tests (concrete small
+tensors on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ArchSpec, get_arch
+from repro.launch import sharding as SH
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+I32 = jnp.int32
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def opt_config_for(arch_id: str) -> OptConfig:
+    """Optimizer memory policy per arch (see DESIGN.md §4)."""
+    # grad_clip=0 on the giant configs: the global-norm pass materializes
+    # fp32 copies of every stacked weight tensor (Adafactor's update-rms
+    # clipping is the usual substitute at this scale).
+    if arch_id == "kimi-k2-1t-a32b":
+        return OptConfig(factored=True, beta1=0.0, m_dtype="bfloat16",
+                         scan_update=True, grad_clip=0.0)
+    if arch_id in ("command-r-plus-104b", "yi-34b"):
+        return OptConfig(factored=True, m_dtype="bfloat16",
+                         scan_update=True, grad_clip=0.0)
+    if arch_id in ("qwen3-0.6b", "deepseek-moe-16b"):
+        return OptConfig(scan_update=True)
+    return OptConfig()
+
+
+def _fsdp_for(arch_id: str) -> bool:
+    return arch_id in ("command-r-plus-104b", "kimi-k2-1t-a32b", "yi-34b")
+
+
+# Train memory policy: (n_microbatches, ce_chunk, grad_accum_dtype).
+# Derived from the dry-run memory iteration (EXPERIMENTS.md §Perf):
+# per-device boundary activations = L * tokens/dev * d_model * 2B force
+# gradient accumulation on the deep/wide configs; chunked CE removes the
+# [B, S, V] logits temp everywhere.
+_TRAIN_POLICY = {
+    "qwen3-0.6b": (4, 512, "float32"),
+    "command-r-plus-104b": (16, 512, "bfloat16"),
+    "yi-34b": (8, 512, "bfloat16"),
+    "deepseek-moe-16b": (4, 512, "float32"),
+    "kimi-k2-1t-a32b": (16, 512, "bfloat16"),
+}
+
+
+def train_policy_for(arch_id: str, optimized: bool = True):
+    if not optimized:
+        return (1, 0, "float32")
+    return _TRAIN_POLICY.get(arch_id, (1, 0, "float32"))
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str                     # "train" | "prefill" | "decode" | ...
+    fn: Callable                  # jittable step
+    args: tuple                   # ShapeDtypeStruct pytrees
+    in_shardings: tuple | None = None
+    out_shardings: Any = None
+    roles: tuple = ()             # per-arg: "params"|"opt"|"cache"|"data"
+    param_init: Callable | None = None
+    opt_cfg: Any = None
+    bounds: dict = dataclasses.field(default_factory=dict)
+
+
+def concrete_inputs(cell: Cell, key) -> tuple:
+    """Materialize real inputs for a cell (smoke tests / examples):
+    params via the model's init, opt state via init_opt_state, data by
+    bound-aware random fill, caches as zeros."""
+    out = []
+    params = None
+    for role, spec in zip(cell.roles, cell.args):
+        if role == "params":
+            params = cell.param_init(key)
+            out.append(params)
+        elif role == "opt":
+            out.append(init_opt_state(params, cell.opt_cfg))
+        elif role == "cache":
+            out.append(jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), spec))
+        else:
+            leaves = []
+            for path, leaf in jax.tree_util.tree_flatten_with_path(spec)[0]:
+                name = str(path[-1].key) if hasattr(path[-1], "key") else \
+                    str(path[-1])
+                k = jax.random.fold_in(key, hash(name) % (2 ** 31))
+                if jnp.issubdtype(leaf.dtype, jnp.integer):
+                    hi = cell.bounds.get(name, 2)
+                    leaves.append(jax.random.randint(k, leaf.shape, 0,
+                                                     max(hi, 1),
+                                                     dtype=leaf.dtype))
+                else:
+                    leaves.append(jax.random.normal(k, leaf.shape,
+                                                    leaf.dtype) * 0.1)
+            tdef = jax.tree_util.tree_structure(spec)
+            out.append(jax.tree_util.tree_unflatten(tdef, leaves))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# family: LM
+
+
+def _lm_state_specs(cfg, opt_cfg):
+    from repro.models import transformer as T
+    p = jax.eval_shape(partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    o = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), p)
+    return p, o
+
+
+def _lm_train_cell(arch: ArchSpec, shape_name: str, shp, mesh, smoke,
+                   optimized: bool = True):
+    from repro.models import transformer as T
+    cfg = arch.smoke if smoke else arch.config
+    opt_cfg = opt_config_for(arch.arch_id)
+    batch = 8 if smoke else shp["global_batch"]
+    seq = 64 if smoke else shp["seq_len"]
+    n_micro, ce_chunk, acc_dtype = train_policy_for(
+        arch.arch_id, optimized=optimized and not smoke)
+    if mesh is not None:
+        # per-microbatch batch must stay shardable over the dp axes
+        from repro.launch.mesh import dp_axes
+        dp_size = 1
+        for a in dp_axes(mesh):
+            dp_size *= mesh.shape[a]
+        while n_micro > 1 and (batch % n_micro
+                               or (batch // n_micro) % dp_size):
+            n_micro //= 2
+    if ce_chunk and not smoke:
+        cfg = dataclasses.replace(cfg, ce_chunk=ce_chunk)
+    p, o = _lm_state_specs(cfg, opt_cfg)
+    # microbatch axis is laid out in the input (shape [M, B/M, S]) so the
+    # per-step batch sharding is explicit — an in-jit reshape across the
+    # sharded batch axis would leave the resharding to GSPMD's guess.
+    if n_micro <= 1:
+        data = {"tokens": _sds((batch, seq), I32),
+                "labels": _sds((batch, seq), I32)}
+    else:
+        data = {"tokens": _sds((n_micro, batch // n_micro, seq), I32),
+                "labels": _sds((n_micro, batch // n_micro, seq), I32)}
+
+    def step(params, opt_state, batch_):
+        loss_grad = jax.value_and_grad(partial(T.loss_fn, cfg))
+        if n_micro <= 1:
+            loss, grads = loss_grad(params, batch_)
+        else:
+            # gradient accumulation over microbatches (activation memory
+            # scales 1/n_micro; grads accumulate in acc_dtype)
+            acc0 = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.dtype(acc_dtype)), params)
+
+            def mstep(carry, mbatch):
+                loss_acc, g_acc = carry
+                l, g = loss_grad(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                mstep, (jnp.zeros((), jnp.float32), acc0), batch_)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        params, opt_state = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    cell = Cell(arch.arch_id, shape_name, "train", step, (p, o, data),
+                roles=("params", "opt", "data"),
+                param_init=partial(T.init_params, cfg), opt_cfg=opt_cfg,
+                bounds={"tokens": cfg.vocab, "labels": cfg.vocab})
+    if mesh is not None:
+        p_sh, o_sh = SH.lm_shardings(mesh, p, o, fsdp=_fsdp_for(arch.arch_id))
+        b_sh = SH.lm_batch_sharding(mesh, data)
+        cell.in_shardings = (p_sh, o_sh, b_sh)
+        cell.out_shardings = (p_sh, o_sh, None)
+    return cell
+
+
+def _lm_prefill_cell(arch: ArchSpec, shape_name: str, shp, mesh, smoke,
+                     optimized: bool = True):
+    from repro.models import transformer as T
+    cfg = arch.smoke if smoke else arch.config
+    batch = 2 if smoke else shp["global_batch"]
+    seq = 64 if smoke else shp["seq_len"]
+    if optimized and mesh is not None and not smoke:
+        # sequence-parallel residual stream (§Perf iteration 2)
+        from repro.launch.mesh import dp_axes
+        cfg = dataclasses.replace(
+            cfg, act_shard=(tuple(dp_axes(mesh)), ("model",)))
+    p = jax.eval_shape(partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    data = {"tokens": _sds((batch, seq), I32)}
+    # MoE prefill: chunked (Sarathi-style) — dispatch buffers scale with
+    # the chunk, not the prompt (§Perf cell E)
+    chunked = optimized and not smoke and cfg.moe is not None
+
+    def step(params, batch_):
+        if chunked:
+            return T.prefill_chunked(cfg, params, batch_["tokens"],
+                                     chunk=2048)
+        return T.prefill(cfg, params, batch_["tokens"])
+
+    cell = Cell(arch.arch_id, shape_name, "prefill", step, (p, data),
+                roles=("params", "data"),
+                param_init=partial(T.init_params, cfg),
+                bounds={"tokens": cfg.vocab})
+    if mesh is not None:
+        p_sh, _ = SH.lm_shardings(mesh, p, None,
+                                  fsdp=_fsdp_for(arch.arch_id))
+        cell.in_shardings = (p_sh, SH.lm_batch_sharding(mesh, data))
+        cache_sds = jax.eval_shape(
+            partial(T.init_cache, cfg, batch, seq))
+        cell.out_shardings = (None, SH.lm_cache_sharding(mesh, cache_sds,
+                                                         batch))
+    return cell
+
+
+def _lm_decode_cell(arch: ArchSpec, shape_name: str, shp, mesh, smoke):
+    from repro.models import transformer as T
+    cfg = arch.smoke if smoke else arch.config
+    batch = 2 if smoke else shp["global_batch"]
+    seq = 64 if smoke else shp["seq_len"]
+    p = jax.eval_shape(partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    cache = jax.eval_shape(partial(T.init_cache, cfg, batch, seq))
+    data = {"tokens": _sds((batch, 1), I32), "pos": _sds((), I32)}
+
+    def step(params, cache_, batch_):
+        return T.decode_step(cfg, params, cache_, batch_["tokens"],
+                             batch_["pos"])
+
+    cell = Cell(arch.arch_id, shape_name, "decode", step, (p, cache, data),
+                roles=("params", "cache", "data"),
+                param_init=partial(T.init_params, cfg),
+                bounds={"tokens": cfg.vocab, "pos": seq})
+    if mesh is not None:
+        p_sh, _ = SH.lm_shardings(mesh, p, None,
+                                  fsdp=_fsdp_for(arch.arch_id))
+        c_sh = SH.lm_cache_sharding(mesh, cache, batch)
+        cell.in_shardings = (p_sh, c_sh, SH.replicated(mesh, data))
+        cell.out_shardings = (None, c_sh)
+    return cell
+
+
+# ---------------------------------------------------------------------------
+# family: GNN
+
+
+def _gnn_sizes(shape_name, shp, smoke):
+    """(n_nodes, n_directed_edges, d_feat) per shape; smoke shrinks 100x.
+
+    Edge counts are padded to a multiple of 512 (devices in the largest
+    mesh) — padding edges are degenerate self-loops, which the models
+    treat as no-ops."""
+    if shape_name == "minibatch_lg":
+        b, (f1, f2) = shp["batch_nodes"], shp["fanout"]
+        n = b + b * f1 + b * f1 * f2
+        e = 2 * (b * f1 + b * f1 * f2)
+        d = 602
+    elif shape_name == "molecule":
+        n = shp["n_nodes"] * shp["batch"]
+        e = 2 * shp["n_edges"] * shp["batch"]
+        d = 64
+    else:
+        n, e = shp["n_nodes"], 2 * shp["n_edges"]
+        d = shp.get("d_feat", 64)
+    if smoke:
+        n, e = max(n // 1000, 16), max(e // 1000, 64)
+    e = -(-e // 512) * 512
+    return n, e, d
+
+
+def _gnn_train_cell(arch: ArchSpec, shape_name: str, shp, mesh, smoke):
+    cfg = arch.smoke if smoke else arch.config
+    n, e, d_feat = _gnn_sizes(shape_name, shp, smoke)
+    equivariant = arch.arch_id in ("nequip", "equiformer-v2")
+    opt_cfg = OptConfig()
+
+    if equivariant:
+        from repro.models.gnn import equiformer_v2 as EQ
+        from repro.models.gnn import nequip as NQ
+        mod = NQ if arch.arch_id == "nequip" else EQ
+        data = {"species": _sds((n,), I32),
+                "positions": _sds((n, 3), F32),
+                "edge_src": _sds((e,), I32), "edge_dst": _sds((e,), I32),
+                "energy": _sds((), F32), "forces": _sds((n, 3), F32)}
+        loss = partial(mod.loss_fn, cfg)
+        init = partial(mod.init_params, cfg)
+    elif arch.arch_id == "graphsage-reddit":
+        from repro.models.gnn import graphsage as SG
+        dcfg = dataclasses.replace(cfg, d_in=d_feat) if not smoke else cfg
+        if shape_name == "minibatch_lg" and not smoke:
+            b, (f1, f2) = shp["batch_nodes"], shp["fanout"]
+            data = {"feat_blocks": [
+                _sds((b, dcfg.d_in), F32),
+                _sds((b * f1, dcfg.d_in), F32),
+                _sds((b * f1 * f2, dcfg.d_in), F32)],
+                "labels": _sds((b,), I32)}
+            # sampled path uses arch fanouts, not shape fanouts
+            dcfg = dataclasses.replace(dcfg, sample_sizes=(f1, f2))
+        else:
+            data = {"feats": _sds((n, dcfg.d_in), F32),
+                    "edge_src": _sds((e,), I32),
+                    "edge_dst": _sds((e,), I32),
+                    "labels": _sds((n,), I32)}
+        loss = partial(SG.loss_fn, dcfg)
+        init = partial(SG.init_params, dcfg)
+        cfg = dcfg
+    else:  # gat-cora
+        from repro.models.gnn import gat as GT
+        dcfg = dataclasses.replace(cfg, d_in=d_feat) if not smoke else cfg
+        data = {"feats": _sds((n, dcfg.d_in), F32),
+                "edge_src": _sds((e,), I32), "edge_dst": _sds((e,), I32),
+                "labels": _sds((n,), I32)}
+        loss = partial(GT.loss_fn, dcfg)
+        init = partial(GT.init_params, dcfg)
+        cfg = dcfg
+
+    p = jax.eval_shape(init, jax.random.PRNGKey(0))
+    o = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), p)
+
+    def step(params, opt_state, batch_):
+        l, grads = jax.value_and_grad(loss)(params, batch_)
+        params, opt_state = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, l
+
+    n_classes = getattr(cfg, "n_classes", 2)
+    n_species = getattr(cfg, "n_species", 2)
+    cell = Cell(arch.arch_id, shape_name, "train", step, (p, o, data),
+                roles=("params", "opt", "data"), param_init=init,
+                opt_cfg=opt_cfg,
+                bounds={"species": n_species, "edge_src": n,
+                        "edge_dst": n, "labels": n_classes})
+    if mesh is not None:
+        p_sh = SH.gnn_param_shardings(mesh, p)
+        o_sh = jax.tree.map(
+            lambda s: s, SH.gnn_param_shardings(mesh, o))
+        b_sh = SH.gnn_batch_sharding(mesh, data)
+        cell.in_shardings = (p_sh, o_sh, b_sh)
+        cell.out_shardings = (p_sh, o_sh, None)
+    return cell
+
+
+# ---------------------------------------------------------------------------
+# family: recsys
+
+
+def _recsys_cell(arch: ArchSpec, shape_name: str, shp, mesh, smoke):
+    from repro.models.recsys import dien as DN
+    cfg = arch.smoke if smoke else arch.config
+    kind = shp["kind"]
+    batch = 8 if smoke else shp["batch"]
+    t = cfg.seq_len
+    p = jax.eval_shape(partial(DN.init_params, cfg), jax.random.PRNGKey(0))
+    opt_cfg = OptConfig()
+
+    if kind == "retrieval":
+        n_cand = 4096 if smoke else shp["n_candidates"]
+        data = {"hist_items": _sds((1, t), I32),
+                "hist_cats": _sds((1, t), I32),
+                "cand_items": _sds((n_cand,), I32),
+                "cand_cats": _sds((n_cand,), I32)}
+
+        def step(params, batch_):
+            return DN.score_candidates(cfg, params, batch_)
+
+        cell = Cell(arch.arch_id, shape_name, kind, step, (p, data),
+                    roles=("params", "data"),
+                    param_init=partial(DN.init_params, cfg),
+                    bounds={"hist_items": cfg.n_items,
+                            "hist_cats": cfg.n_cats,
+                            "cand_items": cfg.n_items,
+                            "cand_cats": cfg.n_cats})
+        if mesh is not None:
+            cell.in_shardings = (SH.recsys_shardings(mesh, p),
+                                 SH.recsys_batch_sharding(mesh, data))
+        return cell
+
+    _bounds = {"hist_items": cfg.n_items, "hist_cats": cfg.n_cats,
+               "target_item": cfg.n_items, "target_cat": cfg.n_cats,
+               "label": 2}
+    data = {"hist_items": _sds((batch, t), I32),
+            "hist_cats": _sds((batch, t), I32),
+            "target_item": _sds((batch,), I32),
+            "target_cat": _sds((batch,), I32),
+            "label": _sds((batch,), I32)}
+    if kind == "serve":
+        def step(params, batch_):
+            return DN.forward(cfg, params, batch_)
+
+        cell = Cell(arch.arch_id, shape_name, kind, step, (p, data),
+                    roles=("params", "data"),
+                    param_init=partial(DN.init_params, cfg),
+                    bounds=_bounds)
+        if mesh is not None:
+            cell.in_shardings = (SH.recsys_shardings(mesh, p),
+                                 SH.recsys_batch_sharding(mesh, data))
+        return cell
+
+    o = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), p)
+
+    def step(params, opt_state, batch_):
+        l, grads = jax.value_and_grad(partial(DN.loss_fn, cfg))(params,
+                                                                batch_)
+        params, opt_state = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, l
+
+    cell = Cell(arch.arch_id, shape_name, kind, step, (p, o, data),
+                roles=("params", "opt", "data"),
+                param_init=partial(DN.init_params, cfg), opt_cfg=opt_cfg,
+                bounds=_bounds)
+    if mesh is not None:
+        p_sh = SH.recsys_shardings(mesh, p)
+        o_sh = SH.recsys_shardings(mesh, o)
+        cell.in_shardings = (p_sh, o_sh,
+                             SH.recsys_batch_sharding(mesh, data))
+        cell.out_shardings = (p_sh, o_sh, None)
+    return cell
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, mesh=None,
+               smoke: bool = False, optimized: bool = True) -> Cell:
+    arch = get_arch(arch_id)
+    shp = arch.shapes[shape_name]
+    if arch.family == "lm":
+        if shp["kind"] == "train":
+            return _lm_train_cell(arch, shape_name, shp, mesh, smoke,
+                                  optimized=optimized)
+        if shp["kind"] == "prefill":
+            return _lm_prefill_cell(arch, shape_name, shp, mesh, smoke,
+                                    optimized=optimized)
+        return _lm_decode_cell(arch, shape_name, shp, mesh, smoke)
+    if arch.family == "gnn":
+        return _gnn_train_cell(arch, shape_name, shp, mesh, smoke)
+    return _recsys_cell(arch, shape_name, shp, mesh, smoke)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    from repro.configs.registry import ARCH_IDS
+    for a in ARCH_IDS:
+        for s in get_arch(a).shapes:
+            out.append((a, s))
+    return out

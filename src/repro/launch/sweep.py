@@ -1,0 +1,98 @@
+"""Dry-run sweep orchestrator: every (arch x shape) x {16x16, 2x16x16}
+(+ the mining cell + baseline variants of selected cells), one subprocess
+per cell (isolation against XLA state), skip-if-artifact-exists so the
+sweep is restartable."""
+import argparse
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS_SHAPES = None  # filled in main
+
+
+def cell_done(out_dir, arch, shape, mesh_tag):
+    return os.path.exists(os.path.join(
+        out_dir, f"{arch}_{shape}_{mesh_tag}.json"))
+
+
+def run_one(out_dir, arch, shape, multi_pod, baseline=False,
+            timeout=3600):
+    mesh_tag = ("2x16x16" if multi_pod else "16x16") + \
+        ("-baseline" if baseline else "")
+    if cell_done(out_dir, arch, shape, mesh_tag):
+        print(f"[sweep] skip {arch} {shape} {mesh_tag} (done)")
+        return True
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out_dir]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if baseline:
+        cmd.append("--baseline")
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       timeout=timeout,
+                       env=dict(os.environ, PYTHONPATH="src"))
+    ok = r.returncode == 0
+    status = "ok" if ok else "FAIL"
+    print(f"[sweep] {arch} {shape} {mesh_tag}: {status} "
+          f"({time.time()-t0:.0f}s)")
+    if not ok:
+        err_path = os.path.join(out_dir,
+                                f"{arch}_{shape}_{mesh_tag}.err")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(err_path, "w") as f:
+            f.write(r.stdout[-4000:] + "\n" + r.stderr[-8000:])
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch filter")
+    ap.add_argument("--baselines", action="store_true",
+                    help="also run paper-faithful baseline variants of the "
+                         "LM train cells")
+    args = ap.parse_args()
+    sys.path.insert(0, "src")
+    from repro.configs.registry import ARCH_IDS, get_arch
+
+    archs = args.archs.split(",") if args.archs else ARCH_IDS
+    fails = []
+    pods = [False] if args.single_pod_only else \
+        [True] if args.multi_pod_only else [False, True]
+    for multi_pod in pods:
+        for arch in archs:
+            for shape in get_arch(arch).shapes:
+                if not run_one(args.out, arch, shape, multi_pod):
+                    fails.append((arch, shape, multi_pod))
+        # mining dry-run per mesh
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
+        if not os.path.exists(os.path.join(
+                args.out, f"pangolin-4mc_web_{mesh_tag}.json")):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--mine",
+                   "--out", args.out] + (["--multi-pod"] if multi_pod
+                                         else [])
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               env=dict(os.environ, PYTHONPATH="src"),
+                               timeout=3600)
+            print(f"[sweep] mining {mesh_tag}: "
+                  f"{'ok' if r.returncode == 0 else 'FAIL'}")
+            if r.returncode != 0:
+                with open(os.path.join(args.out,
+                                       f"mine_{mesh_tag}.err"), "w") as f:
+                    f.write(r.stderr[-8000:])
+    if args.baselines:
+        for arch in ("qwen3-0.6b", "yi-34b", "kimi-k2-1t-a32b",
+                     "command-r-plus-104b", "deepseek-moe-16b"):
+            run_one(args.out, arch, "train_4k", False, baseline=True)
+    print(f"[sweep] complete; {len(fails)} failures: {fails}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""GraphSAGE (mean aggregator) — full-graph and sampled-minibatch forward.
+
+Message passing is take + segment_mean over an edge index (JAX has no
+SpMM; the scatter formulation IS the system per the assignment).  The
+minibatch path consumes fanout-sampled neighbor blocks from
+repro.graph.sampler (the real neighbor sampler required by minibatch_lg).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sparse.ops import segment_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    sample_sizes: tuple[int, ...] = (25, 10)
+    dtype: str = "float32"
+
+
+def init_params(cfg: SAGEConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    params = {"layers": []}
+    d_prev = cfg.d_in
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_hidden if i < cfg.n_layers - 1 else cfg.n_classes
+        params["layers"].append({
+            "w_self": dense_init(keys[i], d_prev, d_out, dt),
+            "w_neigh": dense_init(jax.random.fold_in(keys[i], 1),
+                                  d_prev, d_out, dt),
+            "b": jnp.zeros((d_out,), dt),
+        })
+        d_prev = d_out
+    return params
+
+
+def forward_full(cfg: SAGEConfig, params, feats, edge_src, edge_dst,
+                 n_nodes: int):
+    """Full-graph forward: feats [N, d_in], edge arrays i32[E]."""
+    h = feats
+    for i, lp in enumerate(params["layers"]):
+        msgs = h[edge_src]
+        agg = segment_mean(msgs, edge_dst, n_nodes)
+        h = h @ lp["w_self"] + agg @ lp["w_neigh"] + lp["b"]
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def forward_sampled(cfg: SAGEConfig, params, feat_blocks):
+    """Minibatch forward over fanout blocks.
+
+    feat_blocks[k]: features of k-hop frontier, shape [B * prod(fanout[:k]),
+    d_in] — blocks produced by repro.graph.sampler.sample_fanout.
+    Layer i aggregates block i+1 (its sampled neighbors) into block i.
+    """
+    h = list(feat_blocks)
+    n_layers = cfg.n_layers
+    for i, lp in enumerate(params["layers"]):
+        new_h = []
+        for depth in range(n_layers - i):
+            # block depth+1 was sampled from block depth with this fanout
+            fan = cfg.sample_sizes[min(depth, len(cfg.sample_sizes) - 1)]
+            cur = h[depth]
+            neigh = h[depth + 1].reshape(cur.shape[0], fan, -1)
+            agg = jnp.mean(neigh, axis=1)
+            out = cur @ lp["w_self"] + agg @ lp["w_neigh"] + lp["b"]
+            if i < n_layers - 1:
+                out = jax.nn.relu(out)
+            new_h.append(out)
+        h = new_h
+    return h[0]
+
+
+def loss_fn(cfg: SAGEConfig, params, batch) -> jnp.ndarray:
+    from repro.models.layers import cross_entropy_loss
+    if "feat_blocks" in batch:
+        logits = forward_sampled(cfg, params, batch["feat_blocks"])
+    else:
+        logits = forward_full(cfg, params, batch["feats"],
+                              batch["edge_src"], batch["edge_dst"],
+                              batch["feats"].shape[0])
+        logits = logits[batch["label_idx"]] if "label_idx" in batch else logits
+    return cross_entropy_loss(logits, batch["labels"])

@@ -1,0 +1,154 @@
+"""NequIP — E(3)-equivariant interatomic potential (tensor-product regime).
+
+Node features are irrep channels {l: [N, C, 2l+1]} for l <= l_max.
+Each interaction layer sends messages
+    m^{l3}_ij = sum_{l1,l2 paths} w_path(r_ij) * CG(h^{l1}_j (x) Y^{l2}(r̂_ij))
+with radial weights from an MLP over Bessel radial basis, aggregates by
+segment-sum, and mixes channels per l (self-interaction).  Gated
+nonlinearity: l=0 via SiLU, l>0 scaled by a sigmoid of dedicated scalars.
+Output: per-atom scalar energy -> summed total energy (rotation invariant);
+equivariance is property-tested in tests/test_models_gnn.py.
+
+CG couplings come from repro.models.gnn.equivariant (numerically derived,
+convention-exact).  Paths are all (l1, l2) -> l3 triangles within l_max.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.equivariant import real_sph_harm, tensor_product
+from repro.models.layers import dense_init
+from repro.sparse.ops import segment_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 32          # channels per irrep
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 4
+    dtype: str = "float32"
+
+    @property
+    def paths(self):
+        out = []
+        for l1 in range(self.l_max + 1):
+            for l2 in range(self.l_max + 1):
+                for l3 in range(abs(l1 - l2), min(l1 + l2, self.l_max) + 1):
+                    out.append((l1, l2, l3))
+        return out
+
+
+def bessel_rbf(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """Bessel radial basis with cosine cutoff envelope. r: [E] -> [E, n_rbf]."""
+    rc = jnp.clip(r, 1e-6, cutoff)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(
+        n[None, :] * math.pi * rc[:, None] / cutoff) / rc[:, None]
+    envelope = 0.5 * (jnp.cos(math.pi * rc / cutoff) + 1.0)
+    return basis * envelope[:, None] * (r < cutoff)[:, None]
+
+
+def init_params(cfg: NequIPConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    C = cfg.d_hidden
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[i], 4 + len(cfg.paths))
+        lp = {
+            # radial MLP: n_rbf -> C per path
+            "radial_w1": dense_init(ks[0], cfg.n_rbf, 32, dt),
+            "radial_w2": dense_init(ks[1], 32,
+                                    len(cfg.paths) * C, dt),
+            # per-l channel mixing (self interaction)
+            "mix": [dense_init(ks[2 + l], C, C, dt)
+                    for l in range(cfg.l_max + 1)],
+            # gate scalars for l > 0
+            "gate_w": dense_init(ks[3 + cfg.l_max], C, cfg.l_max * C, dt),
+        }
+        layers.append(lp)
+    # stacked for scan-over-layers (depth-independent HLO size)
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed": (jax.random.normal(keys[-2], (cfg.n_species, C),
+                                    jnp.float32) * 0.5).astype(dt),
+        "readout_w1": dense_init(keys[-1], C, C, dt),
+        "readout_w2": dense_init(jax.random.fold_in(keys[-1], 1), C, 1, dt),
+        "layers": layers,
+    }
+
+
+def forward(cfg: NequIPConfig, params, species, positions, edge_src,
+            edge_dst):
+    """species: i32[N]; positions: f[N, 3]; edges i32[E] (directed both ways).
+
+    Returns (total_energy scalar, per-node features dict).
+    """
+    n = species.shape[0]
+    C = cfg.d_hidden
+    h = {0: params["embed"][species][:, :, None]}          # [N, C, 1]
+    for l in range(1, cfg.l_max + 1):
+        h[l] = jnp.zeros((n, C, 2 * l + 1), params["embed"].dtype)
+
+    rel = positions[edge_dst] - positions[edge_src]         # [E, 3]
+    r = jnp.sqrt(jnp.sum(rel * rel, axis=-1) + 1e-12)
+    edge_ok = (r > 1e-6)[:, None]         # degenerate/padding edges: no-op
+    rhat = rel / r[:, None]
+    sh = real_sph_harm(rhat, cfg.l_max)                     # [E, (L+1)^2]
+    sh_blocks = {l: sh[:, l * l:(l + 1) * (l + 1)]
+                 for l in range(cfg.l_max + 1)}
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * edge_ok    # [E, n_rbf]
+
+    def layer(h, lp):
+        radial = jax.nn.silu(rbf @ lp["radial_w1"]) @ lp["radial_w2"]
+        radial = radial * edge_ok
+        radial = radial.reshape(r.shape[0], len(cfg.paths), C)
+        msgs = {l: 0.0 for l in range(cfg.l_max + 1)}
+        for pi, (l1, l2, l3) in enumerate(cfg.paths):
+            src_feat = h[l1][edge_src]                      # [E, C, 2l1+1]
+            w = radial[:, pi, :]                            # [E, C]
+            tp = tensor_product(src_feat, sh_blocks[l2][:, None, :],
+                                l1, l2, l3)                 # [E, C, 2l3+1]
+            msgs[l3] = msgs[l3] + tp * w[..., None]
+        new_h = {}
+        for l in range(cfg.l_max + 1):
+            agg = segment_sum(msgs[l], edge_dst, n)         # [N, C, 2l+1]
+            mixed = jnp.einsum("ncm,cd->ndm", agg, lp["mix"][l])
+            new_h[l] = h[l] + mixed
+        # gated nonlinearity
+        scalars = new_h[0][:, :, 0]
+        gates = jax.nn.sigmoid(scalars @ lp["gate_w"]).reshape(
+            n, cfg.l_max, C)
+        out_h = {0: jax.nn.silu(scalars)[:, :, None]}
+        for l in range(1, cfg.l_max + 1):
+            out_h[l] = new_h[l] * gates[:, l - 1, :, None]
+        return out_h, None
+
+    h, _ = jax.lax.scan(jax.checkpoint(layer), h, params["layers"])
+
+    scalars = h[0][:, :, 0]
+    e_atom = jax.nn.silu(scalars @ params["readout_w1"]) @ \
+        params["readout_w2"]
+    return jnp.sum(e_atom), h
+
+
+def loss_fn(cfg: NequIPConfig, params, batch) -> jnp.ndarray:
+    """Energy + force matching (forces via autodiff — the real workload)."""
+    def energy(pos):
+        e, _ = forward(cfg, params, batch["species"], pos,
+                       batch["edge_src"], batch["edge_dst"])
+        return e
+
+    e, grad = jax.value_and_grad(energy)(batch["positions"])
+    forces = -grad
+    loss_e = (e - batch["energy"]) ** 2
+    loss_f = jnp.mean((forces - batch["forces"]) ** 2)
+    return loss_e + 10.0 * loss_f

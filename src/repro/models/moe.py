@@ -1,0 +1,91 @@
+"""Mixture-of-Experts FFN (DeepSeekMoE-style: shared + fine-grained routed
+experts, top-k softmax routing) with sort-based capacity dispatch.
+
+Dispatch avoids the O(T*E*C) one-hot tensor: token->expert assignments are
+sorted by expert id, each token gets its position-in-expert from the sorted
+prefix, and tokens are scattered into the [E, C, D] expert buffer.  Expert
+FFNs run as one batched einsum (EP shards the E axis).  Tokens past
+capacity are dropped (capacity_factor controls the drop rate); an aux
+load-balancing loss is returned.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int
+    top_k: int
+    d_ff: int               # per-expert hidden dim (fine-grained)
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d_model, cfg.n_routed, jnp.float32),
+        "w1": (jax.random.normal(ks[1], (cfg.n_routed, d_model, cfg.d_ff),
+                                 jnp.float32) * d_model ** -0.5).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (cfg.n_routed, d_model, cfg.d_ff),
+                                 jnp.float32) * d_model ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (cfg.n_routed, cfg.d_ff, d_model),
+                                 jnp.float32) * cfg.d_ff ** -0.5).astype(dtype),
+    }
+    if cfg.n_shared:
+        f = cfg.d_ff * cfg.n_shared
+        p["shared_w1"] = dense_init(ks[4], d_model, f, dtype)
+        p["shared_w3"] = dense_init(ks[5], d_model, f, dtype)
+        p["shared_w2"] = dense_init(ks[6], f, d_model, dtype)
+    return p
+
+
+def apply_moe(params, x: jnp.ndarray, cfg: MoEConfig):
+    """x: [T, D] (flattened tokens). Returns (y [T, D], aux_loss scalar)."""
+    t, d = x.shape
+    e, k = cfg.n_routed, cfg.top_k
+    logits = (x.astype(jnp.float32) @ params["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                        # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert[:, 0], e), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * e * cfg.router_aux_weight
+
+    capacity = int(max(1, round(t * k / e * cfg.capacity_factor)))
+    # ---- sort-based dispatch -------------------------------------------
+    e_flat = expert.reshape(-1)                                   # [T*K]
+    order = jnp.argsort(e_flat)                                   # stable
+    sorted_e = e_flat[order]
+    # position within expert = rank - start offset of that expert
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_sorted = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_sorted < capacity
+    tok_sorted = order // k
+    slot = sorted_e * capacity + pos_sorted                       # [T*K]
+    buf = jnp.zeros((e * capacity, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * capacity)].set(
+        x[tok_sorted], mode="drop")
+    xb = buf.reshape(e, capacity, d)
+    # ---- expert FFN (swiglu), batched over experts ----------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, params["w1"])) * \
+        jnp.einsum("ecd,edf->ecf", xb, params["w3"])
+    yb = jnp.einsum("ecf,efd->ecd", h, params["w2"]).reshape(-1, d)
+    # ---- combine ---------------------------------------------------------
+    y_tok = yb[jnp.clip(slot, 0, e * capacity - 1)]               # [T*K, D]
+    g_sorted = gate.reshape(-1)[order]
+    contrib = y_tok * (g_sorted * keep)[:, None].astype(y_tok.dtype)
+    y = jax.ops.segment_sum(contrib, tok_sorted, num_segments=t)
+    if cfg.n_shared:
+        hs = jax.nn.silu(x @ params["shared_w1"]) * (x @ params["shared_w3"])
+        y = y + hs @ params["shared_w2"]
+    return y.astype(x.dtype), aux

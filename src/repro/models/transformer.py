@@ -1,0 +1,381 @@
+"""Decoder-only transformer (GQA, qk_norm, RoPE, SwiGLU, optional MoE).
+
+Weights for all layers are stacked on a leading [L, ...] axis and the
+forward pass is a ``jax.lax.scan`` over layers — one layer is traced once,
+keeping HLO size and compile time flat in depth (essential for the 512-way
+dry-run of 60+ layer models).  ``remat`` wraps the layer body in
+``jax.checkpoint`` for activation recomputation.
+
+Attention dispatches through :mod:`repro.kernels.flash_attention.ops`
+(impl: "naive" | "flash_jnp" | "pallas").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.layers import cross_entropy_loss, dense_init, rmsnorm, rope
+from repro.models.moe import MoEConfig, apply_moe, init_moe
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    attn_impl: str = "flash_jnp"
+    attn_block_k: int = 512
+    dtype: str = "bfloat16"
+    remat: bool = True
+    tie_embeddings: bool = True
+    ce_chunk: int = 0             # 0 = naive CE; >0 = chunked unembed+CE
+    # sequence-parallel activations: mesh axes for (batch, seq) sharding of
+    # the residual stream between blocks (set by the launcher; needs an
+    # ambient mesh). E.g. (("data",), ("model",)).
+    act_shard: tuple | None = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads + 2 * self.n_kv_heads) + \
+            self.n_heads * dh * d
+        if self.moe is not None:
+            ffn = d * self.moe.n_routed  # router
+            ffn += 3 * self.moe.n_routed * d * self.moe.d_ff
+            ffn += 3 * self.moe.n_shared * d * self.moe.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + d
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(cfg: TransformerConfig, key) -> dict:
+    dt = _dt(cfg)
+    d, dh = cfg.d_model, cfg.head_dim
+    keys = jax.random.split(key, 12)
+    L = cfg.n_layers
+
+    def stack(k, shape, scale):
+        return (jax.random.normal(k, (L,) + shape, jnp.float32)
+                * scale).astype(dt)
+
+    layer = {
+        "wq": stack(keys[0], (d, cfg.n_heads * dh), d ** -0.5),
+        "wk": stack(keys[1], (d, cfg.n_kv_heads * dh), d ** -0.5),
+        "wv": stack(keys[2], (d, cfg.n_kv_heads * dh), d ** -0.5),
+        "wo": stack(keys[3], (cfg.n_heads * dh, d),
+                    (cfg.n_heads * dh) ** -0.5),
+        "ln_attn": jnp.ones((L, d), dt),
+        "ln_ffn": jnp.ones((L, d), dt),
+    }
+    if cfg.qk_norm:
+        layer["q_norm"] = jnp.ones((L, dh), dt)
+        layer["k_norm"] = jnp.ones((L, dh), dt)
+    if cfg.moe is None:
+        layer["w1"] = stack(keys[4], (d, cfg.d_ff), d ** -0.5)
+        layer["w3"] = stack(keys[5], (d, cfg.d_ff), d ** -0.5)
+        layer["w2"] = stack(keys[6], (cfg.d_ff, d), cfg.d_ff ** -0.5)
+    else:
+        moe_keys = jax.random.split(keys[4], L)
+        moe_stack = jax.vmap(lambda k: init_moe(k, d, cfg.moe, dt))(moe_keys)
+        layer["moe"] = moe_stack
+    params = {
+        "embed": (jax.random.normal(keys[7], (cfg.vocab, d), jnp.float32)
+                  * 0.02).astype(dt),
+        "ln_f": jnp.ones((d,), dt),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[8], d, cfg.vocab, dt)
+    return params
+
+
+def _attention(cfg: TransformerConfig, lp, x, positions, kv_cache=None,
+               cache_pos=None):
+    """x: [B, L, D]. Returns (out, new_kv) — new_kv when caching."""
+    b, l, d = x.shape
+    dh = cfg.head_dim
+    q = (x @ lp["wq"]).reshape(b, l, cfg.n_heads, dh)
+    k = (x @ lp["wk"]).reshape(b, l, cfg.n_kv_heads, dh)
+    v = (x @ lp["wv"]).reshape(b, l, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, lp["q_norm"])
+        k = rmsnorm(k, lp["k_norm"])
+    q = rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    k = rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    if kv_cache is not None:
+        # decode/chunk path: l queries against the cache, explicit
+        # per-query position mask (flash-decode shape: the whole-cache
+        # read is the roofline cost). l > 1 = chunked prefill.
+        ck, cv = kv_cache                         # [B, Hkv, S, Dh]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, cache_pos, 0))
+        s = ck.shape[2]
+        group = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, cfg.n_kv_heads, group * l, dh)
+        scores = jnp.einsum("bhqd,bhsd->bhqs", qg.astype(jnp.float32),
+                            ck.astype(jnp.float32)) * dh ** -0.5
+        # query at in-chunk index i sees keys up to cache_pos + i; the
+        # grouped-head reshape interleaves (head, qpos) so expand per-q
+        q_pos = cache_pos + jnp.arange(l)                      # [l]
+        q_pos_g = jnp.tile(q_pos, group)                       # [group*l]
+        ok = jnp.arange(s)[None, :] <= q_pos_g[:, None]        # [g*l, s]
+        scores = jnp.where(ok[None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqs,bhsd->bhqd", p, cv.astype(jnp.float32))
+        out = out.reshape(b, cfg.n_heads, l, dh).astype(x.dtype)
+        out = out.transpose(0, 2, 1, 3).reshape(b, l, cfg.n_heads * dh)
+        return out @ lp["wo"], (ck, cv)
+    out = flash_attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                          block_k=cfg.attn_block_k)
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, cfg.n_heads * dh)
+    return out @ lp["wo"], None
+
+
+def _constrain_act(cfg: TransformerConfig, x):
+    """Megatron-SP style residual-stream sharding (batch, seq, replicated-d).
+
+    Keeping the stream sequence-sharded between blocks turns GSPMD's
+    per-layer all-gather+all-reduce pairs into all-gather+reduce-scatter
+    with 1/model_parallel the payload (§Perf iteration 2)."""
+    if cfg.act_shard is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    batch_axes, seq_axes = cfg.act_shard
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(batch_axes) or None, tuple(seq_axes) or None, None))
+
+
+def _layer_fn(cfg: TransformerConfig, x, lp, positions):
+    x = _constrain_act(cfg, x)
+    h, _ = _attention(cfg, lp, rmsnorm(x, lp["ln_attn"]), positions)
+    x = x + h
+    hn = rmsnorm(x, lp["ln_ffn"])
+    if cfg.moe is None:
+        from repro.models.layers import swiglu
+        f = swiglu(hn, lp["w1"], lp["w3"], lp["w2"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        b, l, d = hn.shape
+        f, aux = apply_moe(lp["moe"], hn.reshape(b * l, d), cfg.moe)
+        f = f.reshape(b, l, d)
+    return x + f, aux
+
+
+def forward(cfg: TransformerConfig, params, tokens: jnp.ndarray
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: i32[B, L] -> (logits [B, L, V], aux_loss)."""
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    body = partial(_layer_fn, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, lp):
+        x, aux = body(x, lp, positions)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_fn, x, params["layers"])
+    x = rmsnorm(x, params["ln_f"])
+    if "unembed" in params:
+        logits = x @ params["unembed"]
+    else:
+        logits = x @ params["embed"].T
+    return logits, jnp.sum(auxs)
+
+
+def forward_hidden(cfg: TransformerConfig, params, tokens: jnp.ndarray):
+    """Forward without the unembed projection: [B, L, D] + aux."""
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    body = partial(_layer_fn, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, lp):
+        x, aux = body(x, lp, positions)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_fn, x, params["layers"])
+    return rmsnorm(x, params["ln_f"]), jnp.sum(auxs)
+
+
+def loss_fn(cfg: TransformerConfig, params, batch) -> jnp.ndarray:
+    if cfg.ce_chunk:
+        return loss_fn_chunked(cfg, params, batch, cfg.ce_chunk)
+    logits, aux = forward(cfg, params, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+def loss_fn_chunked(cfg: TransformerConfig, params, batch,
+                    chunk: int) -> jnp.ndarray:
+    """CE over sequence chunks: never materializes [B, S, V] logits.
+
+    The [B, S, V] logits tensor is the dominant temp of small-model
+    training (vocab 152k >> d_model); chunking the unembed + CE to
+    [B, chunk, V] cuts it by S/chunk at zero FLOP cost.
+    """
+    x, aux = forward_hidden(cfg, params, batch["tokens"])
+    b, s, d = x.shape
+    unemb = params["unembed"] if "unembed" in params else params["embed"].T
+    n_chunks = max(s // chunk, 1)
+    xc = x.reshape(b, n_chunks, s // n_chunks, d).transpose(1, 0, 2, 3)
+    lc = batch["labels"].reshape(b, n_chunks, s // n_chunks).transpose(
+        1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        xi, li = inp
+        logits = xi @ unemb
+        return carry + cross_entropy_loss(logits, li), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                            (xc, lc))
+    return total / n_chunks + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving (prefill + decode with KV cache)
+
+
+def prefill(cfg: TransformerConfig, params, tokens: jnp.ndarray,
+            cache_len: int | None = None):
+    """Prefill: run the prompt, return (last-token logits [B, V], cache).
+
+    Only the final position's logits are computed (a [B, S, V] logits
+    tensor at 32k x 152k vocab would be petabytes); the KV cache is the
+    real product of prefill.
+    """
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+    dh = cfg.head_dim
+
+    def scan_fn(x, lp):
+        x = _constrain_act(cfg, x)
+        xa = rmsnorm(x, lp["ln_attn"])
+        q = (xa @ lp["wq"]).reshape(b, s, cfg.n_heads, dh)
+        k = (xa @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+        v = (xa @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+        if cfg.qk_norm:
+            q = rmsnorm(q, lp["q_norm"])
+            k = rmsnorm(k, lp["k_norm"])
+        q = rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        k = rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        v = v.transpose(0, 2, 1, 3)
+        out = flash_attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                              block_k=cfg.attn_block_k)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * dh)
+        x = x + out @ lp["wo"]
+        hn = rmsnorm(x, lp["ln_ffn"])
+        if cfg.moe is None:
+            from repro.models.layers import swiglu
+            f = swiglu(hn, lp["w1"], lp["w3"], lp["w2"])
+        else:
+            f, _ = apply_moe(lp["moe"], hn.reshape(b * s, -1), cfg.moe)
+            f = f.reshape(b, s, -1)
+        pad = cache_len - s
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x + f, (kc, vc)
+
+    body = jax.checkpoint(scan_fn) if cfg.remat else scan_fn
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x_last = rmsnorm(x[:, -1], params["ln_f"])
+    if "unembed" in params:
+        logits = x_last @ params["unembed"]
+    else:
+        logits = x_last @ params["embed"].T
+    return logits, {"k": ks, "v": vs}
+
+
+def prefill_chunked(cfg: TransformerConfig, params, tokens: jnp.ndarray,
+                    chunk: int, cache_len: int | None = None):
+    """Sarathi-style chunked prefill: the prompt is processed in
+    ``chunk``-token pieces, each attending to the cache so far.
+
+    Peak activation / MoE-dispatch residency scales with the chunk, not
+    the prompt — the lever for the dispatch-dominated MoE prefill cells
+    (EXPERIMENTS.md §Perf cell E). Returns (last-token logits, cache).
+    """
+    b, s = tokens.shape
+    assert s % chunk == 0, "pad the prompt to a chunk multiple"
+    n_chunks = s // chunk
+    cache = init_cache(cfg, b, cache_len or s)
+    toks = tokens.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def step(cache, inp):
+        ci, tk = inp
+        logits, cache = decode_step(cfg, params, cache, tk, ci * chunk)
+        return cache, logits[:, -1]
+
+    cache, last_logits = jax.lax.scan(
+        step, cache, (jnp.arange(n_chunks, dtype=jnp.int32), toks))
+    return last_logits[-1], cache
+
+
+def init_cache(cfg: TransformerConfig, batch: int, seq_len: int,
+               dtype=None):
+    dt = dtype or _dt(cfg)
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, seq_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One decode step (or one prefill chunk). tokens: i32[B, L];
+    pos: i32[] start position of this chunk in the cache.
+
+    Scans layers, updating each layer's KV slice; attention runs against
+    the full cache with an exact per-query position mask.
+    """
+    x = params["embed"][tokens]                   # [B, L, D]
+    positions = pos + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def scan_fn(x, inp):
+        lp, ck, cv = inp
+        h, new_kv = _attention(cfg, lp, rmsnorm(x, lp["ln_attn"]),
+                               positions, kv_cache=(ck, cv), cache_pos=pos)
+        x = x + h
+        hn = rmsnorm(x, lp["ln_ffn"])
+        if cfg.moe is None:
+            from repro.models.layers import swiglu
+            f = swiglu(hn, lp["w1"], lp["w3"], lp["w2"])
+        else:
+            b, l, d = hn.shape
+            f, _ = apply_moe(lp["moe"], hn.reshape(b * l, d), cfg.moe)
+            f = f.reshape(b, l, d)
+        return x + f, new_kv
+
+    x, (nk, nv) = jax.lax.scan(scan_fn, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["ln_f"])
+    if "unembed" in params:
+        logits = x @ params["unembed"]
+    else:
+        logits = x @ params["embed"].T
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,89 @@
+"""Checkpoint/restart for fault tolerance.
+
+Pytrees are flattened to path-keyed arrays and written atomically
+(tmp + rename) as .npz + a JSON manifest; restore rebuilds the pytree and
+re-shards under whatever mesh is current — which is what makes *elastic*
+restart (different device count after a node failure) a no-op: checkpoints
+are topology-free full arrays.
+
+Also checkpoints the mining engine's per-level state (repro.core.engine
+checkpoint_cb), so a multi-hour FSM/CF run resumes at the last completed
+level.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz can't round-trip bf16
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    meta = {"step": step, "treedef": str(treedef),
+            "keys": sorted(flat.keys()), "extra": extra or {}}
+    mpath = os.path.join(directory, f"ckpt_{step:08d}.json")
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(meta, f)
+    os.replace(mpath + ".tmp", mpath)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".json")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: Any, step: int | None = None
+                       ) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    with np.load(os.path.join(directory, f"ckpt_{step:08d}.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
+        meta = json.load(f)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = flat[key]
+        if jnp.dtype(leaf.dtype).name == "bfloat16" and \
+                arr.dtype == np.uint16:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step, meta["extra"]

@@ -1,0 +1,144 @@
+"""Optimizers in pure JAX: AdamW and a memory-factored variant.
+
+The factored mode (Adafactor-style row/col second moments + bf16 first
+moment) is what lets the 1T-parameter kimi-k2 config fit 16 GB/chip on the
+production mesh: full AdamW needs 14 bytes/param (bf16 w + fp32 m + fp32 v
++ fp32 master) vs ~4.25 bytes/param factored (bf16 w + bf16 m + rank-1 v).
+State entries are plain pytrees so ZeRO-style sharding over the data axis
+is a NamedSharding choice, not an optimizer change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    factored: bool = False        # Adafactor-style second moment
+    m_dtype: str = "float32"      # "bfloat16" to halve first-moment memory
+    scan_update: bool = False     # stream the update over the layer-stack
+                                  # axis (ndim>=3 leaves): peak fp32 temps
+                                  # shrink by n_layers
+    warmup_steps: int = 100
+    schedule: str = "cosine"      # "cosine" | "constant"
+    total_steps: int = 10_000
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def _use_factored(p: jnp.ndarray, cfg: OptConfig) -> bool:
+    return cfg.factored and p.ndim >= 2
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> dict:
+    mdt = jnp.dtype(cfg.m_dtype)
+
+    def init_m(p):
+        # beta1 == 0 (pure Adafactor): no first moment stored at all —
+        # this is the 1T-config memory lever (see kimi-k2 dry-run notes).
+        if cfg.beta1 == 0.0:
+            return jnp.zeros((), mdt)
+        return jnp.zeros(p.shape, mdt)
+
+    def init_v(p):
+        if _use_factored(p, cfg):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(init_m, params),
+        "v": jax.tree.map(init_v, params,
+                          is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(grads: Any) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: OptConfig
+                  ) -> tuple[Any, dict]:
+    step = state["step"]
+    lr = schedule_lr(cfg, step)
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        if b1 == 0.0:
+            m_eff, m_store = g, m          # momentum-free (pure Adafactor)
+        else:
+            m_eff = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            m_store = m_eff.astype(m.dtype)
+        if isinstance(v, dict):                       # factored second moment
+            g2 = g * g + 1e-30
+            vr = b2 * v["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * v["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            v_new = {"vr": vr, "vc": vc}
+            # rank-1 reconstruction (Adafactor): vr vc / mean(vr)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            v_hat = (vr[..., :, None] * vc[..., None, :]) / denom[..., None]
+        else:
+            v_new = b2 * v + (1 - b2) * g * g
+            v_hat = v_new
+        update = (m_eff / bc1) / (jnp.sqrt(v_hat / bc2) + cfg.eps)
+        p_new = p.astype(jnp.float32) - lr * (update + cfg.weight_decay
+                                              * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_store, v_new
+
+    def upd_maybe_scanned(p, g, m, v):
+        # stream big stacked tensors through the update one layer-slice at
+        # a time: the fp32 cast/update/v_hat temps shrink by shape[0]
+        if cfg.scan_update and p.ndim >= 3 and p.shape[0] > 1:
+            m_in = g if b1 == 0.0 else m       # shape-matched dummy
+
+            def body(_, slices):
+                ps, gs, ms, vs = slices
+                pn, mn, vn = upd(ps, gs, ms, vs)
+                if b1 == 0.0:
+                    mn = jnp.zeros((), mn.dtype if hasattr(mn, "dtype")
+                                   else jnp.float32)
+                return None, (pn, mn, vn)
+
+            _, (pn, mn, vn) = jax.lax.scan(body, None, (p, g, m_in, v))
+            if b1 == 0.0:
+                mn = m
+            return pn, mn, vn
+        return upd(p, g, m, v)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd_maybe_scanned(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step + 1}

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see exactly 1 device; only launch/dryrun.py forces 512."""
+import numpy as np
+import pytest
+
+from repro.graph import generators as G
+from repro.graph.csr import to_networkx
+
+
+@pytest.fixture(scope="session")
+def er_graph():
+    return G.erdos_renyi(30, 0.25, seed=2)
+
+
+@pytest.fixture(scope="session")
+def er_nx(er_graph):
+    return to_networkx(er_graph)
+
+
+@pytest.fixture(scope="session")
+def labeled_graph():
+    return G.erdos_renyi(14, 0.3, seed=5, labels=3)
+
+
+@pytest.fixture(scope="session")
+def labeled_nx(labeled_graph):
+    return to_networkx(labeled_graph)

@@ -1,0 +1,77 @@
+"""Brute-force / networkx oracles for mining correctness tests."""
+from __future__ import annotations
+
+from collections import Counter
+from itertools import combinations
+
+import networkx as nx
+from networkx.algorithms import isomorphism as iso
+
+
+def triangle_count(nxg) -> int:
+    return sum(nx.triangles(nxg).values()) // 3
+
+
+def clique_count(nxg, k: int) -> int:
+    n = 0
+    for c in combinations(nxg.nodes, k):
+        if all(nxg.has_edge(a, b) for a, b in combinations(c, 2)):
+            n += 1
+    return n
+
+
+def motif_counts(nxg, k: int) -> Counter:
+    """Counts per motif enum (matching repro.core.pattern enums)."""
+    cnt: Counter = Counter()
+    for c in combinations(nxg.nodes, k):
+        sub = nxg.subgraph(c)
+        if not nx.is_connected(sub):
+            continue
+        e = sub.number_of_edges()
+        degs = [d for _, d in sub.degree()]
+        if k == 3:
+            pid = 1 if e == 3 else 0
+        else:
+            if e == 6:
+                pid = 5
+            elif e == 5:
+                pid = 4
+            elif e == 4:
+                pid = 3 if max(degs) == 3 else 2
+            else:
+                pid = 1 if max(degs) == 3 else 0
+        cnt[pid] += 1
+    return cnt
+
+
+def fsm_supports(nxg, n_edges: int, min_support: int) -> list[int]:
+    """Sorted MNI supports of frequent labeled n_edge patterns (exact)."""
+    edges = list(nxg.edges)
+    reps: list = []
+    nm = lambda a, b: a["label"] == b["label"]  # noqa: E731
+    for es in combinations(edges, n_edges):
+        sub = nx.Graph()
+        for u, v in es:
+            sub.add_edge(u, v)
+        for n in sub.nodes:
+            sub.nodes[n]["label"] = nxg.nodes[n]["label"]
+        if not nx.is_connected(sub):
+            continue
+        placed = False
+        for rep, doms in reps:
+            if iso.GraphMatcher(rep, sub, node_match=nm).is_isomorphic():
+                for m in iso.GraphMatcher(rep, sub,
+                                          node_match=nm).isomorphisms_iter():
+                    for rn, sn in m.items():
+                        doms[rn].add(sn)
+                placed = True
+                break
+        if not placed:
+            doms = {n: set() for n in sub.nodes}
+            for m in iso.GraphMatcher(sub, sub,
+                                      node_match=nm).isomorphisms_iter():
+                for rn, sn in m.items():
+                    doms[rn].add(sn)
+            reps.append((sub, doms))
+    out = sorted(min(len(s) for s in doms.values()) for _, doms in reps)
+    return [s for s in out if s >= min_support]

@@ -1,0 +1,65 @@
+"""Per-arch smoke tests: every assigned (arch x shape) cell runs one step
+on CPU with a REDUCED config, asserting output shapes + finiteness."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.launch.steps import all_cells, build_cell, concrete_inputs
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    assert len(all_cells()) == 40
+    for a in ARCH_IDS:
+        spec = get_arch(a)
+        assert spec.config.name == a or spec.config.name.startswith(a)
+        assert len(spec.shapes) == 4
+
+
+def test_full_configs_match_assignment():
+    q = get_arch("qwen3-0.6b").config
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab) == (28, 1024, 16, 8, 3072, 151936) and q.qk_norm
+    c = get_arch("command-r-plus-104b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (64, 12288, 96, 8, 33792, 256000)
+    y = get_arch("yi-34b").config
+    assert (y.n_layers, y.d_model, y.n_heads, y.n_kv_heads, y.d_ff,
+            y.vocab) == (60, 7168, 56, 8, 20480, 64000)
+    d = get_arch("deepseek-moe-16b").config
+    assert (d.n_layers, d.d_model, d.moe.n_routed, d.moe.top_k,
+            d.moe.d_ff, d.moe.n_shared) == (28, 2048, 64, 6, 1408, 2)
+    k = get_arch("kimi-k2-1t-a32b").config
+    assert (k.n_layers, k.d_model, k.n_heads, k.moe.n_routed,
+            k.moe.top_k) == (61, 7168, 64, 384, 8)
+    assert k.param_count() > 0.9e12          # it really is ~1T params
+    e = get_arch("equiformer-v2").config
+    assert (e.n_layers, e.d_hidden, e.l_max, e.m_max,
+            e.n_heads) == (12, 128, 6, 2, 8)
+    s = get_arch("graphsage-reddit").config
+    assert (s.n_layers, s.d_hidden, s.sample_sizes) == (2, 128, (25, 10))
+    g = get_arch("gat-cora").config
+    assert (g.n_layers, g.d_hidden, g.n_heads) == (2, 8, 8)
+    n = get_arch("nequip").config
+    assert (n.n_layers, n.d_hidden, n.l_max, n.n_rbf,
+            n.cutoff) == (5, 32, 2, 8, 5.0)
+    di = get_arch("dien").config
+    assert (di.embed_dim, di.seq_len, di.gru_dim,
+            di.mlp) == (18, 100, 108, (200, 80))
+
+
+@pytest.mark.parametrize("arch_id,shape", all_cells())
+def test_cell_smoke_one_step(arch_id, shape):
+    cell = build_cell(arch_id, shape, mesh=None, smoke=True)
+    args = concrete_inputs(cell, jax.random.PRNGKey(0))
+    out = jax.jit(cell.fn)(*args)
+    for leaf in jax.tree.leaves(out):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating):
+            assert np.isfinite(arr.astype(np.float32)).all(), \
+                (arch_id, shape)
+    if cell.kind == "train":
+        # loss is the last output and must be a finite scalar
+        loss = jax.tree.leaves(out)[-1]
+        assert np.asarray(loss).shape == ()

@@ -1,0 +1,98 @@
+"""Property tests for the equivariant substrate (SH, Wigner, CG)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn.equivariant import (block_diag_wigner,
+                                          cg_coefficients,
+                                          edge_align_rotation,
+                                          real_sph_harm, tensor_product,
+                                          wigner_d_matrices,
+                                          wigner_d_matrices_reference)
+
+
+def _rot(seed):
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.standard_normal((3, 3)))
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return jnp.asarray(Q, jnp.float32)
+
+
+@given(seed=st.integers(0, 50), l_max=st.sampled_from([1, 2, 4, 6]))
+@settings(max_examples=10, deadline=None)
+def test_sh_equivariance(seed, l_max):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((20, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    v = jnp.asarray(v, jnp.float32)
+    Q = _rot(seed)
+    D = block_diag_wigner(Q[None], l_max)[0]
+    y_rot = real_sph_harm(v @ Q.T, l_max)
+    y = real_sph_harm(v, l_max)
+    np.testing.assert_allclose(np.asarray(y_rot), np.asarray(y @ D.T),
+                               atol=5e-4)
+
+
+def test_wigner_orthogonal_and_composes():
+    Q1, Q2 = _rot(1), _rot(2)
+    for l, D in enumerate(wigner_d_matrices(Q1[None], 6)):
+        np.testing.assert_allclose(np.asarray(D[0] @ D[0].T),
+                                   np.eye(2 * l + 1), atol=5e-4)
+    D12 = block_diag_wigner((Q1 @ Q2)[None], 4)[0]
+    Dc = block_diag_wigner(Q1[None], 4)[0] @ \
+        block_diag_wigner(Q2[None], 4)[0]
+    np.testing.assert_allclose(np.asarray(D12), np.asarray(Dc), atol=5e-4)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_edge_alignment(seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal((16, 3)), jnp.float32)
+    R = edge_align_rotation(v)
+    vn = v / jnp.linalg.norm(v, axis=1, keepdims=True)
+    z = jnp.einsum("nij,nj->ni", R, vn)
+    np.testing.assert_allclose(np.asarray(z),
+                               np.tile([0, 0, 1.0], (16, 1)), atol=1e-5)
+
+
+def test_edge_alignment_degenerate_safe():
+    v = jnp.asarray([[0., 0., 1.], [0., 0., -1.], [0., 0., 0.]])
+    R = np.asarray(edge_align_rotation(v))
+    assert np.isfinite(R).all()
+    np.testing.assert_allclose(R[0] @ np.asarray([0, 0, 1.]), [0, 0, 1.],
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("l1,l2,l3", [(1, 1, 0), (1, 1, 1), (1, 1, 2),
+                                      (2, 1, 2), (2, 2, 0), (2, 2, 2)])
+def test_cg_equivariance(l1, l2, l3):
+    rng = np.random.default_rng(l1 + 10 * l2 + 100 * l3)
+    h1 = jnp.asarray(rng.standard_normal((8, 2 * l1 + 1)), jnp.float32)
+    h2 = jnp.asarray(rng.standard_normal((8, 2 * l2 + 1)), jnp.float32)
+    Q = _rot(5)
+    Ds = wigner_d_matrices(Q[None], max(l1, l2, l3))
+    t0 = tensor_product(h1, h2, l1, l2, l3)
+    t1 = tensor_product(h1 @ Ds[l1][0].T, h2 @ Ds[l2][0].T, l1, l2, l3)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t0 @ Ds[l3][0].T),
+                               atol=5e-4)
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_wigner_table_driven_equals_reference(seed):
+    """The batched table evaluation (compile-time fast path) must equal
+    the entry-wise IR recursion exactly."""
+    Q = _rot(seed)
+    fast = wigner_d_matrices(Q[None], 6)
+    ref = wigner_d_matrices_reference(Q[None], 6)
+    for l, (a, b) in enumerate(zip(fast, ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, err_msg=f"l={l}")
+
+
+def test_cg_triangle_violation_zero():
+    assert np.allclose(cg_coefficients(1, 1, 3), 0.0)
+    assert np.linalg.norm(cg_coefficients(2, 2, 1)) > 0.9  # valid path

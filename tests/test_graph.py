@@ -1,0 +1,71 @@
+"""Graph substrate: CSR, DAG orientation, generators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as G
+from repro.graph.csr import from_edge_list, neighbors_np, to_networkx
+from repro.graph.dag import orient_dag
+
+
+def test_csr_sorted_symmetric():
+    g = G.erdos_renyi(50, 0.2, seed=1)
+    rp, ci = np.asarray(g.row_ptr), np.asarray(g.col_idx)
+    assert rp[0] == 0 and rp[-1] == g.n_edges
+    for v in range(g.n_vertices):
+        nb = ci[rp[v]:rp[v + 1]]
+        assert (np.diff(nb) > 0).all()          # sorted, no dup
+        assert v not in nb                       # no self loop
+    # symmetric
+    src = np.repeat(np.arange(g.n_vertices), np.diff(rp))
+    pairs = set(zip(src.tolist(), ci.tolist()))
+    assert all((b, a) in pairs for a, b in pairs)
+
+
+def test_from_edge_list_dedup_loops():
+    g = from_edge_list([(0, 1), (1, 0), (0, 0), (1, 2), (1, 2)], n_vertices=3)
+    assert g.n_edges == 4  # 2 undirected edges both directions
+    assert list(neighbors_np(g, 1)) == [0, 2]
+
+
+def test_dag_halves_edges_and_acyclic(er_graph):
+    dag = orient_dag(er_graph)
+    assert dag.n_edges == er_graph.n_edges // 2
+    # degree-order: every edge points to >= degree (ties by id)
+    deg = np.asarray(er_graph.degrees())
+    src, dst = map(np.asarray, dag.edge_list())
+    rank = deg.astype(np.int64) * er_graph.n_vertices + \
+        np.arange(er_graph.n_vertices)
+    assert (rank[src] < rank[dst]).all()
+
+
+def test_dag_id_order(er_graph):
+    dag = orient_dag(er_graph, order="id")
+    src, dst = map(np.asarray, dag.edge_list())
+    assert (src < dst).all()
+
+
+@given(n=st.integers(4, 24), p=st.floats(0.05, 0.6), seed=st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_generator_properties(n, p, seed):
+    g = G.erdos_renyi(n, p, seed=seed)
+    rp = np.asarray(g.row_ptr)
+    assert rp.shape == (n + 1,)
+    assert (np.diff(rp) >= 0).all()
+    assert g.n_edges % 2 == 0                    # symmetric
+
+
+def test_named_graphs():
+    assert G.clique(5).n_edges == 20
+    assert G.cycle(6).n_edges == 12
+    assert G.star(7).n_edges == 12
+    fig2 = G.paper_fig2_graph()
+    assert fig2.n_vertices == 5 and fig2.n_edges == 14
+    assert np.asarray(fig2.labels).tolist() == [0, 0, 1, 1, 2]
+
+
+def test_rmat_powerlaw():
+    g = G.rmat(8, edge_factor=4, seed=0)
+    assert g.n_vertices == 256
+    deg = np.asarray(g.degrees())
+    assert deg.max() > 3 * max(deg.mean(), 1)    # skewed

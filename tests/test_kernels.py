@@ -1,0 +1,138 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles,
+over shape/dtype sweeps (hypothesis + parametrize)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as G
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.intersect.ops import intersect_count
+from repro.kernels.intersect.ref import intersect_count_ref
+from repro.kernels.segsum.ops import sorted_segment_sum
+from repro.kernels.segsum.ref import sorted_segment_sum_ref
+
+
+# -- intersect ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pairs,block_n", [(100, 128), (700, 256),
+                                             (513, 512)])
+def test_intersect_kernel_shapes(n_pairs, block_n):
+    g = G.erdos_renyi(60, 0.25, seed=4)
+    rp = np.asarray(g.row_ptr)
+    rng = np.random.default_rng(n_pairs)
+    a = rng.integers(0, 60, n_pairs)
+    b = rng.integers(0, 60, n_pairs)
+    ns = max(1, math.ceil(math.log2(g.max_degree + 1)))
+    args = (g.col_idx, jnp.asarray(rp[a]), jnp.asarray(rp[a + 1]),
+            jnp.asarray(rp[b]), jnp.asarray(rp[b + 1]))
+    ref = intersect_count_ref(*args, max_deg=g.max_degree, n_steps=ns)
+    got = intersect_count(*args, max_deg=g.max_degree, n_steps=ns,
+                          block_n=block_n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+@given(seed=st.integers(0, 30), n=st.integers(8, 50), p=st.floats(0.1, 0.5))
+@settings(max_examples=10, deadline=None)
+def test_intersect_kernel_property(seed, n, p):
+    g = G.erdos_renyi(n, p, seed=seed)
+    if g.n_edges == 0:
+        return
+    rp = np.asarray(g.row_ptr)
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, n, 130)
+    b = rng.integers(0, n, 130)
+    ns = max(1, math.ceil(math.log2(g.max_degree + 1)))
+    args = (g.col_idx, jnp.asarray(rp[a]), jnp.asarray(rp[a + 1]),
+            jnp.asarray(rp[b]), jnp.asarray(rp[b + 1]))
+    ref = intersect_count_ref(*args, max_deg=g.max_degree, n_steps=ns)
+    got = intersect_count(*args, max_deg=g.max_degree, n_steps=ns,
+                          block_n=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# -- segment sum -------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 0.15)])
+@pytest.mark.parametrize("n,d,s,block_n", [(1000, 64, 37, 256),
+                                           (257, 128, 5, 128),
+                                           (64, 8, 64, 64)])
+def test_segsum_kernel(n, d, s, block_n, dtype, tol):
+    rng = np.random.default_rng(n + d)
+    data = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    seg = jnp.sort(jnp.asarray(rng.integers(0, s, n), jnp.int32))
+    ref = sorted_segment_sum_ref(data.astype(jnp.float32), seg, s)
+    got = sorted_segment_sum(data, seg, s, block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(ref),
+                               np.asarray(got, dtype=np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_segsum_unsorted_ok():
+    """One-hot matmul formulation is order-agnostic (bonus property)."""
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.standard_normal((300, 16)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, 11, 300), jnp.int32)
+    ref = sorted_segment_sum_ref(data, seg, 11)
+    got = sorted_segment_sum(data, seg, 11, block_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), atol=1e-4)
+
+
+# -- flash attention ---------------------------------------------------------
+
+CASES = [
+    # b, hq, hkv, lq, lk, d, causal
+    (2, 4, 2, 128, 128, 64, True),       # GQA causal
+    (1, 8, 8, 256, 256, 64, True),       # MHA
+    (2, 4, 1, 64, 128, 32, False),       # MQA bidirectional
+    (1, 2, 2, 128, 384, 64, True),       # lq < lk (chunked prefill)
+    (1, 4, 2, 1, 256, 64, True),         # decode: single query
+    (2, 4, 4, 64, 256, 128, True),
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,d,causal", CASES)
+def test_flash_pallas_vs_ref(b, hq, hkv, lq, lk, d, causal):
+    rng = np.random.default_rng(lq + lk)
+    q = jnp.asarray(rng.standard_normal((b, hq, lq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, lk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, lk, d)), jnp.float32)
+    ref = attention_ref(q, k, v, causal=causal)
+    pal = flash_attention(q, k, v, causal=causal, impl="pallas",
+                          interpret=True, block_q=64, block_k=64)
+    fj = flash_attention(q, k, v, causal=causal, impl="flash_jnp",
+                         block_k=64)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(fj), atol=2e-5)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.bfloat16)
+    ref = np.asarray(attention_ref(q, k, v), np.float32)
+    pal = np.asarray(flash_attention(q, k, v, impl="pallas",
+                                     interpret=True), np.float32)
+    np.testing.assert_allclose(ref, pal, atol=0.05)
+
+
+@given(lq=st.sampled_from([64, 128]), lk=st.sampled_from([128, 256]),
+       d=st.sampled_from([32, 64]), causal=st.booleans(),
+       seed=st.integers(0, 10))
+@settings(max_examples=8, deadline=None)
+def test_flash_property(lq, lk, d, causal, seed):
+    if lq > lk:
+        return
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 2, lq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, lk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, lk, d)), jnp.float32)
+    ref = attention_ref(q, k, v, causal=causal)
+    pal = flash_attention(q, k, v, causal=causal, impl="pallas",
+                          interpret=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal), atol=2e-5)

@@ -1,0 +1,220 @@
+"""Model-level tests: transformer decode consistency, MoE dispatch
+correctness, equivariance properties, DIEN shapes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import MoEConfig, apply_moe, init_moe
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      forward, init_cache, init_params,
+                                      loss_fn, loss_fn_chunked, prefill)
+
+CFG = TransformerConfig(name="t", n_layers=3, d_model=64, n_heads=4,
+                        n_kv_heads=2, d_ff=128, vocab=256, qk_norm=True,
+                        dtype="float32", attn_impl="naive", remat=False)
+
+
+@pytest.fixture(scope="module")
+def tparams():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes_finite(tparams):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    logits, aux = forward(CFG, tparams, toks)
+    assert logits.shape == (2, 16, 256)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_decode_matches_forward(tparams):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    logits, _ = forward(CFG, tparams, toks)
+    cache = init_cache(CFG, 2, 16)
+    outs = []
+    for t in range(16):
+        lg, cache = decode_step(CFG, tparams, cache, toks[:, t:t + 1],
+                                jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits),
+                               atol=1e-3)
+
+
+def test_prefill_matches_forward(tparams):
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 256)
+    logits, _ = forward(CFG, tparams, toks)
+    last, cache = prefill(CFG, tparams, toks, cache_len=24)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(logits[:, -1]), atol=1e-3)
+    # decode continues correctly from the prefill cache
+    nxt = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    lg, _ = decode_step(CFG, tparams, cache, nxt, jnp.int32(16))
+    full, _ = forward(CFG, tparams, jnp.concatenate([toks, nxt], 1))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-3)
+
+
+def test_chunked_prefill_matches_forward(tparams):
+    """Sarathi-style chunked prefill == full forward (logits + cache),
+    and decode continues correctly from the chunked cache."""
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, 256)
+    from repro.models.transformer import prefill_chunked
+    ref_logits, _ = forward(CFG, tparams, toks)
+    last, cache = prefill_chunked(CFG, tparams, toks, chunk=4,
+                                  cache_len=24)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(ref_logits[:, -1]), atol=1e-3)
+    nxt = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    lg, _ = decode_step(CFG, tparams, cache, nxt, jnp.int32(16))
+    full2, _ = forward(CFG, tparams, jnp.concatenate([toks, nxt], 1))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full2[:, -1]), atol=1e-3)
+
+
+def test_chunked_ce_matches_naive(tparams):
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, 256)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    l1 = loss_fn(CFG, tparams, batch)
+    l2 = loss_fn_chunked(CFG, tparams, batch, chunk=4)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_flash_jnp_equals_naive_model_level(tparams):
+    cfg2 = dataclasses.replace(CFG, attn_impl="flash_jnp", attn_block_k=8)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, 256)
+    l1, _ = forward(CFG, tparams, toks)
+    l2, _ = forward(cfg2, tparams, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-3)
+
+
+def test_moe_capacity_and_combine():
+    cfg = MoEConfig(n_routed=4, top_k=2, d_ff=16, n_shared=1,
+                    capacity_factor=8.0)  # no drops at this capacity
+    p = init_moe(jax.random.PRNGKey(0), 8, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 8))
+    y, aux = apply_moe(p, x, cfg)
+    assert y.shape == x.shape and np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0
+    # determinism
+    y2, _ = apply_moe(p, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_moe_dropping_monotone():
+    """Lower capacity_factor can only zero out token contributions."""
+    p = init_moe(jax.random.PRNGKey(0), 8,
+                 MoEConfig(n_routed=4, top_k=1, d_ff=16), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    y_hi, _ = apply_moe(p, x, MoEConfig(n_routed=4, top_k=1, d_ff=16,
+                                        capacity_factor=16.0))
+    y_lo, _ = apply_moe(p, x, MoEConfig(n_routed=4, top_k=1, d_ff=16,
+                                        capacity_factor=0.25))
+    hi = np.abs(np.asarray(y_hi)).sum(-1)
+    lo = np.abs(np.asarray(y_lo)).sum(-1)
+    assert (lo <= hi + 1e-5).all()
+    assert (lo == 0).sum() > 0          # some tokens dropped
+
+
+# -- equivariance ------------------------------------------------------------
+
+def _random_rotation(seed):
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.standard_normal((3, 3)))
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return jnp.asarray(Q, jnp.float32)
+
+
+@pytest.mark.parametrize("model", ["nequip", "equiformer"])
+def test_rotation_invariance(model):
+    rng = np.random.default_rng(0)
+    n = 10
+    pos = jnp.asarray(rng.standard_normal((n, 3)) * 2, jnp.float32)
+    spec = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+    es, ed = np.meshgrid(np.arange(n), np.arange(n))
+    m = es != ed
+    es = jnp.asarray(es[m], jnp.int32)
+    ed = jnp.asarray(ed[m], jnp.int32)
+    key = jax.random.PRNGKey(0)
+    if model == "nequip":
+        from repro.models.gnn.nequip import (NequIPConfig, forward,
+                                             init_params)
+        cfg = NequIPConfig(name="x", n_layers=2, d_hidden=8, l_max=2,
+                           n_rbf=4)
+    else:
+        from repro.models.gnn.equiformer_v2 import (EquiformerV2Config,
+                                                    forward, init_params)
+        cfg = EquiformerV2Config(name="x", n_layers=2, d_hidden=16,
+                                 l_max=3, m_max=2, n_heads=4, n_rbf=4)
+    p = init_params(cfg, key)
+    Q = _random_rotation(7)
+    e1, _ = forward(cfg, p, spec, pos, es, ed)
+    e2, _ = forward(cfg, p, spec, pos @ Q.T, es, ed)
+    assert abs(float(e1 - e2)) < 1e-3 * max(1.0, abs(float(e1)))
+
+
+def test_nequip_forces_equivariant():
+    """Forces rotate with the frame: F(Rx) = R F(x)."""
+    from repro.models.gnn.nequip import NequIPConfig, forward, init_params
+    rng = np.random.default_rng(1)
+    n = 8
+    pos = jnp.asarray(rng.standard_normal((n, 3)) * 2, jnp.float32)
+    spec = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+    es, ed = np.meshgrid(np.arange(n), np.arange(n))
+    m = es != ed
+    es = jnp.asarray(es[m], jnp.int32)
+    ed = jnp.asarray(ed[m], jnp.int32)
+    cfg = NequIPConfig(name="x", n_layers=2, d_hidden=8, l_max=2, n_rbf=4)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+
+    def energy(pp):
+        return forward(cfg, p, spec, pp, es, ed)[0]
+
+    Q = _random_rotation(3)
+    f1 = -jax.grad(energy)(pos)
+    f2 = -jax.grad(energy)(pos @ Q.T)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f1 @ Q.T),
+                               atol=2e-4)
+
+
+def test_equiformer_edge_chunking_exact():
+    """Edge-blocked message passing == unchunked (the paper's edge
+    blocking applied to equivariant GNNs)."""
+    from repro.models.gnn.equiformer_v2 import (EquiformerV2Config,
+                                                forward, init_params)
+    rng = np.random.default_rng(0)
+    n = 10
+    pos = jnp.asarray(rng.standard_normal((n, 3)) * 2, jnp.float32)
+    spec = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+    es, ed = np.meshgrid(np.arange(n), np.arange(n))
+    m = es != ed
+    es = jnp.asarray(es[m], jnp.int32)
+    ed = jnp.asarray(ed[m], jnp.int32)
+    cfg = EquiformerV2Config(name="x", n_layers=2, d_hidden=16, l_max=2,
+                             m_max=1, n_heads=4, n_rbf=4)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    e0, _ = forward(cfg, p, spec, pos, es, ed)
+    cfgc = dataclasses.replace(cfg, edge_chunk=13)
+    ec, _ = forward(cfgc, p, spec, pos, es, ed)
+    assert abs(float(e0 - ec)) < 1e-4
+
+
+def test_dien_retrieval_factored_equals_full():
+    """score_candidates (factored MLP) == forward on the same pairs when
+    using mean-history as target proxy is not expected; instead check the
+    factored first layer math directly."""
+    from repro.models.recsys.dien import DIENConfig, init_params
+    cfg = DIENConfig(name="d", n_items=100, n_cats=10, seq_len=5)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    w0 = p["mlp"][0]["w"]
+    user = jax.random.normal(jax.random.PRNGKey(1),
+                             (cfg.gru_dim + cfg.d_behavior,))
+    cand = jax.random.normal(jax.random.PRNGKey(2), (7, cfg.d_behavior))
+    d_u = user.shape[0]
+    full = jnp.concatenate([jnp.tile(user[None], (7, 1)), cand], 1) @ w0
+    fact = (user @ w0[:d_u])[None] + cand @ w0[d_u:]
+    np.testing.assert_allclose(np.asarray(full), np.asarray(fact),
+                               atol=1e-4)

@@ -1,0 +1,104 @@
+"""Sparse/ragged primitives: segment ops, ragged expand/compact,
+embedding bag, binary-search membership — including hypothesis sweeps."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as G
+from repro.sparse.intersect import (adj_contains, binary_contains,
+                                    intersect_count_sorted, linear_contains)
+from repro.sparse.ops import (compact_mask, edge_softmax, embedding_bag,
+                              expand_ragged, segment_mean, segment_sum)
+
+
+@given(counts=st.lists(st.integers(0, 7), min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_expand_ragged_matches_numpy(counts):
+    counts_np = np.asarray(counts, np.int32)
+    total = int(counts_np.sum())
+    cap = max(total + 3, 4)
+    parent, rank, tot = expand_ragged(jnp.asarray(counts_np), cap)
+    assert int(tot) == total
+    exp_parent = np.repeat(np.arange(len(counts)), counts_np)
+    exp_rank = np.concatenate([np.arange(c) for c in counts_np]) \
+        if total else np.zeros(0)
+    assert np.asarray(parent)[:total].tolist() == exp_parent.tolist()
+    assert np.asarray(rank)[:total].tolist() == exp_rank.tolist()
+    assert (np.asarray(parent)[total:] == -1).all()
+
+
+@given(mask=st.lists(st.booleans(), min_size=1, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_compact_mask(mask):
+    m = np.asarray(mask)
+    gather, n = compact_mask(jnp.asarray(m), len(mask))
+    assert int(n) == m.sum()
+    got = np.arange(len(mask))[np.asarray(gather)][:int(n)]
+    assert got.tolist() == np.nonzero(m)[0].tolist()
+
+
+def test_segment_ops():
+    data = jnp.asarray([1., 2., 3., 4.])
+    seg = jnp.asarray([0, 0, 2, 2])
+    assert np.allclose(segment_sum(data, seg, 3), [3, 0, 7])
+    assert np.allclose(segment_mean(data, seg, 3), [1.5, 0, 3.5])
+
+
+def test_edge_softmax_normalizes():
+    scores = jnp.asarray([1.0, 2.0, 3.0, -1.0])
+    dst = jnp.asarray([0, 0, 1, 1])
+    out = np.asarray(edge_softmax(scores, dst, 3))
+    assert np.isclose(out[0] + out[1], 1.0)
+    assert np.isclose(out[2] + out[3], 1.0)
+
+
+def test_embedding_bag_modes():
+    tab = jnp.arange(12.0).reshape(4, 3)
+    idx = jnp.asarray([0, 1, 3, 2])
+    bag = jnp.asarray([0, 0, 1, 1])
+    s = embedding_bag(tab, idx, bag, 2, mode="sum")
+    assert np.allclose(s, [[3, 5, 7], [15, 17, 19]])
+    m = embedding_bag(tab, idx, bag, 2, mode="mean")
+    assert np.allclose(m, [[1.5, 2.5, 3.5], [7.5, 8.5, 9.5]])
+    w = embedding_bag(tab, idx, bag, 2, mode="sum",
+                      weights=jnp.asarray([1., 0., 2., 1.]))
+    assert np.allclose(w, [[0, 1, 2], [24, 27, 30]])
+
+
+@given(seed=st.integers(0, 50), n=st.integers(5, 40),
+       p=st.floats(0.05, 0.5))
+@settings(max_examples=25, deadline=None)
+def test_binary_contains_vs_numpy(seed, n, p):
+    g = G.erdos_renyi(n, p, seed=seed)
+    if g.n_edges == 0:
+        return
+    rng = np.random.default_rng(seed)
+    us = rng.integers(0, n, size=64).astype(np.int32)
+    vs = rng.integers(0, n, size=64).astype(np.int32)
+    rp, ci = np.asarray(g.row_ptr), np.asarray(g.col_idx)
+    ref = np.array([v in ci[rp[u]:rp[u + 1]] for u, v in zip(us, vs)])
+    n_steps = max(1, math.ceil(math.log2(g.max_degree + 1)))
+    for method in ("binary", "linear"):
+        got = np.asarray(adj_contains(g.row_ptr, g.col_idx,
+                                      jnp.asarray(us), jnp.asarray(vs),
+                                      n_steps, method=method))
+        assert (ref == got).all(), method
+
+
+def test_intersect_count_vs_numpy():
+    g = G.erdos_renyi(40, 0.3, seed=9)
+    rp, ci = np.asarray(g.row_ptr), np.asarray(g.col_idx)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 40, 50)
+    b = rng.integers(0, 40, 50)
+    ref = [len(np.intersect1d(ci[rp[x]:rp[x + 1]], ci[rp[y]:rp[y + 1]]))
+           for x, y in zip(a, b)]
+    n_steps = max(1, math.ceil(math.log2(g.max_degree + 1)))
+    got = intersect_count_sorted(
+        g.col_idx, jnp.asarray(rp[a]), jnp.asarray(rp[a + 1]),
+        jnp.asarray(rp[b]), jnp.asarray(rp[b + 1]),
+        max_deg=g.max_degree, n_steps=n_steps)
+    assert np.asarray(got).tolist() == ref
