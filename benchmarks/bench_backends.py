@@ -1,0 +1,73 @@
+"""Phase-backend comparison: reference XLA vs fused Pallas extend.
+
+Times full mining runs (jit warmed) per backend on scaling graphs and
+writes ``BENCH_backends.json`` next to the repo root so successive PRs
+accumulate a perf trajectory for the backend seam.  On this CPU box the
+pallas backend runs the fused kernel in interpret mode — the point is the
+trajectory and the parity check, not CPU speed; on TPU the same JSON
+records the compiled kernel.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from benchmarks.common import emit
+from repro.core import Miner, make_cf_app, make_mc_app, make_tc_app
+from repro.graph import generators as G
+
+BACKENDS = ("reference", "pallas")
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_backends.json"
+
+
+def graphs(small: bool):
+    if small:
+        return {"er100": G.erdos_renyi(100, 0.08, seed=1),
+                "er200": G.erdos_renyi(200, 0.05, seed=1)}
+    return {"er200": G.erdos_renyi(200, 0.05, seed=1),
+            "er500": G.erdos_renyi(500, 0.03, seed=1),
+            "rmat10": G.rmat(10, edge_factor=4, seed=1)}
+
+
+def apps():
+    return [("tc", make_tc_app), ("4-cf", lambda: make_cf_app(4)),
+            ("3-mc", lambda: make_mc_app(3))]
+
+
+def run(small: bool = True) -> list[str]:
+    out = []
+    records = []
+    for gname, g in graphs(small).items():
+        for aname, make_app in apps():
+            baseline = None
+            for backend in BACKENDS:
+                m = Miner(g, make_app(), backend=backend)
+                m.run()                      # warm the jit cache
+                t0 = time.perf_counter()
+                r = m.run()
+                dt = time.perf_counter() - t0
+                result = (int(r.count) if r.p_map is None
+                          else [int(x) for x in r.p_map])
+                if baseline is None:
+                    baseline = result
+                derived = f"match={result == baseline}"
+                out.append(emit(f"backends/{aname}/{gname}/{backend}", dt,
+                                derived))
+                records.append({"graph": gname, "app": aname,
+                                "backend": backend, "seconds": dt,
+                                "n_vertices": g.n_vertices,
+                                "n_edges": g.n_edges // 2,
+                                "matches_reference": result == baseline})
+    OUT_PATH.write_text(json.dumps({"schema": 1, "records": records},
+                                   indent=2))
+    print(f"# wrote {OUT_PATH}")
+    bad = [r for r in records if not r["matches_reference"]]
+    if bad:
+        raise SystemExit(f"backend parity violated: {bad}")
+    return out
+
+
+if __name__ == "__main__":
+    run(small=False)

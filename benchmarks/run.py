@@ -14,7 +14,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--sections", default="apps,handopt,ablations,memory,"
-                                          "scaling,roofline")
+                                          "scaling,backends,roofline")
     args = ap.parse_args()
     small = not args.full
     sections = args.sections.split(",")
@@ -34,6 +34,9 @@ def main() -> None:
     if "scaling" in sections:
         from benchmarks import bench_scaling
         bench_scaling.run(small=small)
+    if "backends" in sections:
+        from benchmarks import bench_backends
+        bench_backends.run(small=small)
     if "roofline" in sections:
         # summarize dry-run artifacts when present (no compiles here)
         import glob, json, os

@@ -23,8 +23,8 @@ def main():
     n_dev = jax.device_count()
     print(f"devices: {n_dev}")
     g = G.erdos_renyi(60, 0.15, seed=3)
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((n_dev,), ("data",))
     app = make_mc_app(4)
     ref = Miner(g, app).run()
     cnt, pmap, overflow = mine_sharded(

@@ -1,5 +1,7 @@
 # Pangolin core: the paper's extend-reduce-filter mining engine in JAX.
 from repro.core.api import GraphCtx, MiningApp, make_ctx
 from repro.core.engine import Miner, MineResult, bounded_mine_vertex, mine_sharded
+from repro.core.phases import (PhaseBackend, available_backends, get_backend,
+                               register_backend)
 from repro.core.apps import (make_tc_app, make_cf_app, make_mc_app,
                              make_fsm_app, triangle_count_fused)

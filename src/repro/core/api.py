@@ -115,6 +115,31 @@ def is_auto_canonical_vertex(ctx: GraphCtx, emb: jnp.ndarray,
     return ok & found
 
 
+def is_auto_canonical_vertex_bits(emb: jnp.ndarray, u: jnp.ndarray,
+                                  conn: jnp.ndarray,
+                                  src_slot: Optional[jnp.ndarray] = None
+                                  ) -> jnp.ndarray:
+    """Connectivity-bit variant of :func:`is_auto_canonical_vertex`.
+
+    ``conn[:, j]`` must hold the precomputed adjacency of candidate u to
+    embedding vertex j (as emitted by a fused extend kernel); the rule is
+    otherwise identical.  Assumes symmetric adjacency — on an oriented DAG
+    the two ``isConnected`` directions differ, so DAG apps must supply
+    ``to_add_bits`` instead of relying on this default.
+    """
+    k = emb.shape[1]
+    ok = u > emb[:, 0]
+    found = jnp.zeros(u.shape, bool)
+    for j in range(k):
+        adj = conn[:, j]
+        ok = ok & ~(found & (u < emb[:, j]))
+        found = found | adj
+        ok = ok & (u != emb[:, j])
+        if src_slot is not None:
+            ok = ok & ~(adj & (jnp.int32(j) < src_slot))
+    return ok & found
+
+
 def is_auto_canonical_edge(ctx: GraphCtx, eids: jnp.ndarray,
                            new_eid: jnp.ndarray, new_src: jnp.ndarray,
                            new_dst: jnp.ndarray, e_src: jnp.ndarray,
@@ -149,10 +174,18 @@ class MiningApp:
     Hook signatures (all vectorized; N = candidate/embedding batch):
       to_extend(ctx, emb[N,k])                           -> bool[N,k]
       to_add(ctx, emb[N,k], u[N], src_slot[N], state[N]) -> bool[N]
+      to_add_bits(ctx, emb, u, src_slot, state, conn[N,k]) -> bool[N]
       get_pattern(ctx, emb[N,k], state[N]|None)     -> (pat[N], new_state)
       to_prune(support[P], pat_id[N])               -> bool[N] (True = drop)
     ``state`` is the per-embedding memo slot (paper §4.2 memoization) —
     e.g. the previous level's motif id; it flows level to level.
+
+    ``to_add_bits`` is the fused-backend variant of ``to_add``: instead of
+    probing ``ctx.is_connected`` itself, it receives ``conn[:, j]`` =
+    "candidate u is adjacent to embedding vertex j", precomputed inside
+    the extend kernel.  Backends that don't precompute connectivity ignore
+    it and call ``to_add``.  ``backend`` names the app's preferred phase
+    backend (see repro.core.phases); ``Miner(backend=...)`` overrides it.
     """
 
     name: str
@@ -166,6 +199,8 @@ class MiningApp:
     min_support: int = 0
     to_extend: Optional[Callable] = None
     to_add: Optional[Callable] = None
+    to_add_bits: Optional[Callable] = None  # fused-backend toAdd variant
     get_pattern: Optional[Callable] = None
     to_prune: Optional[Callable] = None
     init_state: Optional[Callable] = None   # (ctx, emb[N,2]) -> state[N]
+    backend: Optional[str] = None           # preferred phase backend

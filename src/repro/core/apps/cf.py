@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.api import GraphCtx, MiningApp, is_auto_canonical_vertex
+from repro.core.api import (GraphCtx, MiningApp, is_auto_canonical_vertex,
+                            is_auto_canonical_vertex_bits)
 
 
 def make_cf_app(k: int, use_dag: bool = True,
@@ -22,15 +23,16 @@ def make_cf_app(k: int, use_dag: bool = True,
             return mask.at[:, emb.shape[1] - 1].set(True)
         return jnp.ones(emb.shape, bool)
 
-    def to_add(ctx: GraphCtx, emb: jnp.ndarray, u: jnp.ndarray,
-               src_slot: jnp.ndarray, state):
+    def _decide(emb, u, src_slot, connected, canonical):
+        """One clique rule for both hook variants; ``connected(j)`` answers
+        isConnected(emb_j, u), ``canonical()`` the automorphism test."""
         kk = emb.shape[1]
         ok = u >= 0
         # connected to all current vertices (clique property). The extension
         # edge (last, u) is already a graph edge; checking it again is
         # harmless and keeps the code uniform (paper Listing 3 does same).
         for j in range(kk):
-            ok = ok & ctx.is_connected(emb[:, j], u)
+            ok = ok & connected(j)
         if use_dag:
             # DAG: out-neighbors always rank higher; uniqueness is free —
             # but with all slots extendable the same clique arrives from
@@ -43,8 +45,25 @@ def make_cf_app(k: int, use_dag: bool = True,
             # undirected with last-vertex extension: enforce sorted order
             ok = ok & (u > emb[:, kk - 1])
         else:
-            ok = ok & is_auto_canonical_vertex(ctx, emb, u, src_slot)
+            ok = ok & canonical()
         return ok
 
+    def to_add(ctx: GraphCtx, emb: jnp.ndarray, u: jnp.ndarray,
+               src_slot: jnp.ndarray, state):
+        return _decide(emb, u, src_slot,
+                       lambda j: ctx.is_connected(emb[:, j], u),
+                       lambda: is_auto_canonical_vertex(ctx, emb, u,
+                                                        src_slot))
+
+    def to_add_bits(ctx: GraphCtx, emb: jnp.ndarray, u: jnp.ndarray,
+                    src_slot: jnp.ndarray, state, conn: jnp.ndarray):
+        # isConnected answered from the fused kernel's connectivity
+        # bitmask (conn[:, j] = u in N(emb_j))
+        return _decide(emb, u, src_slot,
+                       lambda j: conn[:, j],
+                       lambda: is_auto_canonical_vertex_bits(emb, u, conn,
+                                                             src_slot))
+
     return MiningApp(name=f"{k}-clique", kind="vertex", max_size=k,
-                     use_dag=use_dag, to_extend=to_extend, to_add=to_add)
+                     use_dag=use_dag, to_extend=to_extend, to_add=to_add,
+                     to_add_bits=to_add_bits)

@@ -1,5 +1,11 @@
 """Execution engine (paper Alg. 1): extend -> reduce -> filter per level.
 
+The engine is the *high-level* half of the Sandslash-style split: it owns
+capacity planning, the per-level loop, blocking, checkpointing, and
+distribution, and resolves every low-level set operation through the
+phase-backend registry (:mod:`repro.core.phases`) — ``"reference"`` pure
+XLA, ``"pallas"`` fused kernels, or any registered custom backend.
+
 Two modes:
 
 * :class:`Miner` — the host driver.  Per level it runs the *inspection*
@@ -7,7 +13,10 @@ Two modes:
   (bucketed to powers of two so retraces are logarithmic), then runs the
   *execution* jit.  This is the paper's inspection-execution applied at
   the host/XLA boundary, and doubles as the paper's dynamic-memory story:
-  capacities replace allocators.
+  capacities replace allocators.  Vertex-induced and edge-induced mining
+  share one parameterized level loop (:meth:`Miner._run_levels`); the
+  kind-specific plumbing (frontier materialization, state threading,
+  reduce/filter policy) lives in two small pipeline adapters.
 
 * :func:`bounded_mine_vertex` — a single pure-jit function with fixed
   capacities and no host sync, used for (a) the multi-pod dry-run and
@@ -24,19 +33,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import GraphCtx, MiningApp, make_ctx
-from repro.core import extend as EXT
-from repro.core import reduce as RED
 from repro.core.embedding_list import (EmbeddingLevel, init_level0_edge,
                                        init_level0_vertex, materialize,
-                                       total_bytes)
+                                       materialize_edges, total_bytes)
+from repro.core.phases import BackendSpec, get_backend
 from repro.graph.csr import CSRGraph
 from repro.graph.dag import orient_dag
 
@@ -67,146 +74,218 @@ class MineResult:
     levels: Optional[list[EmbeddingLevel]] = None
 
 
+# ---------------------------------------------------------------------------
+# Pipeline adapters: the kind-specific plumbing around the shared level loop
+
+
+class _VertexPipeline:
+    """Vertex-induced frontier: emb matrix + memo state, count reduce."""
+
+    def __init__(self, miner: "Miner", src, dst, n0):
+        self.m = miner
+        self.levels = init_level0_vertex(src, dst, n0)
+        self.emb = miner._materialize(self.levels)
+        self.n = self.levels[0].n
+        app, ctx = miner.app, miner.ctx
+        self.state = (app.init_state(ctx, self.emb, self.n)
+                      if app.init_state is not None
+                      else jnp.zeros(self.emb.shape[:1], jnp.int32))
+        self.p_map = None
+
+    def level_range(self):
+        return range(2, self.m.app.max_size)
+
+    def pre_loop(self):
+        return None
+
+    def bound(self):
+        return self.m._bound(self.emb, self.n)
+
+    def inspect(self, cand_cap: int):
+        return self.m._inspect(self.emb, self.n, self.state,
+                               cand_cap=cand_cap)
+
+    def extend(self, cand_cap: int, out_cap: int):
+        new_level, self.emb = self.m._extend(self.emb, self.n, self.state,
+                                             cand_cap=cand_cap,
+                                             out_cap=out_cap)
+        self.levels.append(new_level)
+        self.n = new_level.n
+        self.state = self.state[new_level.idx]  # memo state follows the tree
+
+    def reduce_filter(self, level: int):
+        app = self.m.app
+        if app.get_pattern is not None or (app.needs_reduce
+                                           and level == app.max_size - 1):
+            pm, pat, self.state = self.m._reduce(self.emb, self.n,
+                                                 self.state)
+            self.p_map = pm
+        else:
+            self.state = jnp.zeros(self.emb.shape[:1], jnp.int32)
+
+    def checkpoint_payload(self):
+        return self.p_map
+
+    def result(self, stats) -> MineResult:
+        return MineResult(
+            count=int(self.n),
+            p_map=None if self.p_map is None else np.asarray(self.p_map),
+            stats=stats, levels=self.levels)
+
+
+class _EdgePipeline:
+    """Edge-induced frontier: (v0, vid, his, eid), domain reduce + filter."""
+
+    def __init__(self, miner: "Miner"):
+        self.m = miner
+        ctx = miner.ctx
+        eid0 = jnp.arange(ctx.n_uedges, dtype=jnp.int32)
+        self.levels = init_level0_edge(ctx.usrc, ctx.udst, eid0,
+                                       ctx.n_uedges)
+        self.codes = self.supports = None
+        self._front = None        # frontier cache, one materialize per level
+
+    def level_range(self):
+        # k-FSM: patterns of max_size - 1 edges; level 1 is pre-loop
+        return range(2, self.m.app.max_size)
+
+    def pre_loop(self):
+        self._reduce_filter()
+        return 1                  # the initial reduce+filter is "level 1"
+
+    def _frontier(self):
+        if self._front is None:
+            self._front = materialize_edges(self.levels)
+        return self._front
+
+    def bound(self):
+        v0, vid, his, _ = self._frontier()
+        return self.m._bound_e(v0, vid, his, self.levels[-1].n)
+
+    def inspect(self, cand_cap: int):
+        return self.m._inspect_e(*self._frontier(), self.levels[-1].n,
+                                 cand_cap=cand_cap)
+
+    def extend(self, cand_cap: int, out_cap: int):
+        new_level = self.m._extend_e(*self._frontier(), self.levels[-1].n,
+                                     cand_cap=cand_cap, out_cap=out_cap)
+        self.levels.append(new_level)
+        self._front = None
+
+    def reduce_filter(self, level: int):
+        self._reduce_filter()
+
+    def _reduce_filter(self):
+        app = self.m.app
+        codes, supports, pat, _ = self.m._reduce_e(self.levels)
+        self.codes, self.supports = codes, supports
+        if app.needs_filter:
+            sup_of = supports[jnp.clip(pat, 0, app.max_patterns - 1)]
+            keep = sup_of >= app.min_support
+            n_keep = int(jnp.sum(
+                keep & (jnp.arange(keep.shape[0]) < self.levels[-1].n)))
+            self.levels = self.m._filter_e(self.levels, keep,
+                                           out_cap=_bucket(n_keep))
+            self._front = None
+
+    def checkpoint_payload(self):
+        return None if self.supports is None else np.asarray(self.supports)
+
+    def result(self, stats) -> MineResult:
+        app = self.m.app
+        mask = np.asarray(self.supports) >= app.min_support
+        mask &= np.asarray(self.codes) != np.iinfo(np.int32).max
+        return MineResult(count=int(mask.sum()),
+                          codes=np.asarray(self.codes),
+                          supports=np.asarray(self.supports),
+                          stats=stats, levels=self.levels)
+
+
 class Miner:
-    """Host-driver mining engine for one (graph, app) pair.
+    """Host-driver mining engine for one (graph, app, backend) triple.
 
     Jitted phase closures are built once per Miner and reused across runs
     (and across edge blocks), so benchmark loops pay compilation once.
+    ``backend`` picks the phase backend ("reference", "pallas", an
+    instance, or None to honor ``app.backend``).
     """
 
     def __init__(self, graph: CSRGraph, app: MiningApp,
                  search: str = "binary", fuse_filter: bool = True,
-                 materialize_fn=None):
+                 materialize_fn=None, backend: BackendSpec = None):
         self.app = app
         self.graph_in = graph
+        self.backend = get_backend(backend if backend is not None
+                                   else app.backend)
         g = orient_dag(graph) if app.use_dag else graph
         self.graph = g
         self.ctx = make_ctx(g, search=search,
                             with_edge_uids=(app.kind == "edge"))
         self.fuse_filter = fuse_filter
         self._materialize = materialize_fn or materialize
-        ctx, a = self.ctx, self.app
+        ctx, a, be = self.ctx, self.app, self.backend
         if app.kind == "vertex":
             self._inspect = jax.jit(
-                lambda emb, n, st, *, cand_cap: EXT.inspect_vertex(
+                lambda emb, n, st, *, cand_cap: be.inspect_vertex(
                     ctx, a, emb, n, st, cand_cap),
                 static_argnames=("cand_cap",))
             self._bound = jax.jit(
-                lambda emb, n: EXT.candidate_bound_vertex(ctx, a, emb, n))
+                lambda emb, n: be.candidate_bound_vertex(ctx, a, emb, n))
             self._extend = jax.jit(
-                lambda emb, n, st, *, cand_cap, out_cap: EXT.extend_vertex(
+                lambda emb, n, st, *, cand_cap, out_cap: be.extend_vertex(
                     ctx, a, emb, n, st, cand_cap, out_cap,
                     fuse_filter=self.fuse_filter),
                 static_argnames=("cand_cap", "out_cap"))
             self._reduce = jax.jit(
-                lambda emb, n, st: RED.reduce_count(ctx, a, emb, n, st))
+                lambda emb, n, st: be.reduce_count(ctx, a, emb, n, st))
         else:
             self._bound_e = jax.jit(
-                lambda v0, vid, his, n: EXT.candidate_bound_edge(
+                lambda v0, vid, his, n: be.candidate_bound_edge(
                     ctx, a, v0, vid, his, n))
             self._inspect_e = jax.jit(
-                lambda v0, vid, his, eid, n, *, cand_cap: EXT.inspect_edge(
+                lambda v0, vid, his, eid, n, *, cand_cap: be.inspect_edge(
                     ctx, a, v0, vid, his, eid, n, cand_cap),
                 static_argnames=("cand_cap",))
-
-    # -- vertex-induced ----------------------------------------------------
-
-    def _run_vertex(self, src, dst, n0, collect_stats=False,
-                    checkpoint_cb: Optional[Callable] = None) -> MineResult:
-        app, ctx = self.app, self.ctx
-        levels = init_level0_vertex(src, dst, n0)
-        emb = self._materialize(levels)
-        n = levels[0].n
-        state = (app.init_state(ctx, emb, n) if app.init_state is not None
-                 else jnp.zeros(emb.shape[:1], jnp.int32))
-        stats: list[LevelStats] = []
-        p_map = None
-        for level in range(2, app.max_size):
-            t0 = time.perf_counter()
-            cand_cap = _bucket(int(self._bound(emb, n)))
-            n_cand, n_next = self._inspect(emb, n, state, cand_cap=cand_cap)
-            out_cap = _bucket(int(n_next))
-            new_level, emb = self._extend(emb, n, state, cand_cap=cand_cap,
-                                          out_cap=out_cap)
-            levels.append(new_level)
-            n = new_level.n
-            state = state[new_level.idx]    # memo state follows the tree
-            if app.get_pattern is not None or (app.needs_reduce
-                                               and level == app.max_size - 1):
-                pm, pat, state = self._reduce(emb, n, state)
-                p_map = pm
-            else:
-                state = jnp.zeros(emb.shape[:1], jnp.int32)
-            if collect_stats:
-                jax.block_until_ready(emb)
-                stats.append(LevelStats(level, int(n_cand), int(n),
-                                        out_cap, total_bytes(levels),
-                                        time.perf_counter() - t0))
-            if checkpoint_cb is not None:
-                checkpoint_cb(level, levels, p_map)
-        return MineResult(count=int(n),
-                          p_map=None if p_map is None else np.asarray(p_map),
-                          stats=stats, levels=levels)
-
-    # -- edge-induced (FSM) ------------------------------------------------
-
-    def _run_edge(self, collect_stats=False) -> MineResult:
-        app, ctx = self.app, self.ctx
-        usrc, udst = ctx.usrc, ctx.udst
-        n_ue = ctx.n_uedges
-        eid0 = jnp.arange(n_ue, dtype=jnp.int32)
-        levels = init_level0_edge(usrc, udst, eid0, n_ue)
-        stats: list[LevelStats] = []
-        reduce_j = jax.jit(lambda lvls: RED.reduce_domain(ctx, app, lvls))
-        filter_j = jax.jit(
-            lambda lvls, keep, *, out_cap: RED.filter_levels(lvls, keep,
-                                                             out_cap),
-            static_argnames=("out_cap",))
-        codes = supports = None
-
-        def reduce_filter(levels, level_no):
-            nonlocal codes, supports
-            t0 = time.perf_counter()
-            codes_, supports_, pat, pat_valid = reduce_j(levels)
-            codes, supports = codes_, supports_
-            if app.needs_filter:
-                sup_of = supports_[jnp.clip(pat, 0, app.max_patterns - 1)]
-                keep = sup_of >= app.min_support
-                n_keep = int(jnp.sum(
-                    keep & (jnp.arange(keep.shape[0]) < levels[-1].n)))
-                out_cap = _bucket(n_keep)
-                levels = filter_j(levels, keep, out_cap=out_cap)
-            if collect_stats:
-                stats.append(LevelStats(level_no, 0, int(levels[-1].n),
-                                        levels[-1].capacity,
-                                        total_bytes(levels),
-                                        time.perf_counter() - t0))
-            return levels
-
-        levels = reduce_filter(levels, 1)
-        max_edges = app.max_size - 1        # k-FSM: patterns of k-1 edges
-        for e in range(2, max_edges + 1):
-            from repro.core.embedding_list import materialize_edges
-            v0, vid, his, eidm = materialize_edges(levels)
-            n = levels[-1].n
-            cand_cap = _bucket(int(self._bound_e(v0, vid, his, n)))
-            n_cand, n_next = self._inspect_e(v0, vid, his, eidm, n,
-                                             cand_cap=cand_cap)
-            out_cap = _bucket(int(n_next))
-            ext_j = jax.jit(
-                lambda v0, vid, his, eidm, n, *, cand_cap, out_cap:
-                EXT.extend_edge(ctx, app, v0, vid, his, eidm, n, cand_cap,
-                                out_cap),
+            self._extend_e = jax.jit(
+                lambda v0, vid, his, eid, n, *, cand_cap, out_cap:
+                be.extend_edge(ctx, a, v0, vid, his, eid, n, cand_cap,
+                               out_cap),
                 static_argnames=("cand_cap", "out_cap"))
-            new_level = ext_j(v0, vid, his, eidm, n, cand_cap=cand_cap,
-                              out_cap=out_cap)
-            levels = levels + [new_level]
-            levels = reduce_filter(levels, e)
-        mask = np.asarray(supports) >= app.min_support
-        mask &= np.asarray(codes) != np.iinfo(np.int32).max
-        return MineResult(count=int(mask.sum()), codes=np.asarray(codes),
-                          supports=np.asarray(supports), stats=stats,
-                          levels=levels)
+            self._reduce_e = jax.jit(
+                lambda lvls: be.reduce_domain(ctx, a, lvls))
+            self._filter_e = jax.jit(
+                lambda lvls, keep, *, out_cap: be.filter_levels(
+                    lvls, keep, out_cap),
+                static_argnames=("out_cap",))
+
+    # -- the one level loop (paper Alg. 1, both embedding kinds) -----------
+
+    def _run_levels(self, pipe, collect_stats=False,
+                    checkpoint_cb: Optional[Callable] = None) -> MineResult:
+        stats: list[LevelStats] = []
+
+        def record(level, n_cand, t0):
+            last = pipe.levels[-1]
+            jax.block_until_ready(last.vid)
+            stats.append(LevelStats(level, n_cand, int(last.n),
+                                    last.capacity, total_bytes(pipe.levels),
+                                    time.perf_counter() - t0))
+
+        t0 = time.perf_counter()
+        pre_level = pipe.pre_loop()
+        if collect_stats and pre_level is not None:
+            record(pre_level, 0, t0)
+        for level in pipe.level_range():
+            t0 = time.perf_counter()
+            cand_cap = _bucket(int(pipe.bound()))
+            n_cand, n_next = pipe.inspect(cand_cap)
+            pipe.extend(cand_cap, _bucket(int(n_next)))
+            pipe.reduce_filter(level)
+            if collect_stats:
+                record(level, int(n_cand), t0)
+            if checkpoint_cb is not None:
+                checkpoint_cb(level, pipe.levels, pipe.checkpoint_payload())
+        return pipe.result(stats)
 
     # -- public ------------------------------------------------------------
 
@@ -220,12 +299,14 @@ class Miner:
             checkpoint_cb=None) -> MineResult:
         if self.app.kind == "edge":
             # paper §5.2: blocking disabled for FSM (global support sync)
-            return self._run_edge(collect_stats=collect_stats)
+            return self._run_levels(_EdgePipeline(self),
+                                    collect_stats=collect_stats,
+                                    checkpoint_cb=checkpoint_cb)
         src, dst = self.init_edges()
         m = int(src.shape[0])
         if not block_size or block_size >= m:
-            return self._run_vertex(src, dst, m, collect_stats,
-                                    checkpoint_cb)
+            return self._run_levels(_VertexPipeline(self, src, dst, m),
+                                    collect_stats, checkpoint_cb)
         # Edge blocking (§5.2): process level-0 chunks sequentially,
         # bounding peak memory; pattern maps / counts accumulate.
         total = 0
@@ -237,7 +318,8 @@ class Miner:
             pad = cap0 - n_blk
             s = jnp.pad(jax.lax.dynamic_slice_in_dim(src, lo, n_blk), (0, pad))
             d = jnp.pad(jax.lax.dynamic_slice_in_dim(dst, lo, n_blk), (0, pad))
-            r = self._run_vertex(s, d, n_blk, collect_stats)
+            r = self._run_levels(_VertexPipeline(self, s, d, n_blk),
+                                 collect_stats)
             total += r.count
             if r.p_map is not None:
                 p_map = r.p_map if p_map is None else p_map + r.p_map
@@ -251,14 +333,17 @@ class Miner:
 
 def bounded_mine_vertex(ctx: GraphCtx, app: MiningApp,
                         src: jnp.ndarray, dst: jnp.ndarray,
-                        n_valid: jnp.ndarray, caps: tuple[int, ...]):
+                        n_valid: jnp.ndarray, caps: tuple[int, ...],
+                        backend: BackendSpec = None):
     """Whole mining run as one jittable function with static capacities.
 
     caps[i] = (cand_cap, out_cap) for extension level i.  Returns
     (count i32[], p_map i32[max_patterns], overflowed bool[]).
     Capacities overflowing truncate the worklist; ``overflowed`` reports it
     (callers re-run with bigger caps — the bounded-mode contract).
+    All phase ops resolve through the backend registry.
     """
+    be = get_backend(backend if backend is not None else app.backend)
     levels = init_level0_vertex(src, dst, n_valid)
     emb = materialize(levels)
     n = levels[0].n
@@ -268,15 +353,15 @@ def bounded_mine_vertex(ctx: GraphCtx, app: MiningApp,
     p_map = jnp.zeros((app.max_patterns,), jnp.int32)
     for level in range(2, app.max_size):
         cand_cap, out_cap = caps[level - 2]
-        total, n_next = EXT.inspect_vertex(ctx, app, emb, n, state, cand_cap)
+        total, n_next = be.inspect_vertex(ctx, app, emb, n, state, cand_cap)
         overflow = overflow | (total > cand_cap) | (n_next > out_cap)
-        new_level, emb = EXT.extend_vertex(ctx, app, emb, n, state,
-                                           cand_cap, out_cap)
+        new_level, emb = be.extend_vertex(ctx, app, emb, n, state,
+                                          cand_cap, out_cap)
         n = new_level.n
         state = state[new_level.idx]        # memo state follows the tree
         if app.get_pattern is not None or (app.needs_reduce
                                            and level == app.max_size - 1):
-            p_map, _, state = RED.reduce_count(ctx, app, emb, n, state)
+            p_map, _, state = be.reduce_count(ctx, app, emb, n, state)
         else:
             state = jnp.zeros(emb.shape[:1], jnp.int32)
     return n, p_map, overflow
@@ -284,18 +369,19 @@ def bounded_mine_vertex(ctx: GraphCtx, app: MiningApp,
 
 def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
                  caps: tuple[tuple[int, int], ...],
-                 axis_names: tuple[str, ...] = ("data",)):
+                 axis_names: tuple[str, ...] = ("data",),
+                 backend: BackendSpec = None):
     """Distributed mining: level-0 edges sharded over mesh axes.
 
     The graph CSR is replicated (in-memory GPM practice); each device mines
     its edge block with :func:`bounded_mine_vertex`; one psum merges counts
     and pattern maps.  Returns (count, p_map, overflowed) as global values.
     """
-    from jax.sharding import NamedSharding, PartitionSpec as PSpec
+    from jax.sharding import PartitionSpec as PSpec
     from jax.experimental.shard_map import shard_map
 
     app_dag = app
-    miner = Miner(graph, app)    # reuse ctx/orientation preprocessing
+    miner = Miner(graph, app, backend=backend)  # reuse ctx preprocessing
     ctx = miner.ctx
     src, dst = miner.init_edges()
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
@@ -309,7 +395,8 @@ def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
 
     def local(src_blk, dst_blk, n_blk):
         cnt, p_map, ovf = bounded_mine_vertex(ctx, app_dag, src_blk[0],
-                                              dst_blk[0], n_blk[0], caps)
+                                              dst_blk[0], n_blk[0], caps,
+                                              backend=miner.backend)
         for ax in axis_names:
             cnt = jax.lax.psum(cnt, ax)
             p_map = jax.lax.psum(p_map, ax)

@@ -1,210 +1,22 @@
-"""EXTEND phase — inspection-execution candidate generation (paper §5.3).
+"""EXTEND phase — compatibility shim.
 
-The paper's three-step GPU strategy, verbatim in XLA terms:
-
-  1. *inspection*: per parent embedding, count candidate extensions
-     (degree gather, masked by ``toExtend``) and prefix-sum to obtain each
-     parent's output offset;
-  2. *expansion*: each output slot finds its (parent, rank) by binary search
-     on the offsets (``expand_ragged``) and gathers its candidate vertex
-     from CSR;
-  3. *write*: ``toAdd`` is evaluated on candidates *before* they are
-     written (the paper's loop fusion / materialization avoidance, §5.2),
-     and survivors are compacted into the next SoA level by a prefix-sum
-     scatter — conflict-free parallel writes.
-
-``inspect_*`` returns the exact candidate and survivor counts so the host
-driver can allocate exact static capacities (the recomputation-for-layout
-trade-off the paper makes for GPUs, §5.3).
+The implementation moved to :mod:`repro.core.phases.reference` (the
+pure-XLA phase backend); fused-kernel variants live beside it in
+:mod:`repro.core.phases.pallas`.  This module re-exports the reference
+functions so existing imports keep working; new code should resolve ops
+through :func:`repro.core.phases.get_backend` instead.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.api import (GraphCtx, MiningApp, is_auto_canonical_edge,
-                            is_auto_canonical_vertex)
-from repro.core.embedding_list import (EmbeddingLevel, materialize,
-                                       materialize_edges)
-from repro.sparse.ops import compact_mask, expand_ragged
-
-
-# ---------------------------------------------------------------------------
-# Vertex-induced
-
-
-def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                       n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
-                       cand_cap: int):
-    """Steps 1+2: enumerate candidate (parent, u) pairs.
-
-    Returns (parent_row i32[cand_cap], u i32[cand_cap], add_mask bool[cand_cap],
-             n_candidates i32[]).
-    """
-    cap, k = emb.shape
-    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-    if app.to_extend is not None:
-        ext = app.to_extend(ctx, emb)
-    else:
-        ext = jnp.ones((cap, k), bool)
-    ext = ext & valid[:, None]
-    deg = jnp.where(ext, ctx.degree(emb), 0)           # [cap, k]
-    slot_parent, rank, total = expand_ragged(deg.reshape(-1), cand_cap)
-    row = slot_parent // k
-    col = slot_parent % k
-    live = slot_parent >= 0
-    row_c = jnp.clip(row, 0, cap - 1)
-    v = emb[row_c, jnp.clip(col, 0, k - 1)]
-    ptr = ctx.row_ptr[jnp.clip(v, 0, ctx.n_vertices - 1)] + rank
-    u = ctx.col_idx[jnp.clip(ptr, 0, ctx.n_edges - 1)]
-    u = jnp.where(live, u, -1)
-
-    parent_emb = emb[row_c]
-    parent_state = None if state is None else state[row_c]
-    src_slot = jnp.clip(col, 0, k - 1).astype(jnp.int32)
-    if app.to_add is not None:
-        add = app.to_add(ctx, parent_emb, u, src_slot, parent_state)
-    else:
-        add = is_auto_canonical_vertex(ctx, parent_emb, u, src_slot)
-    add = add & live
-    return row_c, u, add, total
-
-
-def inspect_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                   n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
-                   cand_cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact (n_candidates, n_survivors) for capacity planning."""
-    _, _, add, total = _vertex_candidates(ctx, app, emb, n_valid, state,
-                                          cand_cap)
-    return total, jnp.sum(add.astype(jnp.int32))
-
-
-def candidate_bound_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                           n_valid: jnp.ndarray) -> jnp.ndarray:
-    """Cheap upper bound on candidate count (degree sum) — step 1 only."""
-    cap, k = emb.shape
-    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-    ext = app.to_extend(ctx, emb) if app.to_extend is not None else \
-        jnp.ones((cap, k), bool)
-    deg = jnp.where(ext & valid[:, None], ctx.degree(emb), 0)
-    return jnp.sum(deg)
-
-
-def extend_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                  n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
-                  cand_cap: int, out_cap: int,
-                  fuse_filter: bool = True):
-    """Step 3: produce the next SoA level (and next emb matrix).
-
-    fuse_filter=False materializes all candidates first and filters in a
-    second pass — the paper's Fig. 12d ablation (what Arabesque/RStream do).
-    Returns (level: EmbeddingLevel, new_emb: i32[out_cap, k+1],
-             new_state or None).
-    """
-    row, u, add, _ = _vertex_candidates(ctx, app, emb, n_valid, state,
-                                        cand_cap)
-    if not fuse_filter:
-        # Materialize the full candidate list (extra HBM traffic), then
-        # filter — deliberately wasteful, for the ablation benchmark.
-        cand_vid = jnp.stack([row, u], axis=1)
-        cand_vid = jax.lax.optimization_barrier(cand_vid)
-        row, u = cand_vid[:, 0], cand_vid[:, 1]
-    gather, n_new = compact_mask(add, out_cap)
-    vid = jnp.where(jnp.arange(out_cap) < n_new, u[gather], -1)
-    idx = jnp.where(jnp.arange(out_cap) < n_new, row[gather], 0)
-    level = EmbeddingLevel(vid=vid.astype(jnp.int32),
-                           idx=idx.astype(jnp.int32), n=n_new)
-    new_emb = jnp.concatenate(
-        [emb[idx], vid[:, None].astype(jnp.int32)], axis=1)
-    return level, new_emb
-
-
-# ---------------------------------------------------------------------------
-# Edge-induced
-
-MAX_EDGE_SLOTS = 8   # static bound on vertex slots (E+1 for E <= 7)
-
-
-def edge_vertex_slots(v0: jnp.ndarray, vid: jnp.ndarray, his: jnp.ndarray
-                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Vertex slots [cap, E+1] and first-appearance mask.
-
-    Slot 0 = v0; slot s>=1 = destination vertex of edge s-1.  A slot is
-    "fresh" iff its vertex did not appear in an earlier slot (edges closing
-    cycles repeat vertices).
-    """
-    slots = jnp.concatenate([v0[:, None], vid], axis=1)
-    n_slots = slots.shape[1]
-    fresh = jnp.ones(slots.shape, bool)
-    for s in range(1, n_slots):
-        seen = jnp.zeros(slots.shape[:1], bool)
-        for t in range(s):
-            seen = seen | (slots[:, t] == slots[:, s])
-        fresh = fresh.at[:, s].set(~seen)
-    return slots, fresh
-
-
-def _edge_candidates(ctx: GraphCtx, app: MiningApp,
-                     v0, vid, his, eid, n_valid: jnp.ndarray,
-                     cand_cap: int):
-    cap, E = vid.shape
-    slots, fresh = edge_vertex_slots(v0, vid, his)
-    n_slots = E + 1
-    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-    ext = fresh & valid[:, None]
-    if app.to_extend is not None:
-        ext = ext & app.to_extend(ctx, slots)
-    deg = jnp.where(ext, ctx.degree(slots), 0)        # [cap, E+1]
-    slot_parent, rank, total = expand_ragged(deg.reshape(-1), cand_cap)
-    row = jnp.clip(slot_parent // n_slots, 0, cap - 1)
-    s = jnp.clip(slot_parent % n_slots, 0, n_slots - 1)
-    live = slot_parent >= 0
-    w = slots[row, s]                                  # source vertex
-    ptr = ctx.row_ptr[jnp.clip(w, 0, ctx.n_vertices - 1)] + rank
-    ptr = jnp.clip(ptr, 0, ctx.n_edges - 1)
-    u = jnp.where(live, ctx.col_idx[ptr], -1)          # destination vertex
-    new_eid = jnp.where(live, ctx.edge_uid[ptr], -1)
-
-    # endpoints of existing edges (for the shares-endpoint test)
-    eids_row = eid[row]                                # [cand, E]
-    e_uid = jnp.clip(eids_row, 0, max(ctx.n_uedges - 1, 0))
-    e_src = ctx.usrc[e_uid]
-    e_dst = ctx.udst[e_uid]
-    add = is_auto_canonical_edge(ctx, eids_row, new_eid, w, u, e_src, e_dst)
-    if app.to_add is not None:
-        add = add & app.to_add(ctx, slots[row], u, None)
-    add = add & live
-    return row, s, u, new_eid, add, total
-
-
-def inspect_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap):
-    _, _, _, _, add, total = _edge_candidates(ctx, app, v0, vid, his, eid,
-                                              n_valid, cand_cap)
-    return total, jnp.sum(add.astype(jnp.int32))
-
-
-def candidate_bound_edge(ctx, app, v0, vid, his, n_valid):
-    slots, fresh = edge_vertex_slots(v0, vid, his)
-    cap = slots.shape[0]
-    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-    deg = jnp.where(fresh & valid[:, None], ctx.degree(slots), 0)
-    return jnp.sum(deg)
-
-
-def extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap, out_cap):
-    """Produce the next edge-induced SoA level (vid, his, idx, eid)."""
-    row, s, u, new_eid, add, _ = _edge_candidates(
-        ctx, app, v0, vid, his, eid, n_valid, cand_cap)
-    gather, n_new = compact_mask(add, out_cap)
-    live_out = jnp.arange(out_cap) < n_new
-    level = EmbeddingLevel(
-        vid=jnp.where(live_out, u[gather], -1).astype(jnp.int32),
-        idx=jnp.where(live_out, row[gather], 0).astype(jnp.int32),
-        n=n_new,
-        his=jnp.where(live_out, s[gather], 0).astype(jnp.int32),
-        eid=jnp.where(live_out, new_eid[gather], -1).astype(jnp.int32),
-    )
-    return level
+from repro.core.phases.reference import (  # noqa: F401
+    MAX_EDGE_SLOTS,
+    candidate_bound_edge,
+    candidate_bound_vertex,
+    edge_vertex_slots,
+    extend_edge,
+    extend_vertex,
+    inspect_edge,
+    inspect_vertex,
+    vertex_add_mask,
+    vertex_ext_degrees,
+)

@@ -1,0 +1,54 @@
+"""Phase-backend registry — the pluggable seam of the mining engine.
+
+The engine resolves every extend/reduce/filter op through this registry,
+so adding an architecture target is: subclass
+:class:`~repro.core.phases.base.PhaseBackend` (or
+:class:`~repro.core.phases.reference.ReferenceBackend` for per-op
+fallback), override the ops you accelerate, and ``register_backend``.
+Built-ins:
+
+  * ``"reference"`` — pure-XLA jnp implementation of every phase.
+  * ``"pallas"``    — fused Pallas vertex-EXTEND kernel (interpret mode on
+    CPU), reference everything else.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+from repro.core.phases.base import PhaseBackend
+from repro.core.phases.reference import ReferenceBackend
+from repro.core.phases.pallas import PallasExtendBackend
+
+_REGISTRY: dict[str, Callable[[], PhaseBackend]] = {}
+_INSTANCES: dict[str, PhaseBackend] = {}
+
+BackendSpec = Union[str, PhaseBackend, None]
+
+
+def register_backend(name: str,
+                     factory: Callable[[], PhaseBackend]) -> None:
+    """Register a backend factory under ``name`` (idempotent overwrite)."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(spec: BackendSpec = None) -> PhaseBackend:
+    """Resolve a backend name (or pass through an instance)."""
+    if spec is None:
+        spec = "reference"
+    if isinstance(spec, PhaseBackend):
+        return spec
+    if spec not in _REGISTRY:
+        raise KeyError(f"unknown phase backend {spec!r}; "
+                       f"available: {available_backends()}")
+    if spec not in _INSTANCES:
+        _INSTANCES[spec] = _REGISTRY[spec]()
+    return _INSTANCES[spec]
+
+
+register_backend("reference", ReferenceBackend)
+register_backend("pallas", PallasExtendBackend)

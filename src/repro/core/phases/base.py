@@ -1,0 +1,94 @@
+"""Phase-backend interface: the paper's extend-reduce-filter as pluggable ops.
+
+Sandslash-style two-level split: the *engine* (repro.core.engine) owns the
+high-level per-level loop (inspection, capacity planning, checkpointing,
+blocking, sharding); a :class:`PhaseBackend` owns the low-level set
+operations that loop composes — candidate enumeration, ragged expansion,
+compaction, pattern reduction.  Every architecture target (XLA reference,
+fused Pallas kernels, future multi-GPU blocking / TPU tilings) is one
+backend; the engine never calls an implementation module directly.
+
+The op surface, grouped by phase:
+
+  EXTEND   candidate_bound_{vertex,edge}  cheap degree-sum upper bound
+           inspect_{vertex,edge}          exact (candidate, survivor) counts
+           extend_{vertex,edge}           produce the next SoA level
+  REDUCE   reduce_count                   classify + count support
+           reduce_domain                  FSM canonical codes + MNI support
+  FILTER   filter_levels                  support-based compaction
+  PRIMS    expand_ragged, compact_mask    the shared ragged building blocks
+
+A backend may override any subset; the registry (repro.core.phases) hands
+the engine a fully-assembled instance.  All ops must be jit-traceable with
+static capacities (no host sync) so they compose with ``shard_map`` and the
+bounded single-jit mining mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.api import GraphCtx, MiningApp
+from repro.core.embedding_list import EmbeddingLevel
+
+
+class PhaseBackend:
+    """Abstract extend/reduce/filter op set.  Subclass and register."""
+
+    name: str = "abstract"
+
+    # -- shared ragged primitives -----------------------------------------
+
+    def expand_ragged(self, counts: jnp.ndarray, capacity: int):
+        raise NotImplementedError
+
+    def compact_mask(self, mask: jnp.ndarray, capacity: int):
+        raise NotImplementedError
+
+    # -- EXTEND: vertex-induced -------------------------------------------
+
+    def candidate_bound_vertex(self, ctx: GraphCtx, app: MiningApp,
+                               emb: jnp.ndarray,
+                               n_valid: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def inspect_vertex(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                       n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
+                       cand_cap: int):
+        raise NotImplementedError
+
+    def extend_vertex(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                      n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
+                      cand_cap: int, out_cap: int, fuse_filter: bool = True):
+        raise NotImplementedError
+
+    # -- EXTEND: edge-induced ---------------------------------------------
+
+    def candidate_bound_edge(self, ctx, app, v0, vid, his, n_valid):
+        raise NotImplementedError
+
+    def inspect_edge(self, ctx, app, v0, vid, his, eid, n_valid,
+                     cand_cap: int):
+        raise NotImplementedError
+
+    def extend_edge(self, ctx, app, v0, vid, his, eid, n_valid,
+                    cand_cap: int, out_cap: int):
+        raise NotImplementedError
+
+    # -- REDUCE / FILTER ---------------------------------------------------
+
+    def reduce_count(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                     n_valid: jnp.ndarray, state: Optional[jnp.ndarray]):
+        raise NotImplementedError
+
+    def reduce_domain(self, ctx: GraphCtx, app: MiningApp,
+                      levels: list[EmbeddingLevel]):
+        raise NotImplementedError
+
+    def filter_levels(self, levels: list[EmbeddingLevel], keep: jnp.ndarray,
+                      out_cap: int) -> list[EmbeddingLevel]:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<PhaseBackend {self.name}>"

@@ -1,0 +1,75 @@
+"""Fused-Pallas phase backend: kernel-accelerated vertex EXTEND.
+
+Swaps the reference backend's candidate enumeration (``expand_ragged`` +
+three separate CSR gathers + per-hook ``isConnected`` searches) for one
+fused VMEM-tiled kernel (:mod:`repro.kernels.extend_fused`) that emits
+(parent row, candidate u, source slot, k-way connectivity bitmask) per
+candidate slot.  The ``toAdd`` filter is then evaluated from the bitmask:
+``app.to_add_bits`` when the app provides it, else the bits-based
+automorphism-canonical test — no second pass over the adjacency.
+
+Everything downstream (compaction, reduce, filter, the whole edge-induced
+pipeline) is inherited from the reference backend; per-op fallback is the
+intended composition model — a backend overrides exactly the ops it
+accelerates.
+
+Notes:
+  * ``interpret=None`` auto-selects interpreter mode off-TPU, so the same
+    backend name works on the CPU CI box and on real hardware.
+  * The kernel always binary-searches (the paper's §5.4 choice); the
+    ``search="linear"`` ablation knob only affects the reference backend.
+  * The bits-based default canonical test assumes symmetric adjacency
+    (undirected input graph).  For ``use_dag`` apps without a
+    ``to_add_bits``/``to_add`` hook, ``vertex_add_mask`` falls back to
+    re-probing the CSR with the reference canonical test (the two
+    ``isConnected`` directions differ on an oriented DAG).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import GraphCtx, MiningApp
+from repro.core.phases.reference import (ReferenceBackend, vertex_add_mask,
+                                         vertex_ext_degrees)
+from repro.kernels.extend_fused import fused_extend
+
+
+class PallasExtendBackend(ReferenceBackend):
+    """Reference pipeline with the vertex EXTEND enumeration fused."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None, block_c: int = 512):
+        self.interpret = interpret
+        self.block_c = block_c
+
+    def _use_interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.interpret
+
+    def _vertex_candidates(self, ctx: GraphCtx, app: MiningApp,
+                           emb: jnp.ndarray, n_valid: jnp.ndarray,
+                           state, cand_cap: int):
+        cap, k = emb.shape
+        deg = vertex_ext_degrees(ctx, app, emb, n_valid)
+        counts = deg.reshape(-1).astype(jnp.int32)
+        offsets = jnp.cumsum(counts)                  # inclusive prefix sum
+        starts = offsets - counts
+        total = offsets[-1].astype(jnp.int32)
+        embc = jnp.clip(emb, 0, ctx.n_vertices - 1).reshape(-1)
+        vlo = ctx.row_ptr[embc]
+        vhi = ctx.row_ptr[embc + 1]
+        row, u, src_slot, conn = fused_extend(
+            ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi,
+            k=k, cand_cap=cand_cap, n_steps=ctx.n_steps,
+            block_c=self.block_c, interpret=self._use_interpret())
+        live = jnp.arange(cand_cap, dtype=jnp.int32) < total
+        row_c = jnp.clip(row, 0, cap - 1)
+        u = jnp.where(live, u, -1)
+        conn_b = (((conn[:, None] >> jnp.arange(k, dtype=jnp.int32)[None, :])
+                   & 1).astype(bool) & live[:, None])
+        add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state,
+                              live, conn=conn_b)
+        return row_c, u, add, total

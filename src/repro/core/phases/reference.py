@@ -1,0 +1,494 @@
+"""Reference (pure-XLA) phase backend — the paper's algorithms in jnp.
+
+EXTEND is the inspection-execution candidate generation of paper §5.3:
+
+  1. *inspection*: per parent embedding, count candidate extensions
+     (degree gather, masked by ``toExtend``) and prefix-sum to obtain each
+     parent's output offset;
+  2. *expansion*: each output slot finds its (parent, rank) by binary search
+     on the offsets (``expand_ragged``) and gathers its candidate vertex
+     from CSR;
+  3. *write*: ``toAdd`` is evaluated on candidates *before* they are
+     written (the paper's loop fusion / materialization avoidance, §5.2),
+     and survivors are compacted into the next SoA level by a prefix-sum
+     scatter — conflict-free parallel writes.
+
+``inspect_*`` returns the exact candidate and survivor counts so the host
+driver can allocate exact static capacities (the recomputation-for-layout
+trade-off the paper makes for GPUs, §5.3).
+
+REDUCE implements the two support modes of §2.1 (count and domain/MNI) and
+FILTER the support-based compaction of Alg. 2.  The module-level functions
+are the single source of truth; :class:`ReferenceBackend` packages them
+behind the :class:`~repro.core.phases.base.PhaseBackend` interface, and the
+fused-kernel backends override only the enumeration step
+(:meth:`ReferenceBackend._vertex_candidates`).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import (GraphCtx, MiningApp, is_auto_canonical_edge,
+                            is_auto_canonical_vertex,
+                            is_auto_canonical_vertex_bits)
+from repro.core.embedding_list import EmbeddingLevel, materialize_edges
+from repro.core.phases.base import PhaseBackend
+from repro.core import pattern as P
+from repro.sparse.ops import compact_mask, expand_ragged
+
+_INT_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# EXTEND: vertex-induced
+
+
+def vertex_ext_degrees(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                       n_valid: jnp.ndarray) -> jnp.ndarray:
+    """Step 1: per-(parent, slot) candidate counts, masked by ``toExtend``."""
+    cap, k = emb.shape
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    if app.to_extend is not None:
+        ext = app.to_extend(ctx, emb)
+    else:
+        ext = jnp.ones((cap, k), bool)
+    ext = ext & valid[:, None]
+    return jnp.where(ext, ctx.degree(emb), 0)          # [cap, k]
+
+
+def vertex_add_mask(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                    row_c: jnp.ndarray, u: jnp.ndarray,
+                    src_slot: jnp.ndarray, state: Optional[jnp.ndarray],
+                    live: jnp.ndarray,
+                    conn: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Step 3's filter: evaluate ``toAdd`` (or the default canonical test).
+
+    When ``conn`` is given (bool[N, k], bit j = candidate u adjacent to the
+    parent's j-th vertex, as precomputed by a fused kernel) the bits-based
+    hook path is taken: ``app.to_add_bits`` if provided, else the
+    connectivity-bit variant of the automorphism-canonical test.
+    """
+    parent_emb = emb[row_c]
+    parent_state = None if state is None else state[row_c]
+    if conn is not None and app.to_add_bits is not None:
+        add = app.to_add_bits(ctx, parent_emb, u, src_slot, parent_state,
+                              conn)
+    elif app.to_add is not None:
+        add = app.to_add(ctx, parent_emb, u, src_slot, parent_state)
+    elif conn is not None and not app.use_dag:
+        add = is_auto_canonical_vertex_bits(parent_emb, u, conn, src_slot)
+    else:
+        # On an oriented DAG the two isConnected directions differ, so the
+        # precomputed conn bits (u in N(emb_j)) cannot stand in for the
+        # canonical test's emb_j-in-N(u) probes — re-probe the CSR instead.
+        add = is_auto_canonical_vertex(ctx, parent_emb, u, src_slot)
+    return add & live
+
+
+def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                       n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
+                       cand_cap: int):
+    """Steps 1+2+filter: enumerate candidate (parent, u) pairs.
+
+    Returns (parent_row i32[cand_cap], u i32[cand_cap],
+             add_mask bool[cand_cap], n_candidates i32[]).
+    """
+    cap, k = emb.shape
+    deg = vertex_ext_degrees(ctx, app, emb, n_valid)
+    slot_parent, rank, total = expand_ragged(deg.reshape(-1), cand_cap)
+    row = slot_parent // k
+    col = slot_parent % k
+    live = slot_parent >= 0
+    row_c = jnp.clip(row, 0, cap - 1)
+    v = emb[row_c, jnp.clip(col, 0, k - 1)]
+    ptr = ctx.row_ptr[jnp.clip(v, 0, ctx.n_vertices - 1)] + rank
+    u = ctx.col_idx[jnp.clip(ptr, 0, ctx.n_edges - 1)]
+    u = jnp.where(live, u, -1)
+    src_slot = jnp.clip(col, 0, k - 1).astype(jnp.int32)
+    add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state, live)
+    return row_c, u, add, total
+
+
+def inspect_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                   n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
+                   cand_cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact (n_candidates, n_survivors) for capacity planning."""
+    _, _, add, total = _vertex_candidates(ctx, app, emb, n_valid, state,
+                                          cand_cap)
+    return total, jnp.sum(add.astype(jnp.int32))
+
+
+def candidate_bound_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                           n_valid: jnp.ndarray) -> jnp.ndarray:
+    """Cheap upper bound on candidate count (degree sum) — step 1 only."""
+    return jnp.sum(vertex_ext_degrees(ctx, app, emb, n_valid))
+
+
+def finish_extend_vertex(emb: jnp.ndarray, row: jnp.ndarray, u: jnp.ndarray,
+                         add: jnp.ndarray, out_cap: int,
+                         fuse_filter: bool = True):
+    """Step 3's write: compact survivors into the next SoA level."""
+    if not fuse_filter:
+        # Materialize the full candidate list (extra HBM traffic), then
+        # filter — deliberately wasteful, for the ablation benchmark
+        # (paper Fig. 12d; what Arabesque/RStream do).
+        cand_vid = jnp.stack([row, u], axis=1)
+        cand_vid = jax.lax.optimization_barrier(cand_vid)
+        row, u = cand_vid[:, 0], cand_vid[:, 1]
+    gather, n_new = compact_mask(add, out_cap)
+    vid = jnp.where(jnp.arange(out_cap) < n_new, u[gather], -1)
+    idx = jnp.where(jnp.arange(out_cap) < n_new, row[gather], 0)
+    level = EmbeddingLevel(vid=vid.astype(jnp.int32),
+                           idx=idx.astype(jnp.int32), n=n_new)
+    new_emb = jnp.concatenate(
+        [emb[idx], vid[:, None].astype(jnp.int32)], axis=1)
+    return level, new_emb
+
+
+def extend_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                  n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
+                  cand_cap: int, out_cap: int,
+                  fuse_filter: bool = True):
+    """Produce the next SoA level (and next emb matrix)."""
+    row, u, add, _ = _vertex_candidates(ctx, app, emb, n_valid, state,
+                                        cand_cap)
+    return finish_extend_vertex(emb, row, u, add, out_cap, fuse_filter)
+
+
+# ---------------------------------------------------------------------------
+# EXTEND: edge-induced
+
+MAX_EDGE_SLOTS = 8   # static bound on vertex slots (E+1 for E <= 7)
+
+
+def edge_vertex_slots(v0: jnp.ndarray, vid: jnp.ndarray, his: jnp.ndarray
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vertex slots [cap, E+1] and first-appearance mask.
+
+    Slot 0 = v0; slot s>=1 = destination vertex of edge s-1.  A slot is
+    "fresh" iff its vertex did not appear in an earlier slot (edges closing
+    cycles repeat vertices).
+    """
+    slots = jnp.concatenate([v0[:, None], vid], axis=1)
+    n_slots = slots.shape[1]
+    fresh = jnp.ones(slots.shape, bool)
+    for s in range(1, n_slots):
+        seen = jnp.zeros(slots.shape[:1], bool)
+        for t in range(s):
+            seen = seen | (slots[:, t] == slots[:, s])
+        fresh = fresh.at[:, s].set(~seen)
+    return slots, fresh
+
+
+def _edge_candidates(ctx: GraphCtx, app: MiningApp,
+                     v0, vid, his, eid, n_valid: jnp.ndarray,
+                     cand_cap: int):
+    cap, E = vid.shape
+    slots, fresh = edge_vertex_slots(v0, vid, his)
+    n_slots = E + 1
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    ext = fresh & valid[:, None]
+    if app.to_extend is not None:
+        ext = ext & app.to_extend(ctx, slots)
+    deg = jnp.where(ext, ctx.degree(slots), 0)        # [cap, E+1]
+    slot_parent, rank, total = expand_ragged(deg.reshape(-1), cand_cap)
+    row = jnp.clip(slot_parent // n_slots, 0, cap - 1)
+    s = jnp.clip(slot_parent % n_slots, 0, n_slots - 1)
+    live = slot_parent >= 0
+    w = slots[row, s]                                  # source vertex
+    ptr = ctx.row_ptr[jnp.clip(w, 0, ctx.n_vertices - 1)] + rank
+    ptr = jnp.clip(ptr, 0, ctx.n_edges - 1)
+    u = jnp.where(live, ctx.col_idx[ptr], -1)          # destination vertex
+    new_eid = jnp.where(live, ctx.edge_uid[ptr], -1)
+
+    # endpoints of existing edges (for the shares-endpoint test)
+    eids_row = eid[row]                                # [cand, E]
+    e_uid = jnp.clip(eids_row, 0, max(ctx.n_uedges - 1, 0))
+    e_src = ctx.usrc[e_uid]
+    e_dst = ctx.udst[e_uid]
+    add = is_auto_canonical_edge(ctx, eids_row, new_eid, w, u, e_src, e_dst)
+    if app.to_add is not None:
+        add = add & app.to_add(ctx, slots[row], u, None)
+    add = add & live
+    return row, s, u, new_eid, add, total
+
+
+def inspect_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap):
+    _, _, _, _, add, total = _edge_candidates(ctx, app, v0, vid, his, eid,
+                                              n_valid, cand_cap)
+    return total, jnp.sum(add.astype(jnp.int32))
+
+
+def candidate_bound_edge(ctx, app, v0, vid, his, n_valid):
+    slots, fresh = edge_vertex_slots(v0, vid, his)
+    cap = slots.shape[0]
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    deg = jnp.where(fresh & valid[:, None], ctx.degree(slots), 0)
+    return jnp.sum(deg)
+
+
+def extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap, out_cap):
+    """Produce the next edge-induced SoA level (vid, his, idx, eid)."""
+    row, s, u, new_eid, add, _ = _edge_candidates(
+        ctx, app, v0, vid, his, eid, n_valid, cand_cap)
+    gather, n_new = compact_mask(add, out_cap)
+    live_out = jnp.arange(out_cap) < n_new
+    level = EmbeddingLevel(
+        vid=jnp.where(live_out, u[gather], -1).astype(jnp.int32),
+        idx=jnp.where(live_out, row[gather], 0).astype(jnp.int32),
+        n=n_new,
+        his=jnp.where(live_out, s[gather], 0).astype(jnp.int32),
+        eid=jnp.where(live_out, new_eid[gather], -1).astype(jnp.int32),
+    )
+    return level
+
+
+# ---------------------------------------------------------------------------
+# REDUCE: vertex-induced (count support)
+
+
+def build_adjacency(ctx: GraphCtx, emb: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise connectivity of embedding vertices: bool[N, k, k]."""
+    n, k = emb.shape
+    adj = jnp.zeros((n, k, k), bool)
+    for i in range(k):
+        for j in range(i + 1, k):
+            c = ctx.is_connected(emb[:, i], emb[:, j])
+            adj = adj.at[:, i, j].set(c).at[:, j, i].set(c)
+    return adj
+
+
+def reduce_count(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                 n_valid: jnp.ndarray, state: Optional[jnp.ndarray]):
+    """Classify + count.  Returns (p_map i32[max_patterns], pat i32[N], state)."""
+    cap = emb.shape[0]
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    if app.get_pattern is not None:
+        pat, new_state = app.get_pattern(ctx, emb, state, valid)
+    else:
+        adj = build_adjacency(ctx, emb)
+        codes = P.canonical_code(adj, None, emb.shape[1])
+        codes = jnp.where(valid, codes, _INT_MAX)
+        # +1 slot: the INT_MAX padding bucket sorts last and is dropped.
+        uniq, pat = jnp.unique(codes, size=app.max_patterns + 1,
+                               fill_value=_INT_MAX, return_inverse=True)
+        new_state = pat
+    pat = jnp.clip(pat, 0, app.max_patterns)
+    p_map = jax.ops.segment_sum(valid.astype(jnp.int32), pat,
+                                num_segments=app.max_patterns + 1)
+    return p_map[:app.max_patterns], pat.astype(jnp.int32), new_state
+
+
+# ---------------------------------------------------------------------------
+# REDUCE: edge-induced — embedding -> labeled local graph
+
+
+def edge_embedding_graph(ctx: GraphCtx, levels: list[EmbeddingLevel]):
+    """Build per-embedding labeled local graphs from the SoA prefix tree.
+
+    Returns (vert_vid i32[cap, V], labels i32[cap, V], adj bool[cap, V, V],
+             n_verts i32[cap], eids i32[cap, E]) with V = E + 1 slots;
+    vertices are in first-appearance order; pad vertices carry label
+    ``ctx.n_labels`` (one past the real alphabet).
+    """
+    v0, vid, his, eid = materialize_edges(levels)
+    cap, E = vid.shape
+    V = E + 1
+    slots, fresh = edge_vertex_slots(v0, vid, his)        # [cap, V]
+    lid_fresh = jnp.cumsum(fresh.astype(jnp.int32), axis=1) - 1
+    # local id per slot: fresh slots take their rank; stale slots copy the
+    # local id of the first earlier slot holding the same vertex.
+    lid = lid_fresh
+    for s in range(1, V):
+        match = jnp.zeros((cap,), jnp.int32) - 1
+        for t in range(s):
+            hit = (slots[:, t] == slots[:, s]) & (match < 0)
+            match = jnp.where(hit, lid[:, t], match)
+        lid = lid.at[:, s].set(jnp.where(fresh[:, s], lid[:, s], match))
+    n_verts = jnp.sum(fresh.astype(jnp.int32), axis=1)
+    # vertex ids per local slot
+    vert_vid = jnp.full((cap, V), -1, jnp.int32)
+    for s in range(V):
+        tgt = jnp.where(fresh[:, s], lid[:, s], V)  # V = scratch (dropped)
+        vert_vid = vert_vid.at[jnp.arange(cap), jnp.clip(tgt, 0, V - 1)].set(
+            jnp.where(fresh[:, s] & (tgt < V), slots[:, s],
+                      vert_vid[jnp.arange(cap), jnp.clip(tgt, 0, V - 1)]))
+    # labels (pad = n_labels)
+    if ctx.labels is not None:
+        lab = ctx.labels[jnp.clip(vert_vid, 0, ctx.n_vertices - 1)]
+    else:
+        lab = jnp.zeros((cap, V), jnp.int32)
+    arangeV = jnp.arange(V, dtype=jnp.int32)
+    is_real = arangeV[None, :] < n_verts[:, None]
+    lab = jnp.where(is_real, lab, jnp.int32(ctx.n_labels))
+    # adjacency: edge j connects lid[his_j] -- lid[j+1]
+    adj = jnp.zeros((cap, V, V), bool)
+    rows = jnp.arange(cap)
+    for j in range(E):
+        a = lid[rows, jnp.clip(his[:, j], 0, V - 1)]
+        b = lid[:, j + 1]
+        a = jnp.clip(a, 0, V - 1)
+        b = jnp.clip(b, 0, V - 1)
+        adj = adj.at[rows, a, b].set(True).at[rows, b, a].set(True)
+    return vert_vid, lab, adj, n_verts, eid
+
+
+def _decode_n_verts(codes: jnp.ndarray, k: int, n_eff: int) -> jnp.ndarray:
+    """Recover #real vertices from a packed code (pad label = n_eff - 1)."""
+    n_pairs = k * (k - 1) // 2
+    lab_part = codes >> n_pairs
+    n_real = jnp.zeros(codes.shape, jnp.int32)
+    for i in range(k - 1, -1, -1):
+        li = lab_part % n_eff
+        lab_part = lab_part // n_eff
+        n_real = n_real + (li != (n_eff - 1)).astype(jnp.int32)
+    return n_real
+
+
+def reduce_domain(ctx: GraphCtx, app: MiningApp,
+                  levels: list[EmbeddingLevel]):
+    """FSM reduce: canonical codes + MNI (domain) support.
+
+    Returns (codes i32[P], support i32[P], pat i32[cap], pat_valid bool[P])
+    with P = app.max_patterns.
+    """
+    vert_vid, lab, adj, n_verts, _ = edge_embedding_graph(ctx, levels)
+    cap, V = lab.shape
+    n_eff = ctx.n_labels + 1
+    n_valid = levels[-1].n
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+
+    perms = list(itertools.permutations(range(V)))
+    codes_all = []
+    for p in perms:
+        pl = list(p)
+        codes_all.append(P.pack_code(adj[:, pl][:, :, pl], lab[:, pl], V,
+                                     n_eff))
+    codes_all = jnp.stack(codes_all, axis=1)            # [cap, n_perms]
+    canon = jnp.min(codes_all, axis=1)
+    canon = jnp.where(valid, canon, _INT_MAX)
+    uniq, pat = jnp.unique(canon, size=app.max_patterns,
+                           fill_value=_INT_MAX, return_inverse=True)
+    pat_valid = uniq != _INT_MAX
+
+    # Domain contributions from every minimizing permutation (exact MNI).
+    inv_perms = np.argsort(np.asarray(perms), axis=1)    # [n_perms, V]
+    is_min = codes_all == canon[:, None]                 # [cap, n_perms]
+    doms, vids, oks = [], [], []
+    for pi, p in enumerate(perms):
+        inv = inv_perms[pi]
+        for l in range(V):
+            doms.append(jnp.full((cap,), int(inv[l]), jnp.int32))
+            vids.append(vert_vid[:, l])
+            oks.append(is_min[:, pi] & valid & (l < n_verts))
+    dom = jnp.stack(doms, axis=1).reshape(-1)
+    vid = jnp.stack(vids, axis=1).reshape(-1)
+    ok = jnp.stack(oks, axis=1).reshape(-1)
+    pidf = jnp.repeat(pat, len(perms) * V)
+    pidf = jnp.where(ok, pidf, app.max_patterns)         # park invalid
+
+    # distinct-count per (pattern, domain): lexsort + adjacent-unique
+    order = jnp.lexsort((vid, dom, pidf))
+    pid_s, dom_s, vid_s = pidf[order], dom[order], vid[order]
+    first = jnp.ones(pid_s.shape, bool)
+    first = first.at[1:].set((pid_s[1:] != pid_s[:-1])
+                             | (dom_s[1:] != dom_s[:-1])
+                             | (vid_s[1:] != vid_s[:-1]))
+    live = pid_s < app.max_patterns
+    bucket = jnp.clip(pid_s, 0, app.max_patterns - 1) * V + dom_s
+    distinct = jax.ops.segment_sum((first & live).astype(jnp.int32), bucket,
+                                   num_segments=app.max_patterns * V)
+    distinct = distinct.reshape(app.max_patterns, V)
+
+    n_real = _decode_n_verts(uniq, V, n_eff)
+    dom_ok = jnp.arange(V)[None, :] < n_real[:, None]
+    support = jnp.min(jnp.where(dom_ok, distinct, _INT_MAX), axis=1)
+    support = jnp.where(pat_valid, support, 0)
+    pat = jnp.where(valid, pat, app.max_patterns - 1).astype(jnp.int32)
+    return uniq, support.astype(jnp.int32), pat, pat_valid
+
+
+# ---------------------------------------------------------------------------
+# FILTER phase (paper Alg. 2 lines 14-17)
+
+
+def filter_levels(levels: list[EmbeddingLevel], keep: jnp.ndarray,
+                  out_cap: int) -> list[EmbeddingLevel]:
+    """Compact the last level by ``keep`` (support-based pruning)."""
+    last = levels[-1]
+    cap = last.vid.shape[0]
+    keep = keep & (jnp.arange(cap, dtype=jnp.int32) < last.n)
+    gather, n_new = compact_mask(keep, out_cap)
+    live = jnp.arange(out_cap) < n_new
+    new_last = EmbeddingLevel(
+        vid=jnp.where(live, last.vid[gather], -1).astype(jnp.int32),
+        idx=jnp.where(live, last.idx[gather], 0).astype(jnp.int32),
+        n=n_new,
+        his=None if last.his is None else
+            jnp.where(live, last.his[gather], 0).astype(jnp.int32),
+        eid=None if last.eid is None else
+            jnp.where(live, last.eid[gather], -1).astype(jnp.int32),
+    )
+    return levels[:-1] + [new_last]
+
+
+# ---------------------------------------------------------------------------
+# Backend assembly
+
+
+class ReferenceBackend(PhaseBackend):
+    """All phases in plain jnp — correct on any XLA target, CPU included."""
+
+    name = "reference"
+
+    # -- primitives
+    def expand_ragged(self, counts, capacity):
+        return expand_ragged(counts, capacity)
+
+    def compact_mask(self, mask, capacity):
+        return compact_mask(mask, capacity)
+
+    # -- vertex EXTEND (enumeration is the backend-swappable step)
+    def _vertex_candidates(self, ctx, app, emb, n_valid, state, cand_cap):
+        return _vertex_candidates(ctx, app, emb, n_valid, state, cand_cap)
+
+    def candidate_bound_vertex(self, ctx, app, emb, n_valid):
+        return candidate_bound_vertex(ctx, app, emb, n_valid)
+
+    def inspect_vertex(self, ctx, app, emb, n_valid, state, cand_cap):
+        _, _, add, total = self._vertex_candidates(ctx, app, emb, n_valid,
+                                                   state, cand_cap)
+        return total, jnp.sum(add.astype(jnp.int32))
+
+    def extend_vertex(self, ctx, app, emb, n_valid, state, cand_cap,
+                      out_cap, fuse_filter=True):
+        row, u, add, _ = self._vertex_candidates(ctx, app, emb, n_valid,
+                                                 state, cand_cap)
+        return finish_extend_vertex(emb, row, u, add, out_cap, fuse_filter)
+
+    # -- edge EXTEND
+    def candidate_bound_edge(self, ctx, app, v0, vid, his, n_valid):
+        return candidate_bound_edge(ctx, app, v0, vid, his, n_valid)
+
+    def inspect_edge(self, ctx, app, v0, vid, his, eid, n_valid, cand_cap):
+        return inspect_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap)
+
+    def extend_edge(self, ctx, app, v0, vid, his, eid, n_valid, cand_cap,
+                    out_cap):
+        return extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap,
+                           out_cap)
+
+    # -- REDUCE / FILTER
+    def reduce_count(self, ctx, app, emb, n_valid, state):
+        return reduce_count(ctx, app, emb, n_valid, state)
+
+    def reduce_domain(self, ctx, app, levels):
+        return reduce_domain(ctx, app, levels)
+
+    def filter_levels(self, levels, keep, out_cap):
+        return filter_levels(levels, keep, out_cap)

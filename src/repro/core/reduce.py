@@ -1,229 +1,16 @@
-"""REDUCE phase — pattern classification + support aggregation (paper §3.1).
+"""REDUCE/FILTER phases — compatibility shim.
 
-Two support modes, per the paper §2.1:
-
-* **count** (TC/CF/MC): embeddings are classified (via the app's
-  ``getPattern`` hook — customized classifiers or canonical labeling) and
-  counted per pattern with a dense segment-sum.  Cross-device aggregation
-  is a single ``psum`` of the pattern map.
-* **domain / MNI** (FSM): for each embedding, every canonical-minimizing
-  permutation contributes (pattern, domain, vertex) mappings; MNI support
-  is the per-(pattern, domain) count of *distinct* vertices, minimized over
-  the pattern's domains.  Distinct counting is sort + adjacent-unique +
-  segment-sum — the XLA replacement for the paper's concurrent domain sets.
-
-Pattern memoization (§4.2): reduce returns per-embedding pattern ids which
-the engine threads into the next level's state, so FILTER (and next-level
-classification) never re-runs an isomorphism test the way Fig. 6 describes.
+The implementation moved to :mod:`repro.core.phases.reference` (the
+pure-XLA phase backend).  This module re-exports the reference functions
+so existing imports keep working; new code should resolve ops through
+:func:`repro.core.phases.get_backend` instead.
 """
 from __future__ import annotations
 
-import itertools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.api import GraphCtx, MiningApp
-from repro.core.embedding_list import EmbeddingLevel, materialize_edges
-from repro.core.extend import edge_vertex_slots
-from repro.core import pattern as P
-
-_INT_MAX = np.int32(np.iinfo(np.int32).max)
-
-
-# ---------------------------------------------------------------------------
-# Vertex-induced reduce (count support)
-
-
-def build_adjacency(ctx: GraphCtx, emb: jnp.ndarray) -> jnp.ndarray:
-    """Pairwise connectivity of embedding vertices: bool[N, k, k]."""
-    n, k = emb.shape
-    adj = jnp.zeros((n, k, k), bool)
-    for i in range(k):
-        for j in range(i + 1, k):
-            c = ctx.is_connected(emb[:, i], emb[:, j])
-            adj = adj.at[:, i, j].set(c).at[:, j, i].set(c)
-    return adj
-
-
-def reduce_count(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                 n_valid: jnp.ndarray, state: Optional[jnp.ndarray]):
-    """Classify + count.  Returns (p_map i32[max_patterns], pat i32[N], state)."""
-    cap = emb.shape[0]
-    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-    if app.get_pattern is not None:
-        pat, new_state = app.get_pattern(ctx, emb, state, valid)
-    else:
-        adj = build_adjacency(ctx, emb)
-        codes = P.canonical_code(adj, None, emb.shape[1])
-        codes = jnp.where(valid, codes, _INT_MAX)
-        # +1 slot: the INT_MAX padding bucket sorts last and is dropped.
-        uniq, pat = jnp.unique(codes, size=app.max_patterns + 1,
-                               fill_value=_INT_MAX, return_inverse=True)
-        new_state = pat
-    pat = jnp.clip(pat, 0, app.max_patterns)
-    p_map = jax.ops.segment_sum(valid.astype(jnp.int32), pat,
-                                num_segments=app.max_patterns + 1)
-    return p_map[:app.max_patterns], pat.astype(jnp.int32), new_state
-
-
-# ---------------------------------------------------------------------------
-# Edge-induced: embedding -> labeled local graph
-
-
-def edge_embedding_graph(ctx: GraphCtx, levels: list[EmbeddingLevel]):
-    """Build per-embedding labeled local graphs from the SoA prefix tree.
-
-    Returns (vert_vid i32[cap, V], labels i32[cap, V], adj bool[cap, V, V],
-             n_verts i32[cap], eids i32[cap, E]) with V = E + 1 slots;
-    vertices are in first-appearance order; pad vertices carry label
-    ``ctx.n_labels`` (one past the real alphabet).
-    """
-    v0, vid, his, eid = materialize_edges(levels)
-    cap, E = vid.shape
-    V = E + 1
-    slots, fresh = edge_vertex_slots(v0, vid, his)        # [cap, V]
-    lid_fresh = jnp.cumsum(fresh.astype(jnp.int32), axis=1) - 1
-    # local id per slot: fresh slots take their rank; stale slots copy the
-    # local id of the first earlier slot holding the same vertex.
-    lid = lid_fresh
-    for s in range(1, V):
-        match = jnp.zeros((cap,), jnp.int32) - 1
-        for t in range(s):
-            hit = (slots[:, t] == slots[:, s]) & (match < 0)
-            match = jnp.where(hit, lid[:, t], match)
-        lid = lid.at[:, s].set(jnp.where(fresh[:, s], lid[:, s], match))
-    n_verts = jnp.sum(fresh.astype(jnp.int32), axis=1)
-    # vertex ids per local slot
-    vert_vid = jnp.full((cap, V), -1, jnp.int32)
-    for s in range(V):
-        tgt = jnp.where(fresh[:, s], lid[:, s], V)  # V = scratch (dropped)
-        vert_vid = vert_vid.at[jnp.arange(cap), jnp.clip(tgt, 0, V - 1)].set(
-            jnp.where(fresh[:, s] & (tgt < V), slots[:, s],
-                      vert_vid[jnp.arange(cap), jnp.clip(tgt, 0, V - 1)]))
-    # labels (pad = n_labels)
-    if ctx.labels is not None:
-        lab = ctx.labels[jnp.clip(vert_vid, 0, ctx.n_vertices - 1)]
-    else:
-        lab = jnp.zeros((cap, V), jnp.int32)
-    arangeV = jnp.arange(V, dtype=jnp.int32)
-    is_real = arangeV[None, :] < n_verts[:, None]
-    lab = jnp.where(is_real, lab, jnp.int32(ctx.n_labels))
-    # adjacency: edge j connects lid[his_j] -- lid[j+1]
-    adj = jnp.zeros((cap, V, V), bool)
-    rows = jnp.arange(cap)
-    for j in range(E):
-        a = lid[rows, jnp.clip(his[:, j], 0, V - 1)]
-        b = lid[:, j + 1]
-        a = jnp.clip(a, 0, V - 1)
-        b = jnp.clip(b, 0, V - 1)
-        adj = adj.at[rows, a, b].set(True).at[rows, b, a].set(True)
-    return vert_vid, lab, adj, n_verts, eid
-
-
-# ---------------------------------------------------------------------------
-# Domain (MNI) support
-
-
-def _decode_n_verts(codes: jnp.ndarray, k: int, n_eff: int) -> jnp.ndarray:
-    """Recover #real vertices from a packed code (pad label = n_eff - 1)."""
-    n_pairs = k * (k - 1) // 2
-    lab_part = codes >> n_pairs
-    n_real = jnp.zeros(codes.shape, jnp.int32)
-    for i in range(k - 1, -1, -1):
-        li = lab_part % n_eff
-        lab_part = lab_part // n_eff
-        n_real = n_real + (li != (n_eff - 1)).astype(jnp.int32)
-    return n_real
-
-
-def reduce_domain(ctx: GraphCtx, app: MiningApp,
-                  levels: list[EmbeddingLevel]):
-    """FSM reduce: canonical codes + MNI (domain) support.
-
-    Returns (codes i32[P], support i32[P], pat i32[cap], pat_valid bool[P])
-    with P = app.max_patterns.
-    """
-    vert_vid, lab, adj, n_verts, _ = edge_embedding_graph(ctx, levels)
-    cap, V = lab.shape
-    n_eff = ctx.n_labels + 1
-    n_valid = levels[-1].n
-    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-
-    perms = list(itertools.permutations(range(V)))
-    codes_all = []
-    for p in perms:
-        pl = list(p)
-        codes_all.append(P.pack_code(adj[:, pl][:, :, pl], lab[:, pl], V,
-                                     n_eff))
-    codes_all = jnp.stack(codes_all, axis=1)            # [cap, n_perms]
-    canon = jnp.min(codes_all, axis=1)
-    canon = jnp.where(valid, canon, _INT_MAX)
-    uniq, pat = jnp.unique(canon, size=app.max_patterns,
-                           fill_value=_INT_MAX, return_inverse=True)
-    pat_valid = uniq != _INT_MAX
-
-    # Domain contributions from every minimizing permutation (exact MNI).
-    inv_perms = np.argsort(np.asarray(perms), axis=1)    # [n_perms, V]
-    is_min = codes_all == canon[:, None]                 # [cap, n_perms]
-    doms, vids, oks = [], [], []
-    arangeV = np.arange(V)
-    for pi, p in enumerate(perms):
-        inv = inv_perms[pi]
-        for l in range(V):
-            doms.append(jnp.full((cap,), int(inv[l]), jnp.int32))
-            vids.append(vert_vid[:, l])
-            oks.append(is_min[:, pi] & valid & (l < n_verts))
-    dom = jnp.stack(doms, axis=1).reshape(-1)
-    vid = jnp.stack(vids, axis=1).reshape(-1)
-    ok = jnp.stack(oks, axis=1).reshape(-1)
-    pidf = jnp.repeat(pat, len(perms) * V)
-    pidf = jnp.where(ok, pidf, app.max_patterns)         # park invalid
-
-    # distinct-count per (pattern, domain): lexsort + adjacent-unique
-    order = jnp.lexsort((vid, dom, pidf))
-    pid_s, dom_s, vid_s = pidf[order], dom[order], vid[order]
-    first = jnp.ones(pid_s.shape, bool)
-    first = first.at[1:].set((pid_s[1:] != pid_s[:-1])
-                             | (dom_s[1:] != dom_s[:-1])
-                             | (vid_s[1:] != vid_s[:-1]))
-    live = pid_s < app.max_patterns
-    bucket = jnp.clip(pid_s, 0, app.max_patterns - 1) * V + dom_s
-    distinct = jax.ops.segment_sum((first & live).astype(jnp.int32), bucket,
-                                   num_segments=app.max_patterns * V)
-    distinct = distinct.reshape(app.max_patterns, V)
-
-    n_real = _decode_n_verts(uniq, V, n_eff)
-    dom_ok = jnp.arange(V)[None, :] < n_real[:, None]
-    support = jnp.min(jnp.where(dom_ok, distinct, _INT_MAX), axis=1)
-    support = jnp.where(pat_valid, support, 0)
-    pat = jnp.where(valid, pat, app.max_patterns - 1).astype(jnp.int32)
-    return uniq, support.astype(jnp.int32), pat, pat_valid
-
-
-# ---------------------------------------------------------------------------
-# FILTER phase (paper Alg. 2 lines 14-17)
-
-
-def filter_levels(levels: list[EmbeddingLevel], keep: jnp.ndarray,
-                  out_cap: int) -> list[EmbeddingLevel]:
-    """Compact the last level by ``keep`` (support-based pruning)."""
-    from repro.sparse.ops import compact_mask
-
-    last = levels[-1]
-    cap = last.vid.shape[0]
-    keep = keep & (jnp.arange(cap, dtype=jnp.int32) < last.n)
-    gather, n_new = compact_mask(keep, out_cap)
-    live = jnp.arange(out_cap) < n_new
-    new_last = EmbeddingLevel(
-        vid=jnp.where(live, last.vid[gather], -1).astype(jnp.int32),
-        idx=jnp.where(live, last.idx[gather], 0).astype(jnp.int32),
-        n=n_new,
-        his=None if last.his is None else
-            jnp.where(live, last.his[gather], 0).astype(jnp.int32),
-        eid=None if last.eid is None else
-            jnp.where(live, last.eid[gather], -1).astype(jnp.int32),
-    )
-    return levels[:-1] + [new_last]
+from repro.core.phases.reference import (  # noqa: F401
+    build_adjacency,
+    edge_embedding_graph,
+    filter_levels,
+    reduce_count,
+    reduce_domain,
+)

@@ -1,5 +1,7 @@
 # Pallas TPU kernels for the compute hot spots:
 #   intersect/        binary-search adjacency intersection (TC/CF, paper §5.4)
+#   extend_fused/     fused EXTEND enumeration: offset-search ragged expand +
+#                     CSR gather + k-way toAdd probe (phases "pallas" backend)
 #   segsum/           sorted-segment reduction as one-hot MXU matmul (GNN/recsys)
 #   flash_attention/  tiled online-softmax attention (LM archs)
 # Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),

@@ -1,0 +1,2 @@
+from repro.kernels.extend_fused.ops import fused_extend
+from repro.kernels.extend_fused.ref import fused_extend_ref

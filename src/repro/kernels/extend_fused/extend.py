@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused EXTEND candidate enumeration (paper §5.3).
+
+One kernel fuses the three gather stages of inspection-execution candidate
+generation that the reference backend runs as separate XLA ops:
+
+  1. *offset search*: each output slot binary-searches the per-parent
+     prefix-sum offsets to find its (parent, rank) — the ragged expansion
+     of ``expand_ragged``, done branchlessly in VMEM instead of a
+     ``searchsorted`` over HBM;
+  2. *candidate gather*: the slot gathers its candidate vertex ``u`` from
+     the CSR adjacency chunk at ``row_ptr[v] + rank``;
+  3. *toAdd probing*: for every parent-embedding slot j, the kernel binary
+     searches ``u`` in N(emb[row, j]) (generalizing the pairwise
+     ``intersect`` kernel to k-way membership), emitting a connectivity
+     bitmask that the filter hooks (``to_add_bits`` / the bits-based
+     canonical test) consume without touching the CSR again.
+
+All arrays are VMEM-resident per the edge-blocking contract of §5.2 (the
+adjacency chunk and the [cap*k] parent tables must fit in ~16 MB); the
+grid tiles the candidate slots.  Every probe step is one vectorized
+gather + compare + select over a (1, block_c) lane tile — the same
+VPU-bound shape as ``kernels/intersect``.  Runs under ``interpret=True``
+on CPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _take(arr, idx2d):
+    """Gather a 1-D VMEM array at a [1, block] index tile."""
+    return jnp.take(arr, idx2d.reshape(-1), axis=0).reshape(idx2d.shape)
+
+
+def _fused_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
+                         col_ref, row_ref, u_ref, slot_ref, conn_ref, *,
+                         k: int, m: int, n_parents: int, n_steps: int,
+                         n_steps_p: int, block_c: int):
+    offsets = offsets_ref[...]
+    starts = starts_ref[...]
+    emb_flat = emb_ref[...]
+    vlo = vlo_ref[...]
+    vhi = vhi_ref[...]
+    col = col_ref[...]
+
+    i = pl.program_id(0)
+    slot = (i * block_c
+            + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1))
+
+    # stage 1 — searchsorted-right on the inclusive prefix sum:
+    # parent p = first index with offsets[p] > slot (branchless)
+    low = jnp.zeros_like(slot)
+    high = jnp.full_like(slot, n_parents - 1)
+    for _ in range(n_steps_p):
+        mid = (low + high) >> 1
+        val = _take(offsets, jnp.clip(mid, 0, n_parents - 1))
+        go_right = val <= slot
+        low = jnp.where(go_right, mid + 1, low)
+        high = jnp.where(go_right, high, mid - 1)
+    p = jnp.clip(low, 0, n_parents - 1)
+    row = p // k
+    src_slot = p % k
+
+    # stage 2 — candidate gather from the CSR chunk
+    rank = slot - _take(starts, p)
+    ptr = _take(vlo, p) + rank
+    u = _take(col, jnp.clip(ptr, 0, m - 1))
+
+    # stage 3 — k-way adjacency probe: conn bit j = u in N(emb[row, j])
+    # (bitwise-identical to sparse.intersect.binary_contains)
+    conn = jnp.zeros_like(slot)
+    base = row * k
+    for j in range(k):
+        pj = jnp.clip(base + j, 0, n_parents - 1)
+        lo_b = _take(vlo, pj)
+        hi_b = _take(vhi, pj)
+        ev = _take(emb_flat, pj)
+        lo_s, hi_s = lo_b, hi_b - 1
+        for _ in range(max(n_steps, 1)):
+            mid = (lo_s + hi_s) >> 1
+            val = _take(col, jnp.clip(mid, 0, m - 1))
+            go_right = val < u
+            lo_s = jnp.where(go_right, mid + 1, lo_s)
+            hi_s = jnp.where(go_right, hi_s, mid - 1)
+        probe = jnp.clip(lo_s, 0, m - 1)
+        found = (_take(col, probe) == u) & (lo_s < hi_b) & (lo_b < hi_b)
+        found = found & (ev >= 0) & (u >= 0)
+        conn = conn | (found.astype(jnp.int32) << j)
+
+    row_ref[...] = row.reshape(block_c)
+    u_ref[...] = u.reshape(block_c)
+    slot_ref[...] = src_slot.reshape(block_c)
+    conn_ref[...] = conn.reshape(block_c)
+
+
+def fused_extend_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
+                        starts: jnp.ndarray, emb_flat: jnp.ndarray,
+                        vlo: jnp.ndarray, vhi: jnp.ndarray, *,
+                        k: int, cand_cap: int, n_steps: int,
+                        block_c: int = 512, interpret: bool = False):
+    """Raw fused-extend call.  All parent tables are [cap*k] flattened.
+
+    Returns (row, u, src_slot, conn) each i32[cand_cap]; slots past the
+    true candidate total carry well-defined garbage (clipped last parent)
+    that the caller masks with ``slot < total`` — same contract as
+    ``expand_ragged``.
+    """
+    n_parents = offsets.shape[0]
+    m = col_idx.shape[0]
+    p_pad = -(-n_parents // 128) * 128
+
+    def pad_p(x):
+        return jnp.pad(x, (0, p_pad - n_parents))
+
+    offsets, starts, emb_flat, vlo, vhi = map(
+        pad_p, (offsets.astype(jnp.int32), starts.astype(jnp.int32),
+                emb_flat.astype(jnp.int32), vlo.astype(jnp.int32),
+                vhi.astype(jnp.int32)))
+    m_pad = -(-m // 128) * 128
+    col = jnp.pad(col_idx, (0, m_pad - m), constant_values=2**31 - 1)
+    c_pad = -(-cand_cap // block_c) * block_c
+    n_steps_p = max(1, math.ceil(math.log2(n_parents + 1)))
+
+    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    tile = pl.BlockSpec((block_c,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((c_pad,), jnp.int32)
+    row, u, src_slot, conn = pl.pallas_call(
+        functools.partial(_fused_extend_kernel, k=k, m=m,
+                          n_parents=n_parents, n_steps=n_steps,
+                          n_steps_p=n_steps_p, block_c=block_c),
+        grid=(c_pad // block_c,),
+        in_specs=[full(p_pad)] * 5 + [full(m_pad)],
+        out_specs=[tile] * 4,
+        out_shape=[out] * 4,
+        interpret=interpret,
+    )(offsets, starts, emb_flat, vlo, vhi, col)
+    return row[:cand_cap], u[:cand_cap], src_slot[:cand_cap], conn[:cand_cap]

@@ -1,0 +1,23 @@
+"""Jitted public wrapper for the fused extend kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.extend_fused.extend import fused_extend_pallas
+
+
+@partial(jax.jit, static_argnames=("k", "cand_cap", "n_steps", "block_c",
+                                   "interpret"))
+def fused_extend(col_idx, offsets, starts, emb_flat, vlo, vhi, *, k: int,
+                 cand_cap: int, n_steps: int, block_c: int = 512,
+                 interpret: bool = False):
+    """Fused ragged-expand + CSR gather + k-way adjacency probe.
+
+    Returns (row, u, src_slot, conn_bits) each i32[cand_cap]; see
+    :func:`repro.kernels.extend_fused.extend.fused_extend_pallas`.
+    """
+    return fused_extend_pallas(col_idx, offsets, starts, emb_flat, vlo, vhi,
+                               k=k, cand_cap=cand_cap, n_steps=n_steps,
+                               block_c=block_c, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused extend kernel (same outputs, XLA ops)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sparse.intersect import binary_contains
+
+
+def fused_extend_ref(col_idx, offsets, starts, emb_flat, vlo, vhi, *,
+                     k: int, cand_cap: int, n_steps: int):
+    n_parents = offsets.shape[0]
+    m = col_idx.shape[0]
+    slots = jnp.arange(cand_cap, dtype=jnp.int32)
+    p = jnp.searchsorted(offsets, slots, side="right").astype(jnp.int32)
+    p = jnp.clip(p, 0, n_parents - 1)
+    row = p // k
+    src_slot = p % k
+    rank = slots - starts[p]
+    ptr = vlo[p] + rank
+    u = col_idx[jnp.clip(ptr, 0, m - 1)]
+    conn = jnp.zeros((cand_cap,), jnp.int32)
+    for j in range(k):
+        pj = jnp.clip(row * k + j, 0, n_parents - 1)
+        found = binary_contains(col_idx, vlo[pj], vhi[pj], u, n_steps)
+        found = found & (emb_flat[pj] >= 0) & (u >= 0)
+        conn = conn | (found.astype(jnp.int32) << j)
+    return row, u, src_slot, conn

@@ -53,6 +53,10 @@ def main(argv=None):
     ap.add_argument("--labels", type=int, default=None)
     ap.add_argument("--minsup", type=int, default=100)
     ap.add_argument("--block-size", type=int, default=None)
+    ap.add_argument("--backend", default=None,
+                    help="phase backend: reference | pallas | any "
+                         "registered (default: the app's preference, "
+                         "else reference)")
     ap.add_argument("--fused-tc", action="store_true",
                     help="DAG+intersection fused triangle count")
     ap.add_argument("--stats", action="store_true")
@@ -67,7 +71,11 @@ def main(argv=None):
         print(f"[mine] fused TC: {n} triangles in {time.time()-t0:.3f}s")
         return
     app = make_app(args.app, args.minsup)
-    miner = Miner(g, app)
+    from repro.core import available_backends
+    if args.backend is not None and args.backend not in available_backends():
+        raise SystemExit(f"unknown backend {args.backend!r} "
+                         f"(available: {', '.join(available_backends())})")
+    miner = Miner(g, app, backend=args.backend)
     t0 = time.time()
     r = miner.run(block_size=args.block_size, collect_stats=args.stats)
     dt = time.time() - t0

@@ -1,0 +1,79 @@
+"""Hypothesis compatibility layer for bare environments.
+
+The tier-1 suite must run on a box with nothing but pytest + jax installed.
+When the real ``hypothesis`` package is available we re-export it verbatim;
+otherwise a minimal deterministic fallback provides the small strategy
+subset these tests use (integers, floats, booleans, sampled_from, lists),
+running each ``@given`` test on ``max_examples`` seeded random draws.
+"""
+from __future__ import annotations
+
+try:                                           # pragma: no cover
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    strategies = _Strategies()
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_max_examples", 10)
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for _ in range(n):
+                    drawn = {k: s.draw(rng)
+                             for k, s in strategy_kwargs.items()}
+                    fn(*args, **kwargs, **drawn)
+            # pytest must not mistake the drawn params for fixtures
+            sig = inspect.signature(fn)
+            left = [p for name, p in sig.parameters.items()
+                    if name not in strategy_kwargs]
+            wrapper.__signature__ = sig.replace(parameters=left)
+            return wrapper
+        return deco
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            # @settings sits above @given's wrapper; stash the budget on the
+            # innermost function so given() can read it either way.
+            target = getattr(fn, "__wrapped__", fn)
+            target._max_examples = max_examples
+            fn._max_examples = max_examples
+            return fn
+        return deco

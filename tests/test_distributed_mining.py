@@ -28,9 +28,9 @@ def test_sharded_tc_and_mc_match_single_device():
         import jax, numpy as np
         from repro.graph import generators as G
         from repro.core import Miner, make_tc_app, make_mc_app, mine_sharded
+        from repro.launch.mesh import make_mesh
         g = G.erdos_renyi(40, 0.2, seed=3)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         ref_tc = Miner(g, make_tc_app()).run().count
         cnt, _, ovf = mine_sharded(g, make_tc_app(), mesh, ((2048, 1024),))
         assert cnt == ref_tc and not ovf, (cnt, ref_tc, ovf)
@@ -48,9 +48,9 @@ def test_sharded_overflow_detection():
         import jax
         from repro.graph import generators as G
         from repro.core import make_tc_app, mine_sharded
+        from repro.launch.mesh import make_mesh
         g = G.erdos_renyi(40, 0.2, seed=3)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         _, _, ovf = mine_sharded(g, make_tc_app(), mesh, ((8, 4),))
         assert ovf
         print("OK")

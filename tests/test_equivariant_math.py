@@ -2,7 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="equivariant property sweeps need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.gnn.equivariant import (block_diag_wigner,
                                           cg_coefficients,

@@ -1,7 +1,7 @@
 """Graph substrate: CSR, DAG orientation, generators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.graph import generators as G
 from repro.graph.csr import from_edge_list, neighbors_np, to_networkx

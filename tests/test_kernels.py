@@ -5,7 +5,7 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.graph import generators as G
 from repro.kernels.flash_attention.ops import flash_attention

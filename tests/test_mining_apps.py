@@ -1,7 +1,7 @@
 """End-to-end mining correctness vs brute-force oracles (paper's four apps)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from oracles import clique_count, fsm_supports, motif_counts, triangle_count
 from repro.core import (Miner, make_cf_app, make_fsm_app, make_mc_app,

@@ -1,0 +1,212 @@
+"""Phase-backend layer: registry semantics, reference/pallas parity on the
+mining apps, fused-kernel unit checks, and ragged-primitive edge cases."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from oracles import motif_counts, triangle_count
+from repro.core import (Miner, available_backends, bounded_mine_vertex,
+                        get_backend, make_cf_app, make_mc_app, make_tc_app)
+from repro.core.phases import PhaseBackend, register_backend
+from repro.core.phases.pallas import PallasExtendBackend
+from repro.core.phases.reference import ReferenceBackend
+from repro.graph import generators as G
+from repro.graph.csr import to_networkx
+from repro.kernels.extend_fused import fused_extend, fused_extend_ref
+from repro.sparse.ops import compact_mask, expand_ragged
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_registry_contents():
+    names = available_backends()
+    assert "reference" in names and "pallas" in names
+    assert isinstance(get_backend("reference"), ReferenceBackend)
+    assert isinstance(get_backend("pallas"), PallasExtendBackend)
+    assert get_backend(None).name == "reference"
+
+
+def test_registry_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown phase backend"):
+        get_backend("cuda-someday")
+
+
+def test_registry_instance_passthrough_and_custom():
+    inst = PallasExtendBackend(interpret=True)
+    assert get_backend(inst) is inst
+
+    class NullBackend(PhaseBackend):
+        name = "null"
+
+    register_backend("null", NullBackend)
+    try:
+        assert isinstance(get_backend("null"), NullBackend)
+    finally:
+        from repro.core.phases import _INSTANCES, _REGISTRY
+        _REGISTRY.pop("null", None)
+        _INSTANCES.pop("null", None)
+
+
+def test_app_level_backend_preference(er_graph):
+    app = make_tc_app()
+    import dataclasses
+    app_p = dataclasses.replace(app, backend="pallas")
+    m = Miner(er_graph, app_p)
+    assert m.backend.name == "pallas"
+    # Miner override wins over the app preference
+    assert Miner(er_graph, app_p, backend="reference").backend.name == \
+        "reference"
+
+
+# -- backend parity on the mining apps --------------------------------------
+
+@pytest.mark.parametrize("seed,n,p", [(0, 12, 0.4), (3, 20, 0.3),
+                                      (7, 30, 0.2), (11, 25, 0.35)])
+def test_parity_tc_random_graphs(seed, n, p):
+    g = G.erdos_renyi(n, p, seed=seed)
+    ref = triangle_count(to_networkx(g))
+    assert Miner(g, make_tc_app()).run().count == ref
+    assert Miner(g, make_tc_app(), backend="pallas").run().count == ref
+
+
+@pytest.mark.parametrize("k", [3, 4, 5])
+def test_parity_clique(er_graph, k):
+    r = Miner(er_graph, make_cf_app(k)).run().count
+    p = Miner(er_graph, make_cf_app(k), backend="pallas").run().count
+    assert r == p
+
+
+@pytest.mark.parametrize("use_dag,eager", [(True, True), (True, False),
+                                           (False, True), (False, False)])
+def test_parity_clique_ablation_modes(er_graph, use_dag, eager):
+    app = make_cf_app(3, use_dag=use_dag, eager_prune=eager)
+    r = Miner(er_graph, app).run().count
+    p = Miner(er_graph, app, backend="pallas").run().count
+    assert r == p
+
+
+def test_parity_dag_app_without_add_hooks(er_graph):
+    """use_dag app with neither to_add nor to_add_bits: the pallas backend
+    must fall back to the CSR-probing canonical test (conn bits have the
+    wrong isConnected direction on an oriented DAG)."""
+    import dataclasses
+    app = dataclasses.replace(make_cf_app(3), to_add=None, to_add_bits=None)
+    assert app.use_dag
+    r = Miner(er_graph, app).run().count
+    p = Miner(er_graph, app, backend="pallas").run().count
+    assert r == p
+
+
+@pytest.mark.parametrize("k", [3, 4])
+def test_parity_motifs(er_graph, er_nx, k):
+    rm = np.asarray(Miner(er_graph, make_mc_app(k)).run().p_map)
+    pm = np.asarray(
+        Miner(er_graph, make_mc_app(k), backend="pallas").run().p_map)
+    assert (rm == pm).all()
+    ref = motif_counts(er_nx, k)
+    assert all(int(pm[i]) == ref.get(i, 0) for i in ref)
+
+
+@pytest.mark.parametrize("seed", [1, 5, 9])
+def test_parity_motifs_random_graphs(seed):
+    g = G.erdos_renyi(16, 0.3, seed=seed)
+    rm = np.asarray(Miner(g, make_mc_app(4)).run().p_map)
+    pm = np.asarray(Miner(g, make_mc_app(4), backend="pallas").run().p_map)
+    assert (rm == pm).all()
+
+
+def test_parity_bounded_mode(er_graph):
+    app = make_tc_app()
+    m = Miner(er_graph, app)
+    src, dst = m.init_edges()
+    n = int(src.shape[0])
+    cnt_r, pm_r, ovf_r = bounded_mine_vertex(m.ctx, app, src, dst, n,
+                                             ((4096, 2048),))
+    cnt_p, pm_p, ovf_p = bounded_mine_vertex(m.ctx, app, src, dst, n,
+                                             ((4096, 2048),),
+                                             backend="pallas")
+    assert int(cnt_r) == int(cnt_p) and not bool(ovf_p)
+    assert (np.asarray(pm_r) == np.asarray(pm_p)).all()
+
+
+def test_parity_edge_blocking(er_graph):
+    ref = Miner(er_graph, make_tc_app()).run().count
+    got = Miner(er_graph, make_tc_app(),
+                backend="pallas").run(block_size=37).count
+    assert got == ref
+
+
+# -- fused kernel vs jnp oracle ----------------------------------------------
+
+def _kernel_inputs(g, emb):
+    rp = jnp.asarray(g.row_ptr)
+    embc = jnp.clip(emb, 0, g.n_vertices - 1).reshape(-1)
+    vlo = rp[embc]
+    vhi = rp[embc + 1]
+    deg = jnp.where((emb >= 0).reshape(-1), vhi - vlo, 0).astype(jnp.int32)
+    offsets = jnp.cumsum(deg)
+    starts = offsets - deg
+    n_steps = max(1, math.ceil(math.log2(g.max_degree + 1)))
+    return offsets, starts, emb.reshape(-1), vlo, vhi, n_steps
+
+
+@pytest.mark.parametrize("block_c", [128, 512])
+def test_fused_extend_kernel_matches_ref(block_c):
+    g = G.erdos_renyi(40, 0.25, seed=6)
+    rng = np.random.default_rng(0)
+    emb = jnp.asarray(rng.integers(0, 40, size=(50, 3)), jnp.int32)
+    offsets, starts, emb_flat, vlo, vhi, n_steps = _kernel_inputs(g, emb)
+    cand_cap = int(offsets[-1]) + 17        # capacity past the total
+    args = (g.col_idx, offsets, starts, emb_flat, vlo, vhi)
+    kw = dict(k=3, cand_cap=cand_cap, n_steps=n_steps)
+    ref = fused_extend_ref(*args, **kw)
+    got = fused_extend(*args, **kw, block_c=block_c, interpret=True)
+    for r, o in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+def test_fused_extend_kernel_truncation():
+    """cand_cap below the true total truncates but stays slot-exact."""
+    g = G.erdos_renyi(30, 0.4, seed=2)
+    rng = np.random.default_rng(1)
+    emb = jnp.asarray(rng.integers(0, 30, size=(20, 2)), jnp.int32)
+    offsets, starts, emb_flat, vlo, vhi, n_steps = _kernel_inputs(g, emb)
+    cand_cap = max(int(offsets[-1]) // 2, 8)
+    args = (g.col_idx, offsets, starts, emb_flat, vlo, vhi)
+    kw = dict(k=2, cand_cap=cand_cap, n_steps=n_steps)
+    ref = fused_extend_ref(*args, **kw)
+    got = fused_extend(*args, **kw, interpret=True)
+    for r, o in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+# -- ragged primitive edge cases ---------------------------------------------
+
+def test_expand_ragged_all_zero_counts():
+    parent, rank, total = expand_ragged(jnp.zeros((6,), jnp.int32), 8)
+    assert int(total) == 0
+    assert (np.asarray(parent) == -1).all()
+    assert (np.asarray(rank) == 0).all()
+
+
+def test_expand_ragged_capacity_overflow_truncates():
+    counts = jnp.asarray([3, 2, 4], jnp.int32)       # total 9, capacity 5
+    parent, rank, total = expand_ragged(counts, 5)
+    assert int(total) == 9                            # true total reported
+    assert np.asarray(parent).tolist() == [0, 0, 0, 1, 1]
+    assert np.asarray(rank).tolist() == [0, 1, 2, 0, 1]
+
+
+def test_compact_mask_all_false():
+    gather, n = compact_mask(jnp.zeros((5,), bool), 4)
+    assert int(n) == 0
+    assert (np.asarray(gather) == 0).all()            # padding points at 0
+
+
+def test_compact_mask_capacity_overflow_truncates():
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1], bool)   # 5 survivors, cap 3
+    gather, n = compact_mask(mask, 3)
+    assert int(n) == 5                                # true count reported
+    assert np.asarray(gather).tolist() == [0, 2, 3]   # first 3 survivors

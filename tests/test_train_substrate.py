@@ -131,8 +131,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.train.compression import psum_grads
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("data",))
 x = jnp.linspace(-1, 1, 4 * 32).reshape(4, 32)
 def f(xs, comp):
     return psum_grads(xs[0], "data", comp)
