@@ -1,14 +1,25 @@
-"""Phase-backend comparison: reference XLA vs fused Pallas extend.
+"""Phase-backend comparison + plan-once/execute-many trajectory.
 
-Times full mining runs (jit warmed) per backend on scaling graphs and
-writes ``BENCH_backends.json`` next to the repo root so successive PRs
-accumulate a perf trajectory for the backend seam.  On this CPU box the
-pallas backend runs the fused kernel in interpret mode — the point is the
+Times full mining runs per backend on scaling graphs and writes
+``BENCH_backends.json`` next to the repo root so successive PRs accumulate
+a perf trajectory for the backend seam.  On this CPU box the pallas
+backend runs the fused kernel in interpret mode — the point is the
 trajectory and the parity check, not CPU speed; on TPU the same JSON
 records the compiled kernel.
+
+Each (graph, app, backend) cell records four timings:
+
+  cold_plan_s  — first run wall clock: per-level jit compiles + host
+                 inspection + execution (what a fresh process pays)
+  host_run_s   — warmed host-inspection path (collect_stats forces it):
+                 the per-level sync cost the plan executor eliminates
+  warm_plan_s  — steady state: the compiled plan executor, one jit call
+                 per run, no per-level host sync
+  seconds      — legacy field, = warm_plan_s (kept for trajectory tools)
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import time
@@ -36,6 +47,10 @@ def apps():
             ("3-mc", lambda: make_mc_app(3))]
 
 
+def _result_key(r):
+    return (int(r.count) if r.p_map is None else [int(x) for x in r.p_map])
+
+
 def run(small: bool = True) -> list[str]:
     out = []
     records = []
@@ -44,23 +59,36 @@ def run(small: bool = True) -> list[str]:
             baseline = None
             for backend in BACKENDS:
                 m = Miner(g, make_app(), backend=backend)
-                m.run()                      # warm the jit cache
+                # cold: first-ever run (compiles + inspects + executes)
                 t0 = time.perf_counter()
-                r = m.run()
-                dt = time.perf_counter() - t0
-                result = (int(r.count) if r.p_map is None
-                          else [int(x) for x in r.p_map])
+                r_cold = m.run()
+                cold = time.perf_counter() - t0
+                # host path, jits warm: the per-level sync being replaced
+                t0 = time.perf_counter()
+                m.run(collect_stats=True)    # collect_stats forces host
+                host = time.perf_counter() - t0
+                m.run()                      # compiles the plan executor
+                t0 = time.perf_counter()
+                r = m.run()                  # steady state: one jit call
+                warm = time.perf_counter() - t0
+                result = _result_key(r)
+                assert result == _result_key(r_cold), \
+                    f"plan executor diverged from host run: {aname}/{gname}"
                 if baseline is None:
                     baseline = result
-                derived = f"match={result == baseline}"
-                out.append(emit(f"backends/{aname}/{gname}/{backend}", dt,
+                derived = (f"match={result == baseline};"
+                           f"host={host * 1e6:.0f}us;"
+                           f"cold={cold * 1e6:.0f}us")
+                out.append(emit(f"backends/{aname}/{gname}/{backend}", warm,
                                 derived))
                 records.append({"graph": gname, "app": aname,
-                                "backend": backend, "seconds": dt,
+                                "backend": backend, "seconds": warm,
+                                "cold_plan_s": cold, "host_run_s": host,
+                                "warm_plan_s": warm,
                                 "n_vertices": g.n_vertices,
                                 "n_edges": g.n_edges // 2,
                                 "matches_reference": result == baseline})
-    OUT_PATH.write_text(json.dumps({"schema": 1, "records": records},
+    OUT_PATH.write_text(json.dumps({"schema": 2, "records": records},
                                    indent=2))
     print(f"# wrote {OUT_PATH}")
     bad = [r for r in records if not r["matches_reference"]]
@@ -70,4 +98,9 @@ def run(small: bool = True) -> list[str]:
 
 
 if __name__ == "__main__":
-    run(small=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke mode: small graphs only")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(small=args.small)

@@ -1,6 +1,10 @@
 # Pangolin core: the paper's extend-reduce-filter mining engine in JAX.
 from repro.core.api import GraphCtx, MiningApp, make_ctx
-from repro.core.engine import Miner, MineResult, bounded_mine_vertex, mine_sharded
+from repro.core.engine import (Miner, MineResult, bounded_mine_edge,
+                               bounded_mine_vertex, mine_sharded,
+                               run_level_loop)
+from repro.core.plan import (HostCapPolicy, MiningExecutor, MiningPlan,
+                             PlanCache, PlanCapPolicy, plan_signature)
 from repro.core.phases import (PhaseBackend, available_backends, get_backend,
                                register_backend)
 from repro.core.apps import (make_tc_app, make_cf_app, make_mc_app,

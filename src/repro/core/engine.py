@@ -1,37 +1,48 @@
 """Execution engine (paper Alg. 1): extend -> reduce -> filter per level.
 
 The engine is the *high-level* half of the Sandslash-style split: it owns
-capacity planning, the per-level loop, blocking, checkpointing, and
-distribution, and resolves every low-level set operation through the
-phase-backend registry (:mod:`repro.core.phases`) — ``"reference"`` pure
-XLA, ``"pallas"`` fused kernels, or any registered custom backend.
+the per-level loop, blocking, checkpointing, and distribution, and
+resolves every low-level set operation through the phase-backend registry
+(:mod:`repro.core.phases`) — ``"reference"`` pure XLA, ``"pallas"`` fused
+kernels, or any registered custom backend.
 
-Two modes:
+Capacity planning is factored out of the loop (plan-once / execute-many,
+:mod:`repro.core.plan`): there is exactly **one** level loop
+(:func:`run_level_loop`, shared by the vertex- and edge-induced pipeline
+adapters), and a *capacity policy* decides how each level's static buffer
+capacities are obtained:
 
-* :class:`Miner` — the host driver.  Per level it runs the *inspection*
-  jit (exact candidate/survivor counts), allocates exact static capacities
-  (bucketed to powers of two so retraces are logarithmic), then runs the
-  *execution* jit.  This is the paper's inspection-execution applied at
-  the host/XLA boundary, and doubles as the paper's dynamic-memory story:
-  capacities replace allocators.  Vertex-induced and edge-induced mining
-  share one parameterized level loop (:meth:`Miner._run_levels`); the
-  kind-specific plumbing (frontier materialization, state threading,
-  reduce/filter policy) lives in two small pipeline adapters.
+* ``HostCapPolicy`` — the paper's inspection-execution at the host/XLA
+  boundary: per level, run the inspection jit (exact candidate/survivor
+  counts), bucket to powers of two, record the decisions.  This is how a
+  cold :meth:`Miner.run` works — and the finished run doubles as a
+  *planning pass*.
+* ``PlanCapPolicy`` — replay a recorded :class:`~repro.core.plan.MiningPlan`
+  with static capacities and **no host sync**.  The whole run becomes one
+  jit; overflow is reported as a flag (re-plan-and-retry, owned by
+  :class:`~repro.core.plan.MiningExecutor`, is the only host loop left).
 
-* :func:`bounded_mine_vertex` — a single pure-jit function with fixed
-  capacities and no host sync, used for (a) the multi-pod dry-run and
-  (b) ``shard_map`` distributed mining, where level-0 edges are sharded
-  over the ("pod", "data") mesh axes (the paper's edge blocking as the
-  distribution unit) and pattern maps are merged with one ``psum`` per
-  mining run.
+:meth:`Miner.run` compiles one :class:`~repro.core.plan.MiningExecutor`
+per (signature, cap0) and reuses it across all edge blocks of a run and
+across repeated runs; :func:`bounded_mine_vertex` /
+:func:`bounded_mine_edge` are the same loop under a ``PlanCapPolicy``,
+used directly by the multi-pod dry-run and by ``shard_map`` distribution
+(:func:`mine_sharded`), where level-0 edges are sharded over mesh axes
+(the paper's edge blocking as the distribution unit).  FSM distribution
+keeps the paper's "global support sync" exact: per-level domain bitmaps
+are psum-merged and pattern tables aligned by all-gather, so MNI support
+is computed on the union of all devices' embeddings.
 
-Fault tolerance: :meth:`Miner.run` optionally checkpoints (level, SoA
-levels, pattern map) after every level via a user callback; restart resumes
-from the last completed level (see repro.train.checkpoint).
+Fault tolerance: :meth:`Miner.run` optionally checkpoints after every
+level (unblocked: ``cb(level, levels, payload)``) or after every edge
+block (blocked: ``cb(block_index, None, {"count", "p_map"})`` with the
+accumulated totals) via a user callback; restart resumes from the last
+completed unit (see repro.train.checkpoint).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Callable, Optional
 
@@ -44,14 +55,13 @@ from repro.core.embedding_list import (EmbeddingLevel, init_level0_edge,
                                        init_level0_vertex, materialize,
                                        materialize_edges, total_bytes)
 from repro.core.phases import BackendSpec, get_backend
+from repro.core.plan import (HostCapPolicy, MiningExecutor, MiningPlan,
+                             PlanCache, PlanCapPolicy, bucket_pow2)
 from repro.graph.csr import CSRGraph
 from repro.graph.dag import orient_dag
 
-
-def _bucket(n: int, minimum: int = 128) -> int:
-    """Round up to the next power of two (bounded retrace count)."""
-    n = max(int(n), minimum)
-    return 1 << (n - 1).bit_length()
+_bucket = bucket_pow2          # back-compat alias
+_INT_MAX = np.iinfo(np.int32).max
 
 
 @dataclasses.dataclass
@@ -75,50 +85,131 @@ class MineResult:
 
 
 # ---------------------------------------------------------------------------
+# Phase-op binding: one (ctx, app, backend) triple, jitted or traceable
+
+
+class _PhaseOps:
+    """Backend phase ops bound to one (ctx, app, backend) triple.
+
+    ``jit=True`` wraps each op in its own ``jax.jit`` with static capacity
+    arguments — the host driver's mode, where per-level closures are
+    compiled once per bucketed capacity and reused across runs and blocks.
+    ``jit=False`` leaves the ops raw so a whole mining run composes into a
+    single jit (executor / ``shard_map`` / dry-run).
+    """
+
+    def __init__(self, ctx: GraphCtx, app: MiningApp, backend,
+                 fuse_filter: bool = True, materialize_fn=None,
+                 jit: bool = False):
+        self.ctx, self.app, self.backend = ctx, app, backend
+        self.fuse_filter = fuse_filter
+        self.materialize = materialize_fn or materialize
+        be = backend
+        if app.kind == "vertex":
+            def inspect(emb, n, st, *, cand_cap):
+                return be.inspect_vertex(ctx, app, emb, n, st, cand_cap)
+
+            def bound(emb, n):
+                return be.candidate_bound_vertex(ctx, app, emb, n)
+
+            def extend(emb, n, st, *, cand_cap, out_cap):
+                return be.extend_vertex(ctx, app, emb, n, st, cand_cap,
+                                        out_cap, fuse_filter=fuse_filter)
+
+            def reduce(emb, n, st):
+                return be.reduce_count(ctx, app, emb, n, st)
+
+            if jit:
+                inspect = jax.jit(inspect, static_argnames=("cand_cap",))
+                bound = jax.jit(bound)
+                extend = jax.jit(extend,
+                                 static_argnames=("cand_cap", "out_cap"))
+                reduce = jax.jit(reduce)
+            self._inspect, self._bound = inspect, bound
+            self._extend, self._reduce = extend, reduce
+        else:
+            def bound_e(v0, vid, his, n):
+                return be.candidate_bound_edge(ctx, app, v0, vid, his, n)
+
+            def inspect_e(v0, vid, his, eid, n, *, cand_cap):
+                return be.inspect_edge(ctx, app, v0, vid, his, eid, n,
+                                       cand_cap)
+
+            def extend_e(v0, vid, his, eid, n, *, cand_cap, out_cap):
+                return be.extend_edge(ctx, app, v0, vid, his, eid, n,
+                                      cand_cap, out_cap)
+
+            def reduce_e(lvls):
+                return be.reduce_domain(ctx, app, lvls)
+
+            def filter_e(lvls, keep, *, out_cap):
+                return be.filter_levels(lvls, keep, out_cap)
+
+            if jit:
+                bound_e = jax.jit(bound_e)
+                inspect_e = jax.jit(inspect_e,
+                                    static_argnames=("cand_cap",))
+                extend_e = jax.jit(extend_e,
+                                   static_argnames=("cand_cap", "out_cap"))
+                reduce_e = jax.jit(reduce_e)
+                filter_e = jax.jit(filter_e, static_argnames=("out_cap",))
+            self._bound_e, self._inspect_e = bound_e, inspect_e
+            self._extend_e, self._reduce_e = extend_e, reduce_e
+            self._filter_e = filter_e
+
+    def reduce_e(self, levels, axis_names: tuple[str, ...] = ()):
+        """Domain reduce; with mesh axes, the collective (sharded) variant."""
+        if axis_names:
+            return self.backend.reduce_domain_sharded(self.ctx, self.app,
+                                                      levels, axis_names)
+        return self._reduce_e(levels)
+
+
+# ---------------------------------------------------------------------------
 # Pipeline adapters: the kind-specific plumbing around the shared level loop
 
 
 class _VertexPipeline:
     """Vertex-induced frontier: emb matrix + memo state, count reduce."""
 
-    def __init__(self, miner: "Miner", src, dst, n0):
-        self.m = miner
+    def __init__(self, ops: _PhaseOps, src, dst, n0):
+        self.ops = ops
         self.levels = init_level0_vertex(src, dst, n0)
-        self.emb = miner._materialize(self.levels)
+        self.emb = ops.materialize(self.levels)
         self.n = self.levels[0].n
-        app, ctx = miner.app, miner.ctx
+        app, ctx = ops.app, ops.ctx
         self.state = (app.init_state(ctx, self.emb, self.n)
                       if app.init_state is not None
                       else jnp.zeros(self.emb.shape[:1], jnp.int32))
         self.p_map = None
 
     def level_range(self):
-        return range(2, self.m.app.max_size)
+        return range(2, self.ops.app.max_size)
 
-    def pre_loop(self):
+    def pre_loop(self, policy):
         return None
 
     def bound(self):
-        return self.m._bound(self.emb, self.n)
+        return self.ops._bound(self.emb, self.n)
 
     def inspect(self, cand_cap: int):
-        return self.m._inspect(self.emb, self.n, self.state,
-                               cand_cap=cand_cap)
+        return self.ops._inspect(self.emb, self.n, self.state,
+                                 cand_cap=cand_cap)
 
     def extend(self, cand_cap: int, out_cap: int):
-        new_level, self.emb = self.m._extend(self.emb, self.n, self.state,
-                                             cand_cap=cand_cap,
-                                             out_cap=out_cap)
+        new_level, self.emb = self.ops._extend(self.emb, self.n, self.state,
+                                               cand_cap=cand_cap,
+                                               out_cap=out_cap)
         self.levels.append(new_level)
         self.n = new_level.n
         self.state = self.state[new_level.idx]  # memo state follows the tree
 
-    def reduce_filter(self, level: int):
-        app = self.m.app
+    def reduce_filter(self, level: int, policy):
+        app = self.ops.app
         if app.get_pattern is not None or (app.needs_reduce
                                            and level == app.max_size - 1):
-            pm, pat, self.state = self.m._reduce(self.emb, self.n,
-                                                 self.state)
+            pm, pat, self.state = self.ops._reduce(self.emb, self.n,
+                                                   self.state)
             self.p_map = pm
         else:
             self.state = jnp.zeros(self.emb.shape[:1], jnp.int32)
@@ -132,25 +223,41 @@ class _VertexPipeline:
             p_map=None if self.p_map is None else np.asarray(self.p_map),
             stats=stats, levels=self.levels)
 
+    def bounded_result(self, policy):
+        """Traceable (count, p_map, overflowed) for single-jit callers."""
+        p_map = (self.p_map if self.p_map is not None
+                 else jnp.zeros((self.ops.app.max_patterns,), jnp.int32))
+        return self.n, p_map, policy.overflow()
+
 
 class _EdgePipeline:
-    """Edge-induced frontier: (v0, vid, his, eid), domain reduce + filter."""
+    """Edge-induced frontier: (v0, vid, his, eid), domain reduce + filter.
 
-    def __init__(self, miner: "Miner"):
-        self.m = miner
-        ctx = miner.ctx
-        eid0 = jnp.arange(ctx.n_uedges, dtype=jnp.int32)
-        self.levels = init_level0_edge(ctx.usrc, ctx.udst, eid0,
-                                       ctx.n_uedges)
+    The level-0 worklist defaults to the full undirected edge list of the
+    graph context; explicit ``(src, dst, eid, n)`` arrays select a block
+    (executor path) or a per-device shard (``axis_names`` switches the
+    domain reduce to its collective variant for exact global MNI support).
+    """
+
+    def __init__(self, ops: _PhaseOps, src=None, dst=None, eid=None, n=None,
+                 axis_names: tuple[str, ...] = ()):
+        self.ops = ops
+        ctx = ops.ctx
+        if src is None:
+            src, dst = ctx.usrc, ctx.udst
+            eid = jnp.arange(ctx.n_uedges, dtype=jnp.int32)
+            n = ctx.n_uedges
+        self.levels = init_level0_edge(src, dst, eid, n)
+        self.axis_names = tuple(axis_names)
         self.codes = self.supports = None
         self._front = None        # frontier cache, one materialize per level
 
     def level_range(self):
         # k-FSM: patterns of max_size - 1 edges; level 1 is pre-loop
-        return range(2, self.m.app.max_size)
+        return range(2, self.ops.app.max_size)
 
-    def pre_loop(self):
-        self._reduce_filter()
+    def pre_loop(self, policy):
+        self._reduce_filter(policy)
         return 1                  # the initial reduce+filter is "level 1"
 
     def _frontier(self):
@@ -160,45 +267,92 @@ class _EdgePipeline:
 
     def bound(self):
         v0, vid, his, _ = self._frontier()
-        return self.m._bound_e(v0, vid, his, self.levels[-1].n)
+        return self.ops._bound_e(v0, vid, his, self.levels[-1].n)
 
     def inspect(self, cand_cap: int):
-        return self.m._inspect_e(*self._frontier(), self.levels[-1].n,
-                                 cand_cap=cand_cap)
+        return self.ops._inspect_e(*self._frontier(), self.levels[-1].n,
+                                   cand_cap=cand_cap)
 
     def extend(self, cand_cap: int, out_cap: int):
-        new_level = self.m._extend_e(*self._frontier(), self.levels[-1].n,
-                                     cand_cap=cand_cap, out_cap=out_cap)
+        new_level = self.ops._extend_e(*self._frontier(),
+                                       self.levels[-1].n,
+                                       cand_cap=cand_cap, out_cap=out_cap)
         self.levels.append(new_level)
         self._front = None
 
-    def reduce_filter(self, level: int):
-        self._reduce_filter()
+    def reduce_filter(self, level: int, policy):
+        self._reduce_filter(policy)
 
-    def _reduce_filter(self):
-        app = self.m.app
-        codes, supports, pat, _ = self.m._reduce_e(self.levels)
+    def _reduce_filter(self, policy):
+        app = self.ops.app
+        codes, supports, pat, _ = self.ops.reduce_e(self.levels,
+                                                    self.axis_names)
         self.codes, self.supports = codes, supports
         if app.needs_filter:
             sup_of = supports[jnp.clip(pat, 0, app.max_patterns - 1)]
             keep = sup_of >= app.min_support
-            n_keep = int(jnp.sum(
-                keep & (jnp.arange(keep.shape[0]) < self.levels[-1].n)))
-            self.levels = self.m._filter_e(self.levels, keep,
-                                           out_cap=_bucket(n_keep))
+            n_keep = jnp.sum(
+                (keep & (jnp.arange(keep.shape[0]) < self.levels[-1].n)
+                 ).astype(jnp.int32))
+            out_cap = policy.filter_cap(n_keep)
+            self.levels = self.ops._filter_e(self.levels, keep,
+                                             out_cap=out_cap)
             self._front = None
 
     def checkpoint_payload(self):
         return None if self.supports is None else np.asarray(self.supports)
 
     def result(self, stats) -> MineResult:
-        app = self.m.app
+        app = self.ops.app
         mask = np.asarray(self.supports) >= app.min_support
-        mask &= np.asarray(self.codes) != np.iinfo(np.int32).max
+        mask &= np.asarray(self.codes) != _INT_MAX
         return MineResult(count=int(mask.sum()),
                           codes=np.asarray(self.codes),
                           supports=np.asarray(self.supports),
                           stats=stats, levels=self.levels)
+
+    def bounded_result(self, policy):
+        """Traceable (codes, supports, overflowed) for single-jit callers."""
+        return self.codes, self.supports, policy.overflow()
+
+
+# ---------------------------------------------------------------------------
+# The one level loop (paper Alg. 1, both embedding kinds, both policies)
+
+
+def run_level_loop(pipe, policy, collect_stats: bool = False,
+                   checkpoint_cb: Optional[Callable] = None
+                   ) -> list[LevelStats]:
+    """Drive a pipeline through all levels under a capacity policy.
+
+    With a ``HostCapPolicy`` this is the classic host driver (and
+    ``collect_stats`` / ``checkpoint_cb`` are honored); with a
+    ``PlanCapPolicy`` the whole loop is jit-traceable — stats and
+    checkpoints require host sync and must be off.
+    """
+    stats: list[LevelStats] = []
+
+    def record(level, n_cand, t0):
+        last = pipe.levels[-1]
+        jax.block_until_ready(last.vid)
+        stats.append(LevelStats(level, n_cand, int(last.n),
+                                last.capacity, total_bytes(pipe.levels),
+                                time.perf_counter() - t0))
+
+    t0 = time.perf_counter()
+    pre_level = pipe.pre_loop(policy)
+    if collect_stats and pre_level is not None:
+        record(pre_level, 0, t0)
+    for level in pipe.level_range():
+        t0 = time.perf_counter()
+        cand_cap, out_cap, n_cand = policy.extend_caps(pipe)
+        pipe.extend(cand_cap, out_cap)
+        pipe.reduce_filter(level, policy)
+        if collect_stats:
+            record(level, int(n_cand), t0)
+        if checkpoint_cb is not None:
+            checkpoint_cb(level, pipe.levels, pipe.checkpoint_payload())
+    return stats
 
 
 class Miner:
@@ -208,6 +362,14 @@ class Miner:
     (and across edge blocks), so benchmark loops pay compilation once.
     ``backend`` picks the phase backend ("reference", "pallas", an
     instance, or None to honor ``app.backend``).
+
+    Plan-once / execute-many: the first :meth:`run` for a given level-0
+    capacity is a host-driven inspection pass that *records* a
+    :class:`~repro.core.plan.MiningPlan`; subsequent runs (and all edge
+    blocks after the first) replay the plan through one compiled
+    :class:`~repro.core.plan.MiningExecutor` — a single jit call per
+    block, no per-level host sync.  ``collect_stats`` / per-level
+    checkpointing force the host path (they need the sync).
     """
 
     def __init__(self, graph: CSRGraph, app: MiningApp,
@@ -223,69 +385,51 @@ class Miner:
                             with_edge_uids=(app.kind == "edge"))
         self.fuse_filter = fuse_filter
         self._materialize = materialize_fn or materialize
-        ctx, a, be = self.ctx, self.app, self.backend
-        if app.kind == "vertex":
-            self._inspect = jax.jit(
-                lambda emb, n, st, *, cand_cap: be.inspect_vertex(
-                    ctx, a, emb, n, st, cand_cap),
-                static_argnames=("cand_cap",))
-            self._bound = jax.jit(
-                lambda emb, n: be.candidate_bound_vertex(ctx, a, emb, n))
-            self._extend = jax.jit(
-                lambda emb, n, st, *, cand_cap, out_cap: be.extend_vertex(
-                    ctx, a, emb, n, st, cand_cap, out_cap,
-                    fuse_filter=self.fuse_filter),
-                static_argnames=("cand_cap", "out_cap"))
-            self._reduce = jax.jit(
-                lambda emb, n, st: be.reduce_count(ctx, a, emb, n, st))
+        self.ops = _PhaseOps(self.ctx, app, self.backend,
+                             fuse_filter=fuse_filter,
+                             materialize_fn=materialize_fn, jit=True)
+        self._executors: dict[int, MiningExecutor] = {}
+        self._digest: Optional[str] = None
+
+    # -- identity / executors ----------------------------------------------
+
+    def graph_digest(self) -> str:
+        """Cheap stable fingerprint of the (oriented) CSR arrays."""
+        if self._digest is None:
+            h = hashlib.sha1()
+            h.update(np.asarray(self.graph.row_ptr).tobytes())
+            h.update(np.asarray(self.graph.col_idx).tobytes())
+            if self.graph.labels is not None:   # FSM survivor counts
+                h.update(np.asarray(self.graph.labels).tobytes())
+            self._digest = h.hexdigest()[:16]
+        return self._digest
+
+    def executor(self, cap0: int, plan_cache: Optional[PlanCache] = None
+                 ) -> MiningExecutor:
+        """The (cached) compiled executor for level-0 capacity ``cap0``."""
+        ex = self._executors.get(cap0)
+        if ex is None:
+            ex = MiningExecutor(self, cap0, cache=plan_cache)
+            self._executors[cap0] = ex
         else:
-            self._bound_e = jax.jit(
-                lambda v0, vid, his, n: be.candidate_bound_edge(
-                    ctx, a, v0, vid, his, n))
-            self._inspect_e = jax.jit(
-                lambda v0, vid, his, eid, n, *, cand_cap: be.inspect_edge(
-                    ctx, a, v0, vid, his, eid, n, cand_cap),
-                static_argnames=("cand_cap",))
-            self._extend_e = jax.jit(
-                lambda v0, vid, his, eid, n, *, cand_cap, out_cap:
-                be.extend_edge(ctx, a, v0, vid, his, eid, n, cand_cap,
-                               out_cap),
-                static_argnames=("cand_cap", "out_cap"))
-            self._reduce_e = jax.jit(
-                lambda lvls: be.reduce_domain(ctx, a, lvls))
-            self._filter_e = jax.jit(
-                lambda lvls, keep, *, out_cap: be.filter_levels(
-                    lvls, keep, out_cap),
-                static_argnames=("out_cap",))
+            ex.attach_cache(plan_cache)
+        return ex
 
-    # -- the one level loop (paper Alg. 1, both embedding kinds) -----------
+    def plan_reports(self) -> list[dict]:
+        """Public view of the plan/executor state (for CLIs, logging)."""
+        out = []
+        for cap0, ex in sorted(self._executors.items()):
+            if ex.plan is not None:
+                out.append({"cap0": cap0, "source": ex.plan.source,
+                            "caps": list(ex.plan.caps),
+                            "filter_caps": list(ex.plan.filter_caps),
+                            "compiles": ex.n_compiles,
+                            "executions": ex.n_executions,
+                            "replans": ex.n_replans})
+        return out
 
-    def _run_levels(self, pipe, collect_stats=False,
-                    checkpoint_cb: Optional[Callable] = None) -> MineResult:
-        stats: list[LevelStats] = []
-
-        def record(level, n_cand, t0):
-            last = pipe.levels[-1]
-            jax.block_until_ready(last.vid)
-            stats.append(LevelStats(level, n_cand, int(last.n),
-                                    last.capacity, total_bytes(pipe.levels),
-                                    time.perf_counter() - t0))
-
-        t0 = time.perf_counter()
-        pre_level = pipe.pre_loop()
-        if collect_stats and pre_level is not None:
-            record(pre_level, 0, t0)
-        for level in pipe.level_range():
-            t0 = time.perf_counter()
-            cand_cap = _bucket(int(pipe.bound()))
-            n_cand, n_next = pipe.inspect(cand_cap)
-            pipe.extend(cand_cap, _bucket(int(n_next)))
-            pipe.reduce_filter(level)
-            if collect_stats:
-                record(level, int(n_cand), t0)
-            if checkpoint_cb is not None:
-                checkpoint_cb(level, pipe.levels, pipe.checkpoint_payload())
-        return pipe.result(stats)
+    def _p_map_meaningful(self) -> bool:
+        return self.app.get_pattern is not None or self.app.needs_reduce
 
     # -- public ------------------------------------------------------------
 
@@ -296,105 +440,223 @@ class Miner:
         return self.graph.undirected_edge_list()
 
     def run(self, block_size: Optional[int] = None, collect_stats=False,
-            checkpoint_cb=None) -> MineResult:
+            checkpoint_cb=None, plan_cache: Optional[str | PlanCache] = None
+            ) -> MineResult:
+        cache = (PlanCache(plan_cache) if isinstance(plan_cache, str)
+                 else plan_cache)
         if self.app.kind == "edge":
-            # paper §5.2: blocking disabled for FSM (global support sync)
-            return self._run_levels(_EdgePipeline(self),
-                                    collect_stats=collect_stats,
-                                    checkpoint_cb=checkpoint_cb)
+            # paper §5.2: blocking disabled for FSM (global support sync);
+            # the bounded/sharded FSM paths live in bounded_mine_edge.
+            return self._run_edge(collect_stats, checkpoint_cb, cache)
         src, dst = self.init_edges()
         m = int(src.shape[0])
         if not block_size or block_size >= m:
-            return self._run_levels(_VertexPipeline(self, src, dst, m),
-                                    collect_stats, checkpoint_cb)
+            return self._run_vertex_full(src, dst, m, collect_stats,
+                                         checkpoint_cb, cache)
+        return self._run_vertex_blocked(src, dst, m, block_size,
+                                        collect_stats, checkpoint_cb, cache)
+
+    # -- vertex-induced paths ----------------------------------------------
+
+    def _host_run(self, pipe, executor: MiningExecutor, collect_stats,
+                  checkpoint_cb) -> MineResult:
+        """Inspection-execution host run; records the executor's plan."""
+        policy = HostCapPolicy()
+        stats = run_level_loop(pipe, policy, collect_stats, checkpoint_cb)
+        executor.adopt_plan(policy.caps, policy.filter_caps)
+        return pipe.result(stats)
+
+    def _run_vertex_full(self, src, dst, m, collect_stats, checkpoint_cb,
+                         cache) -> MineResult:
+        cap0 = bucket_pow2(m)
+        ex = self.executor(cap0, cache)
+        if collect_stats or checkpoint_cb is not None or not ex.has_plan:
+            return self._host_run(_VertexPipeline(self.ops, src, dst, m),
+                                  ex, collect_stats, checkpoint_cb)
+        pad = cap0 - m
+        cnt, p_map = ex.execute(jnp.pad(src, (0, pad)),
+                                jnp.pad(dst, (0, pad)), m)
+        return MineResult(count=cnt,
+                          p_map=p_map if self._p_map_meaningful() else None)
+
+    def _run_vertex_blocked(self, src, dst, m, block_size, collect_stats,
+                            checkpoint_cb, cache) -> MineResult:
         # Edge blocking (§5.2): process level-0 chunks sequentially,
-        # bounding peak memory; pattern maps / counts accumulate.
+        # bounding peak memory; pattern maps / counts accumulate.  One
+        # executor compile serves every block; only the first block of a
+        # cold miner runs the host inspection pass (doubling as planner).
+        cap0 = bucket_pow2(block_size)
+        ex = self.executor(cap0, cache)
         total = 0
         p_map = None
-        stats = []
-        cap0 = _bucket(block_size)
-        for lo in range(0, m, block_size):
+        stats: list[LevelStats] = []
+        for bi, lo in enumerate(range(0, m, block_size)):
             n_blk = min(block_size, m - lo)
             pad = cap0 - n_blk
-            s = jnp.pad(jax.lax.dynamic_slice_in_dim(src, lo, n_blk), (0, pad))
-            d = jnp.pad(jax.lax.dynamic_slice_in_dim(dst, lo, n_blk), (0, pad))
-            r = self._run_levels(_VertexPipeline(self, s, d, n_blk),
-                                 collect_stats)
-            total += r.count
-            if r.p_map is not None:
-                p_map = r.p_map if p_map is None else p_map + r.p_map
-            stats.extend(r.stats)
+            s = jnp.pad(jax.lax.dynamic_slice_in_dim(src, lo, n_blk),
+                        (0, pad))
+            d = jnp.pad(jax.lax.dynamic_slice_in_dim(dst, lo, n_blk),
+                        (0, pad))
+            if collect_stats or not ex.has_plan:
+                r = self._host_run(_VertexPipeline(self.ops, s, d, n_blk),
+                                   ex, collect_stats, None)
+                cnt, pm = r.count, r.p_map
+                stats.extend(r.stats)
+            else:
+                cnt, pm_arr = ex.execute(s, d, n_blk)
+                pm = pm_arr if self._p_map_meaningful() else None
+            total += cnt
+            if pm is not None:
+                p_map = pm if p_map is None else p_map + pm
+            if checkpoint_cb is not None:
+                checkpoint_cb(bi, None, {"count": total, "p_map": p_map})
         return MineResult(count=total, p_map=p_map, stats=stats)
+
+    # -- edge-induced (FSM) path -------------------------------------------
+
+    def _run_edge(self, collect_stats, checkpoint_cb, cache) -> MineResult:
+        m = self.ctx.n_uedges
+        cap0 = bucket_pow2(m)
+        ex = self.executor(cap0, cache)
+        if collect_stats or checkpoint_cb is not None or not ex.has_plan:
+            return self._host_run(_EdgePipeline(self.ops), ex,
+                                  collect_stats, checkpoint_cb)
+        pad = cap0 - m
+        codes, supports = ex.execute_edge(
+            jnp.pad(self.ctx.usrc, (0, pad)),
+            jnp.pad(self.ctx.udst, (0, pad)),
+            jnp.pad(jnp.arange(m, dtype=jnp.int32), (0, pad)), m)
+        mask = (supports >= self.app.min_support) & (codes != _INT_MAX)
+        return MineResult(count=int(mask.sum()), codes=codes,
+                          supports=supports)
 
 
 # ---------------------------------------------------------------------------
-# Bounded single-jit mining step (dry-run / shard_map distribution)
+# Bounded single-jit mining (dry-run / shard_map distribution)
 
 
 def bounded_mine_vertex(ctx: GraphCtx, app: MiningApp,
                         src: jnp.ndarray, dst: jnp.ndarray,
                         n_valid: jnp.ndarray, caps: tuple[int, ...],
                         backend: BackendSpec = None):
-    """Whole mining run as one jittable function with static capacities.
+    """Whole vertex-induced mining run as one jittable function.
 
     caps[i] = (cand_cap, out_cap) for extension level i.  Returns
     (count i32[], p_map i32[max_patterns], overflowed bool[]).
     Capacities overflowing truncate the worklist; ``overflowed`` reports it
-    (callers re-run with bigger caps — the bounded-mode contract).
-    All phase ops resolve through the backend registry.
+    (callers re-run with bigger caps — the bounded-mode contract).  This is
+    the shared level loop under a :class:`~repro.core.plan.PlanCapPolicy`;
+    all phase ops resolve through the backend registry.
     """
     be = get_backend(backend if backend is not None else app.backend)
-    levels = init_level0_vertex(src, dst, n_valid)
-    emb = materialize(levels)
-    n = levels[0].n
-    state = (app.init_state(ctx, emb, n) if app.init_state is not None
-             else jnp.zeros(emb.shape[:1], jnp.int32))
-    overflow = jnp.zeros((), bool)
-    p_map = jnp.zeros((app.max_patterns,), jnp.int32)
-    for level in range(2, app.max_size):
-        cand_cap, out_cap = caps[level - 2]
-        total, n_next = be.inspect_vertex(ctx, app, emb, n, state, cand_cap)
-        overflow = overflow | (total > cand_cap) | (n_next > out_cap)
-        new_level, emb = be.extend_vertex(ctx, app, emb, n, state,
-                                          cand_cap, out_cap)
-        n = new_level.n
-        state = state[new_level.idx]        # memo state follows the tree
-        if app.get_pattern is not None or (app.needs_reduce
-                                           and level == app.max_size - 1):
-            p_map, _, state = be.reduce_count(ctx, app, emb, n, state)
-        else:
-            state = jnp.zeros(emb.shape[:1], jnp.int32)
-    return n, p_map, overflow
+    ops = _PhaseOps(ctx, app, be)
+    pipe = _VertexPipeline(ops, src, dst, n_valid)
+    policy = PlanCapPolicy(MiningPlan(kind="vertex", caps=tuple(caps)))
+    run_level_loop(pipe, policy)
+    return pipe.bounded_result(policy)
+
+
+def bounded_mine_edge(ctx: GraphCtx, app: MiningApp,
+                      src: jnp.ndarray, dst: jnp.ndarray,
+                      eid: jnp.ndarray, n_valid: jnp.ndarray,
+                      caps: tuple[tuple[int, int], ...],
+                      filter_caps: tuple[int, ...],
+                      backend: BackendSpec = None,
+                      axis_names: tuple[str, ...] = ()):
+    """Whole edge-induced (FSM) mining run as one jittable function.
+
+    ``(src, dst, eid)`` is the level-0 undirected-edge worklist (a block
+    or per-device shard of ``(ctx.usrc, ctx.udst, arange(n_uedges))``);
+    ``filter_caps`` are the support-filter output capacities in
+    invocation order (pre-loop first, then one per level).  Returns
+    (codes i32[max_patterns], supports i32[max_patterns],
+    overflowed bool[]).
+
+    Under ``shard_map``, pass the mesh ``axis_names``: the domain reduce
+    switches to its collective variant (pattern tables aligned by
+    all-gather, domain bitmaps merged by psum), which keeps MNI support —
+    and therefore every level's support filter — exact over the union of
+    all devices' embeddings (the paper's global support sync).
+    """
+    be = get_backend(backend if backend is not None else app.backend)
+    ops = _PhaseOps(ctx, app, be)
+    pipe = _EdgePipeline(ops, src=src, dst=dst, eid=eid, n=n_valid,
+                         axis_names=axis_names)
+    policy = PlanCapPolicy(MiningPlan(kind="edge", caps=tuple(caps),
+                                      filter_caps=tuple(filter_caps)))
+    run_level_loop(pipe, policy)
+    return pipe.bounded_result(policy)
 
 
 def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
                  caps: tuple[tuple[int, int], ...],
                  axis_names: tuple[str, ...] = ("data",),
-                 backend: BackendSpec = None):
+                 backend: BackendSpec = None,
+                 filter_caps: Optional[tuple[int, ...]] = None):
     """Distributed mining: level-0 edges sharded over mesh axes.
 
-    The graph CSR is replicated (in-memory GPM practice); each device mines
-    its edge block with :func:`bounded_mine_vertex`; one psum merges counts
-    and pattern maps.  Returns (count, p_map, overflowed) as global values.
+    The graph CSR is replicated (in-memory GPM practice); each device
+    mines its edge block with :func:`bounded_mine_vertex` (vertex apps) or
+    :func:`bounded_mine_edge` (FSM, which needs ``filter_caps``); counts
+    and pattern maps merge with one psum per run, FSM supports via the
+    collective domain reduce.  Returns global values:
+    vertex apps -> (count, p_map, overflowed);
+    edge apps   -> (count, codes, supports, overflowed).
     """
     from jax.sharding import PartitionSpec as PSpec
     from jax.experimental.shard_map import shard_map
 
-    app_dag = app
+    if app.kind == "edge" and filter_caps is None:
+        raise ValueError("sharded FSM needs filter_caps (support-filter "
+                         "output capacities per level)")
     miner = Miner(graph, app, backend=backend)  # reuse ctx preprocessing
     ctx = miner.ctx
-    src, dst = miner.init_edges()
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    spec = PSpec(axis_names)
+
+    def _blocks(arr, cap0, pad):
+        return jnp.pad(arr, (0, pad)).reshape(n_dev, cap0)
+
+    if app.kind == "edge":
+        m = ctx.n_uedges
+        per_dev = -(-m // n_dev)
+        cap0 = bucket_pow2(per_dev)
+        pad = cap0 * n_dev - m
+        counts = jnp.minimum(jnp.maximum(m - cap0 * jnp.arange(n_dev), 0),
+                             cap0).astype(jnp.int32)
+
+        def local_e(src_blk, dst_blk, eid_blk, n_blk):
+            codes, sup, ovf = bounded_mine_edge(
+                ctx, app, src_blk[0], dst_blk[0], eid_blk[0], n_blk[0],
+                caps, tuple(filter_caps), backend=miner.backend,
+                axis_names=axis_names)
+            for ax in axis_names:
+                ovf = jax.lax.pmax(ovf.astype(jnp.int32), ax).astype(bool)
+            return codes, sup, ovf
+
+        fn = shard_map(local_e, mesh=mesh, in_specs=(spec,) * 4,
+                       out_specs=(PSpec(), PSpec(), PSpec()),
+                       check_rep=False)
+        eid = jnp.arange(m, dtype=jnp.int32)
+        with mesh:
+            codes, sup, ovf = jax.jit(fn)(
+                _blocks(ctx.usrc, cap0, pad), _blocks(ctx.udst, cap0, pad),
+                _blocks(eid, cap0, pad), counts)
+        codes, sup = np.asarray(codes), np.asarray(sup)
+        cnt = int(((sup >= app.min_support)
+                   & (codes != _INT_MAX)).sum())
+        return cnt, codes, sup, bool(ovf)
+
+    src, dst = miner.init_edges()
     m = int(src.shape[0])
     per_dev = -(-m // n_dev)
-    cap0 = _bucket(per_dev)
+    cap0 = bucket_pow2(per_dev)
     pad = cap0 * n_dev - m
-    src_p = jnp.pad(src, (0, pad), constant_values=0)
-    dst_p = jnp.pad(dst, (0, pad), constant_values=0)
-    counts = jnp.minimum(jnp.maximum(m - cap0 * jnp.arange(n_dev), 0), cap0)
+    counts = jnp.minimum(jnp.maximum(m - cap0 * jnp.arange(n_dev), 0),
+                         cap0).astype(jnp.int32)
 
     def local(src_blk, dst_blk, n_blk):
-        cnt, p_map, ovf = bounded_mine_vertex(ctx, app_dag, src_blk[0],
+        cnt, p_map, ovf = bounded_mine_vertex(ctx, app, src_blk[0],
                                               dst_blk[0], n_blk[0], caps,
                                               backend=miner.backend)
         for ax in axis_names:
@@ -403,14 +665,9 @@ def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
             ovf = jax.lax.pmax(ovf.astype(jnp.int32), ax).astype(bool)
         return cnt, p_map, ovf
 
-    spec = PSpec(axis_names)
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(spec, spec, spec),
-                   out_specs=(PSpec(), PSpec(), PSpec()),
-                   check_rep=False)
-    src_b = src_p.reshape(n_dev, 1, cap0).reshape(n_dev, cap0)
-    dst_b = dst_p.reshape(n_dev, cap0)
+    fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                   out_specs=(PSpec(), PSpec(), PSpec()), check_rep=False)
     with mesh:
-        cnt, p_map, ovf = jax.jit(fn)(src_b, dst_b,
-                                      counts.astype(jnp.int32).reshape(n_dev, 1)[:, 0])
+        cnt, p_map, ovf = jax.jit(fn)(_blocks(src, cap0, pad),
+                                      _blocks(dst, cap0, pad), counts)
     return int(cnt), np.asarray(p_map), bool(ovf)

@@ -15,6 +15,7 @@ The op surface, grouped by phase:
            extend_{vertex,edge}           produce the next SoA level
   REDUCE   reduce_count                   classify + count support
            reduce_domain                  FSM canonical codes + MNI support
+           reduce_domain_sharded          same, collective (shard_map) MNI
   FILTER   filter_levels                  support-based compaction
   PRIMS    expand_ragged, compact_mask    the shared ragged building blocks
 
@@ -84,6 +85,12 @@ class PhaseBackend:
 
     def reduce_domain(self, ctx: GraphCtx, app: MiningApp,
                       levels: list[EmbeddingLevel]):
+        raise NotImplementedError
+
+    def reduce_domain_sharded(self, ctx: GraphCtx, app: MiningApp,
+                              levels: list[EmbeddingLevel],
+                              axis_names: tuple[str, ...]):
+        """FSM reduce under shard_map: exact global MNI via collectives."""
         raise NotImplementedError
 
     def filter_levels(self, levels: list[EmbeddingLevel], keep: jnp.ndarray,

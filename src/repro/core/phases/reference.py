@@ -350,19 +350,19 @@ def _decode_n_verts(codes: jnp.ndarray, k: int, n_eff: int) -> jnp.ndarray:
     return n_real
 
 
-def reduce_domain(ctx: GraphCtx, app: MiningApp,
-                  levels: list[EmbeddingLevel]):
-    """FSM reduce: canonical codes + MNI (domain) support.
+def _canonical_edge_codes(ctx: GraphCtx, app: MiningApp,
+                          levels: list[EmbeddingLevel]):
+    """Shared FSM-reduce front half: per-embedding canonical codes.
 
-    Returns (codes i32[P], support i32[P], pat i32[cap], pat_valid bool[P])
-    with P = app.max_patterns.
+    Returns (vert_vid i32[cap, V], n_verts i32[cap], valid bool[cap],
+    perms, codes_all i32[cap, n_perms], canon i32[cap]) with invalid rows'
+    canon parked at INT_MAX.
     """
     vert_vid, lab, adj, n_verts, _ = edge_embedding_graph(ctx, levels)
     cap, V = lab.shape
     n_eff = ctx.n_labels + 1
     n_valid = levels[-1].n
     valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-
     perms = list(itertools.permutations(range(V)))
     codes_all = []
     for p in perms:
@@ -372,11 +372,18 @@ def reduce_domain(ctx: GraphCtx, app: MiningApp,
     codes_all = jnp.stack(codes_all, axis=1)            # [cap, n_perms]
     canon = jnp.min(codes_all, axis=1)
     canon = jnp.where(valid, canon, _INT_MAX)
-    uniq, pat = jnp.unique(canon, size=app.max_patterns,
-                           fill_value=_INT_MAX, return_inverse=True)
-    pat_valid = uniq != _INT_MAX
+    return vert_vid, n_verts, valid, perms, codes_all, canon
 
-    # Domain contributions from every minimizing permutation (exact MNI).
+
+def _domain_contributions(vert_vid, n_verts, valid, perms, codes_all,
+                          canon, pat, park: int):
+    """Flattened (domain, vertex, bucket) triples for MNI counting.
+
+    Every minimizing permutation contributes its slot->domain assignment
+    (exact MNI); ``bucket = pat * V + domain`` with dead contributions
+    parked at ``park``.
+    """
+    cap, V = vert_vid.shape
     inv_perms = np.argsort(np.asarray(perms), axis=1)    # [n_perms, V]
     is_min = codes_all == canon[:, None]                 # [cap, n_perms]
     doms, vids, oks = [], [], []
@@ -390,27 +397,111 @@ def reduce_domain(ctx: GraphCtx, app: MiningApp,
     vid = jnp.stack(vids, axis=1).reshape(-1)
     ok = jnp.stack(oks, axis=1).reshape(-1)
     pidf = jnp.repeat(pat, len(perms) * V)
-    pidf = jnp.where(ok, pidf, app.max_patterns)         # park invalid
+    bucket = jnp.where(ok, pidf * V + dom, park)
+    return dom, vid, ok, bucket
 
-    # distinct-count per (pattern, domain): lexsort + adjacent-unique
-    order = jnp.lexsort((vid, dom, pidf))
-    pid_s, dom_s, vid_s = pidf[order], dom[order], vid[order]
-    first = jnp.ones(pid_s.shape, bool)
-    first = first.at[1:].set((pid_s[1:] != pid_s[:-1])
-                             | (dom_s[1:] != dom_s[:-1])
+
+def reduce_domain(ctx: GraphCtx, app: MiningApp,
+                  levels: list[EmbeddingLevel]):
+    """FSM reduce: canonical codes + MNI (domain) support.
+
+    Returns (codes i32[P], support i32[P], pat i32[cap], pat_valid bool[P])
+    with P = app.max_patterns.
+    """
+    vert_vid, n_verts, valid, perms, codes_all, canon = \
+        _canonical_edge_codes(ctx, app, levels)
+    cap, V = vert_vid.shape
+    n_eff = ctx.n_labels + 1
+    uniq, pat = jnp.unique(canon, size=app.max_patterns,
+                           fill_value=_INT_MAX, return_inverse=True)
+    pat_valid = uniq != _INT_MAX
+
+    # Domain contributions from every minimizing permutation (exact MNI);
+    # distinct-count per (pattern, domain) bucket: lexsort + adjacent-unique.
+    park = app.max_patterns * V
+    dom, vid, ok, bucket = _domain_contributions(
+        vert_vid, n_verts, valid, perms, codes_all, canon, pat, park)
+    order = jnp.lexsort((vid, bucket))
+    bucket_s, vid_s = bucket[order], vid[order]
+    first = jnp.ones(bucket_s.shape, bool)
+    first = first.at[1:].set((bucket_s[1:] != bucket_s[:-1])
                              | (vid_s[1:] != vid_s[:-1]))
-    live = pid_s < app.max_patterns
-    bucket = jnp.clip(pid_s, 0, app.max_patterns - 1) * V + dom_s
-    distinct = jax.ops.segment_sum((first & live).astype(jnp.int32), bucket,
-                                   num_segments=app.max_patterns * V)
-    distinct = distinct.reshape(app.max_patterns, V)
+    live = bucket_s < park
+    distinct = jax.ops.segment_sum((first & live).astype(jnp.int32),
+                                   jnp.minimum(bucket_s, park),
+                                   num_segments=park + 1)
+    distinct = distinct[:park].reshape(app.max_patterns, V)
+    return _domain_support(ctx, app, uniq, pat_valid, distinct, pat, valid,
+                           V, n_eff)
 
+
+def _domain_support(ctx, app, uniq, pat_valid, distinct, pat, valid, V,
+                    n_eff):
+    """Back half of the FSM reduce: MNI support = min over real domains."""
     n_real = _decode_n_verts(uniq, V, n_eff)
     dom_ok = jnp.arange(V)[None, :] < n_real[:, None]
     support = jnp.min(jnp.where(dom_ok, distinct, _INT_MAX), axis=1)
     support = jnp.where(pat_valid, support, 0)
     pat = jnp.where(valid, pat, app.max_patterns - 1).astype(jnp.int32)
     return uniq, support.astype(jnp.int32), pat, pat_valid
+
+
+def reduce_domain_sharded(ctx: GraphCtx, app: MiningApp,
+                          levels: list[EmbeddingLevel],
+                          axis_names: tuple[str, ...]):
+    """FSM reduce over ``shard_map``-distributed embeddings (exact MNI).
+
+    The paper disables simple blocking for FSM because MNI support needs a
+    *global* view: domain supports count distinct vertices, so per-device
+    supports cannot just be summed.  This variant keeps the level-0 edge
+    sharding and makes the reduce collective instead:
+
+      1. every device canonicalizes its local embeddings and the pattern
+         tables are aligned by all-gather + global unique (deterministic,
+         so every device holds the same code table);
+      2. domain membership is materialized as a (pattern, domain, vertex)
+         bitmap and psum-merged — the union of per-device vertex sets,
+         which is exactly the global MNI domain;
+      3. support = min over real domains of the merged distinct counts.
+
+    Because every device then filters with the same global supports, the
+    per-level support filter (Alg. 2) stays sound under distribution —
+    the paper's "global support sync".  With ``axis_names=()`` this is a
+    collective-free local reduce, numerically identical to
+    :func:`reduce_domain` (used by tests as the bitmap-path oracle).
+    """
+    vert_vid, n_verts, valid, perms, codes_all, canon = \
+        _canonical_edge_codes(ctx, app, levels)
+    cap, V = vert_vid.shape
+    n_eff = ctx.n_labels + 1
+    Pn = app.max_patterns
+
+    local_uniq = jnp.unique(canon, size=Pn, fill_value=_INT_MAX)
+    gathered = local_uniq
+    for ax in axis_names:
+        gathered = jax.lax.all_gather(gathered, ax).reshape(-1)
+    uniq = jnp.unique(gathered, size=Pn, fill_value=_INT_MAX)
+    pat_valid = uniq != _INT_MAX
+    # local embeddings -> global pattern slots (uniq is sorted).  A code
+    # beyond a truncated table must contribute nowhere (not be clamped
+    # into slot Pn-1 and inflate its support): require an exact hit.
+    pat = jnp.minimum(jnp.searchsorted(uniq, canon), Pn - 1).astype(
+        jnp.int32)
+    hit = uniq[pat] == canon
+
+    park = Pn * V
+    dom, vid, ok, bucket = _domain_contributions(
+        vert_vid, n_verts, valid & hit, perms, codes_all, canon, pat, park)
+    member = jnp.zeros((park + 1, ctx.n_vertices), jnp.uint8)
+    member = member.at[bucket, jnp.clip(vid, 0, ctx.n_vertices - 1)].max(
+        ok.astype(jnp.uint8))
+    member = member[:park]
+    for ax in axis_names:        # pmax == set union, device-count-proof
+        member = jax.lax.pmax(member, ax)
+    distinct = jnp.sum((member > 0).astype(jnp.int32), axis=1)
+    distinct = distinct.reshape(Pn, V)
+    return _domain_support(ctx, app, uniq, pat_valid, distinct, pat, valid,
+                           V, n_eff)
 
 
 # ---------------------------------------------------------------------------
@@ -489,6 +580,9 @@ class ReferenceBackend(PhaseBackend):
 
     def reduce_domain(self, ctx, app, levels):
         return reduce_domain(ctx, app, levels)
+
+    def reduce_domain_sharded(self, ctx, app, levels, axis_names):
+        return reduce_domain_sharded(ctx, app, levels, axis_names)
 
     def filter_levels(self, levels, keep, out_cap):
         return filter_levels(levels, keep, out_cap)

@@ -1,0 +1,342 @@
+"""Plan-once / execute-many mining layer (inspection-execution, compiled).
+
+The paper's inspection-execution optimization plans buffer capacities
+before running a phase.  The host driver (:class:`repro.core.engine.Miner`)
+derives that plan with one ``int()`` sync per level — fine for a single
+run, wasteful when the same (graph, app, backend) triple is mined many
+times: every edge block, every device, every repeated serving request
+re-pays the per-level host round-trips.
+
+This module separates *planning* from *execution*:
+
+* :class:`MiningPlan` — the per-level ``(cand_cap, out_cap)`` schedule
+  (plus FSM filter capacities) together with a signature identifying the
+  (graph, app, backend, level-0 capacity) it was planned for.  Plans are
+  JSON-serializable; :class:`PlanCache` persists them on disk so a later
+  process skips the inspection pass entirely (``--plan-cache``).
+* Capacity policies — the *one* level loop in :mod:`repro.core.engine`
+  asks a policy for each level's capacities.  :class:`HostCapPolicy` is
+  the paper's inspection-execution (exact counts, host sync, bucketed to
+  powers of two) and records the plan as a side effect;
+  :class:`PlanCapPolicy` replays a recorded plan with **no host sync** —
+  it is jit-traceable and accumulates an overflow flag instead.
+* :class:`MiningExecutor` — compiles the whole mining run once per plan
+  (one XLA executable with static capacities) and reuses it across edge
+  blocks and repeated runs.  Overflow (a block bigger than the plan
+  assumed) triggers the only remaining host loop: grow the plan, refresh
+  the cache, retry.
+
+The same compiled artifact serves the ``shard_map`` distribution path:
+:func:`repro.core.engine.bounded_mine_vertex` /
+:func:`~repro.core.engine.bounded_mine_edge` are thin wrappers running the
+shared level loop under a :class:`PlanCapPolicy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bucket_pow2(n: int, minimum: int = 128) -> int:
+    """Round up to the next power of two (bounded retrace count)."""
+    n = max(int(n), minimum)
+    return 1 << (n - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# The plan
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningPlan:
+    """Static capacity schedule for one compiled mining run.
+
+    ``caps[i]`` is the ``(cand_cap, out_cap)`` pair for extension level
+    ``i`` (paper level ``i + 2``); ``filter_caps`` holds the output
+    capacities of the FSM support-filter compactions in invocation order
+    (the pre-loop filter first, then one per level).  ``cap0`` is the
+    level-0 worklist capacity the plan assumes (the padded block size).
+    """
+
+    kind: str                                  # "vertex" | "edge"
+    caps: tuple[tuple[int, int], ...]
+    filter_caps: tuple[int, ...] = ()
+    cap0: int = 0
+    signature: str = ""
+    source: str = "manual"                     # inspect | cache | grown
+
+    def grown(self, factor: int = 2) -> "MiningPlan":
+        """Overflow response: scale every capacity (stays a power of two)."""
+        return dataclasses.replace(
+            self,
+            caps=tuple((c * factor, o * factor) for c, o in self.caps),
+            filter_caps=tuple(f * factor for f in self.filter_caps),
+            source="grown")
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "schema": 1, "kind": self.kind, "cap0": self.cap0,
+            "caps": [list(c) for c in self.caps],
+            "filter_caps": list(self.filter_caps),
+            "signature": self.signature, "source": self.source})
+
+    @classmethod
+    def from_json(cls, text: str) -> "MiningPlan":
+        d = json.loads(text)
+        return cls(kind=d["kind"], cap0=int(d["cap0"]),
+                   caps=tuple((int(c), int(o)) for c, o in d["caps"]),
+                   filter_caps=tuple(int(f) for f in d["filter_caps"]),
+                   signature=d.get("signature", ""),
+                   source=d.get("source", "cache"))
+
+
+def plan_signature(graph_digest: str, app, backend_name: str, cap0: int,
+                   fuse_filter: bool = True) -> str:
+    """Stable identity of (graph, app knobs, backend, block capacity)."""
+    fields = (graph_digest, app.name, app.kind, app.max_size, app.use_dag,
+              app.needs_reduce, app.needs_filter, app.support_mode,
+              app.max_patterns, app.min_support, backend_name, int(cap0),
+              bool(fuse_filter))
+    return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
+
+
+class PlanCache:
+    """Directory of ``<signature>.json`` plans (atomic writes)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+
+    def _path(self, signature: str) -> str:
+        return os.path.join(self.directory, f"{signature}.json")
+
+    def get(self, signature: str) -> Optional[MiningPlan]:
+        path = self._path(signature)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            plan = MiningPlan.from_json(f.read())
+        return dataclasses.replace(plan, source="cache")
+
+    def put(self, plan: MiningPlan) -> str:
+        os.makedirs(self.directory, exist_ok=True)
+        path = self._path(plan.signature)
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            f.write(plan.to_json())
+        os.replace(tmp, path)
+        return path
+
+
+# ---------------------------------------------------------------------------
+# Capacity policies — what the shared level loop asks per level
+
+
+class HostCapPolicy:
+    """Inspection-execution with per-level host sync; records the plan.
+
+    ``extend_caps`` runs the cheap degree-sum bound, then the exact
+    inspection jit, and buckets both counts to powers of two — exactly the
+    paper's inspection-execution at the host/XLA boundary.  Every decision
+    is appended to ``caps`` / ``filter_caps`` so a finished run doubles as
+    a planning pass.
+    """
+
+    traceable = False
+
+    def __init__(self):
+        self.caps: list[tuple[int, int]] = []
+        self.filter_caps: list[int] = []
+
+    def extend_caps(self, pipe):
+        cand_cap = bucket_pow2(int(pipe.bound()))
+        n_cand, n_next = pipe.inspect(cand_cap)
+        out_cap = bucket_pow2(int(n_next))
+        self.caps.append((cand_cap, out_cap))
+        return cand_cap, out_cap, int(n_cand)
+
+    def filter_cap(self, n_keep) -> int:
+        cap = bucket_pow2(int(n_keep))
+        self.filter_caps.append(cap)
+        return cap
+
+    def overflow(self):
+        return False                      # exact capacities never overflow
+
+
+class PlanCapPolicy:
+    """Replay a :class:`MiningPlan` with no host sync (jit-traceable).
+
+    Capacities overflowing truncate the worklist; the accumulated
+    ``overflow`` flag reports it so the executor (or the bounded-mode
+    caller) can re-plan and retry — the bounded-mode contract.
+    """
+
+    traceable = True
+
+    def __init__(self, plan: MiningPlan):
+        self.plan = plan
+        self._li = 0
+        self._fi = 0
+        self._ovf = jnp.zeros((), bool)
+
+    def extend_caps(self, pipe):
+        cand_cap, out_cap = self.plan.caps[self._li]
+        self._li += 1
+        total, n_next = pipe.inspect(cand_cap)
+        self._ovf = self._ovf | (total > cand_cap) | (n_next > out_cap)
+        return cand_cap, out_cap, total
+
+    def filter_cap(self, n_keep) -> int:
+        cap = self.plan.filter_caps[self._fi]
+        self._fi += 1
+        self._ovf = self._ovf | (n_keep > cap)
+        return cap
+
+    def overflow(self):
+        return self._ovf
+
+
+# ---------------------------------------------------------------------------
+# The executor
+
+
+class MiningExecutor:
+    """One compiled mining run, reused across blocks / runs / queries.
+
+    Holds the plan for one (graph, app, backend, cap0) signature and a
+    jit cache keyed by the plan's capacities: every edge block of a run —
+    and every repeated run — goes through the same XLA executable with a
+    single device sync, no per-level host inspection.  ``execute`` /
+    ``execute_edge`` retry with a grown plan when the overflow flag comes
+    back set; that re-plan loop is the only host-side control flow left.
+    """
+
+    def __init__(self, miner, cap0: int, plan: Optional[MiningPlan] = None,
+                 cache: Optional[PlanCache] = None, max_retries: int = 6):
+        self.miner = miner
+        self.cap0 = int(cap0)
+        self.cache = cache
+        self.max_retries = max_retries
+        self.kind = miner.app.kind
+        self.signature = plan_signature(miner.graph_digest(), miner.app,
+                                        miner.backend.name, self.cap0,
+                                        miner.fuse_filter)
+        self._plan = plan
+        if self._plan is None and cache is not None:
+            self._plan = cache.get(self.signature)
+        self._fns: dict = {}
+        self.n_compiles = 0
+        self.n_executions = 0
+        self.n_replans = 0
+
+    # -- plan management ----------------------------------------------------
+
+    @property
+    def plan(self) -> Optional[MiningPlan]:
+        return self._plan
+
+    @property
+    def has_plan(self) -> bool:
+        return self._plan is not None
+
+    def attach_cache(self, cache: Optional[PlanCache]) -> None:
+        if cache is None or (self.cache is not None
+                             and self.cache.directory == cache.directory):
+            return                    # same cache: plan already persisted
+        self.cache = cache
+        if self._plan is None:
+            self._plan = cache.get(self.signature)
+        elif self._plan.signature == self.signature:
+            cache.put(self._plan)
+
+    def adopt_plan(self, caps, filter_caps=(), source: str = "inspect"
+                   ) -> None:
+        """Install a freshly recorded plan (first host run = planning pass).
+
+        A plan already in place wins — plan once, execute many.
+        """
+        if self._plan is not None:
+            return
+        self._plan = MiningPlan(kind=self.kind, caps=tuple(caps),
+                                filter_caps=tuple(filter_caps),
+                                cap0=self.cap0, signature=self.signature,
+                                source=source)
+        if self.cache is not None:
+            self.cache.put(self._plan)
+
+    def _grow(self) -> None:
+        self.n_replans += 1
+        self._plan = self._plan.grown()
+        if self.cache is not None:
+            self.cache.put(self._plan)
+
+    # -- compilation --------------------------------------------------------
+
+    def _fn(self):
+        key = (self._plan.caps, self._plan.filter_caps)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._build(self._plan)
+            self._fns[key] = fn
+            self.n_compiles += 1
+        return fn
+
+    def _build(self, plan: MiningPlan):
+        from repro.core import engine as E
+        ops = E._PhaseOps(self.miner.ctx, self.miner.app,
+                          self.miner.backend,
+                          fuse_filter=self.miner.fuse_filter,
+                          materialize_fn=self.miner._materialize)
+
+        if self.kind == "vertex":
+            def fn(src, dst, n_valid):
+                pipe = E._VertexPipeline(ops, src, dst, n_valid)
+                policy = PlanCapPolicy(plan)
+                E.run_level_loop(pipe, policy)
+                return pipe.bounded_result(policy)
+        else:
+            def fn(src, dst, eid, n_valid):
+                pipe = E._EdgePipeline(ops, src=src, dst=dst, eid=eid,
+                                       n=n_valid)
+                policy = PlanCapPolicy(plan)
+                E.run_level_loop(pipe, policy)
+                return pipe.bounded_result(policy)
+        return jax.jit(fn)
+
+    # -- execution ----------------------------------------------------------
+
+    def _run_with_retry(self, *args):
+        """Call the compiled plan; on overflow grow it and recompile."""
+        for attempt in range(self.max_retries + 1):
+            *out, ovf = self._fn()(*args)
+            self.n_executions += 1
+            if not bool(ovf):
+                return out
+            if attempt == self.max_retries:
+                break                 # don't grow/persist a plan never run
+            self._grow()
+        raise RuntimeError(
+            f"mining plan {self.signature} still overflows after "
+            f"{self.max_retries + 1} attempts")
+
+    def execute(self, src, dst, n_valid) -> tuple[int, np.ndarray]:
+        """Vertex-induced block: one compiled call -> (count, p_map)."""
+        assert self.kind == "vertex"
+        cnt, p_map = self._run_with_retry(src, dst, jnp.int32(n_valid))
+        return int(cnt), np.asarray(p_map)
+
+    def execute_edge(self, src, dst, eid, n_valid
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Edge-induced (FSM) run: one call -> (codes, supports)."""
+        assert self.kind == "edge"
+        codes, supports = self._run_with_retry(src, dst, eid,
+                                               jnp.int32(n_valid))
+        return np.asarray(codes), np.asarray(supports)

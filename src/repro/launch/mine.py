@@ -1,9 +1,12 @@
 """Mining launcher — the paper's workload as a CLI.
 
-``python -m repro.launch.mine --app 4-mc --graph rmat:10 [--block-size N]
-[--devices K]`` runs TC / k-CF / k-MC / k-FSM on a generated or named
-graph, optionally sharded over K host devices (set
-XLA_FLAGS=--xla_force_host_platform_device_count=K before launch).
+``python -m repro.launch.mine --app 4-mc --graph rmat:10 [--block-size N |
+--blocks K] [--plan-cache DIR] [--repeat R]`` runs TC / k-CF / k-MC /
+k-FSM on a generated or named graph.  ``--plan-cache`` persists the
+capacity plan so later invocations skip the inspection pass entirely
+(plan-once / execute-many); ``--repeat`` reruns the mining to show the
+warm-executor (single-jit) path; ``--blocks`` splits the level-0 worklist
+into K edge blocks served by one compiled executor.
 """
 from __future__ import annotations
 
@@ -53,6 +56,15 @@ def main(argv=None):
     ap.add_argument("--labels", type=int, default=None)
     ap.add_argument("--minsup", type=int, default=100)
     ap.add_argument("--block-size", type=int, default=None)
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="split the level-0 worklist into this many edge "
+                         "blocks (alternative to --block-size)")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persist/load capacity plans; a warm cache skips "
+                         "the per-level inspection pass")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="run the mining N times (later runs reuse the "
+                         "compiled plan executor)")
     ap.add_argument("--backend", default=None,
                     help="phase backend: reference | pallas | any "
                          "registered (default: the app's preference, "
@@ -76,9 +88,25 @@ def main(argv=None):
         raise SystemExit(f"unknown backend {args.backend!r} "
                          f"(available: {', '.join(available_backends())})")
     miner = Miner(g, app, backend=args.backend)
-    t0 = time.time()
-    r = miner.run(block_size=args.block_size, collect_stats=args.stats)
-    dt = time.time() - t0
+    block_size = args.block_size
+    if args.blocks:
+        if app.kind == "edge":
+            raise SystemExit("--blocks: FSM blocking is disabled "
+                             "(global support sync); use mine_sharded")
+        m = int(miner.init_edges()[0].shape[0])
+        block_size = -(-m // args.blocks)
+    r = None
+    for i in range(max(args.repeat, 1)):
+        t0 = time.time()
+        r = miner.run(block_size=block_size, collect_stats=args.stats,
+                      plan_cache=args.plan_cache)
+        dt = time.time() - t0
+        if args.repeat > 1:
+            print(f"[mine] run {i}: {dt:.3f}s")
+    for rep in miner.plan_reports():
+        print(f"[mine] plan cap0={rep['cap0']} source={rep['source']} "
+              f"caps={rep['caps']} compiles={rep['compiles']} "
+              f"executions={rep['executions']} replans={rep['replans']}")
     if app.kind == "edge":
         found = [(int(c), int(s)) for c, s in zip(r.codes, r.supports)
                  if c != np.iinfo(np.int32).max and s >= app.min_support]

@@ -43,6 +43,39 @@ def test_sharded_tc_and_mc_match_single_device():
     assert "OK" in stdout
 
 
+def test_sharded_fsm_matches_single_device():
+    """FSM under shard_map: the collective domain reduce must reproduce
+    the single-device canonical codes AND exact MNI supports."""
+    stdout = _run("""
+        import jax, numpy as np
+        from repro.graph import generators as G
+        from repro.core import Miner, make_fsm_app, mine_sharded
+        from repro.launch.mesh import make_mesh
+        g = G.erdos_renyi(24, 0.25, seed=7, labels=3)
+        mesh = make_mesh((4,), ("data",))
+        app = make_fsm_app(3, min_support=2, max_patterns=64)
+        ref = Miner(g, app).run()
+        cnt, codes, sup, ovf = mine_sharded(
+            g, app, mesh, caps=((8192, 8192),),
+            filter_caps=(2048, 2048))
+        assert not ovf
+        assert cnt == ref.count, (cnt, ref.count)
+        assert (codes == ref.codes).all()
+        assert (sup == ref.supports).all()
+        print("OK", cnt)
+    """)
+    assert "OK" in stdout
+
+
+def test_sharded_fsm_requires_filter_caps():
+    from repro.core import make_fsm_app, mine_sharded
+    from repro.graph import generators as G
+    with pytest.raises(ValueError, match="filter_caps"):
+        mine_sharded(G.erdos_renyi(10, 0.3, seed=1, labels=2),
+                     make_fsm_app(3, min_support=1), mesh=None,
+                     caps=((64, 64),))
+
+
 def test_sharded_overflow_detection():
     stdout = _run("""
         import jax

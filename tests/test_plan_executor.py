@@ -1,0 +1,250 @@
+"""Plan-once / execute-many layer: blocked parity across block sizes and
+backends, overflow -> re-plan retry, plan cache round-trips, executor
+reuse, blocked checkpointing, bounded FSM parity, sharded-reduce oracle."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from oracles import motif_counts, triangle_count
+from repro.core import (Miner, MiningPlan, PlanCache, bounded_mine_edge,
+                        make_fsm_app, make_mc_app, make_tc_app)
+from repro.core.plan import bucket_pow2, plan_signature
+from repro.graph import generators as G
+from repro.graph.csr import to_networkx
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+# -- plan objects ------------------------------------------------------------
+
+def test_plan_json_roundtrip():
+    p = MiningPlan(kind="edge", caps=((256, 128), (1024, 512)),
+                   filter_caps=(128, 256), cap0=512, signature="abc",
+                   source="inspect")
+    q = MiningPlan.from_json(p.to_json())
+    assert q == p
+
+
+def test_plan_grown_doubles_every_cap():
+    p = MiningPlan(kind="vertex", caps=((256, 128),), filter_caps=(64,))
+    g = p.grown()
+    assert g.caps == ((512, 256),) and g.filter_caps == (128,)
+    assert g.source == "grown"
+
+
+def test_plan_signature_sensitivity(er_graph):
+    m = Miner(er_graph, make_tc_app())
+    s1 = plan_signature(m.graph_digest(), m.app, "reference", 256)
+    assert s1 == plan_signature(m.graph_digest(), m.app, "reference", 256)
+    assert s1 != plan_signature(m.graph_digest(), m.app, "pallas", 256)
+    assert s1 != plan_signature(m.graph_digest(), m.app, "reference", 512)
+    assert s1 != plan_signature("other-graph", m.app, "reference", 256)
+
+
+# -- blocked mining parity (satellite: block_size sweeps, both backends) -----
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("block_size", [16, 37, 64])
+def test_blocked_count_parity_sweep(er_graph, er_nx, backend, block_size):
+    ref = triangle_count(er_nx)
+    m = Miner(er_graph, make_tc_app(), backend=backend)
+    assert m.run(block_size=block_size).count == ref
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_blocked_p_map_parity_sweep(er_graph, er_nx, backend):
+    ref = motif_counts(er_nx, 3)
+    m = Miner(er_graph, make_mc_app(3), backend=backend)
+    unblocked = np.asarray(m.run().p_map)
+    for bs in (16, 50):
+        pm = np.asarray(m.run(block_size=bs).p_map)
+        assert (pm == unblocked).all()
+    assert unblocked[0] == ref[0] and unblocked[1] == ref[1]
+
+
+def test_one_executor_compile_serves_all_blocks(er_graph, er_nx):
+    """Acceptance: block 0 plans (host), every other block replays the
+    one compiled executor; a second blocked run is executor-only."""
+    m = Miner(er_graph, make_tc_app())
+    bs = 16
+    r = m.run(block_size=bs)
+    assert r.count == triangle_count(er_nx)
+    src, _ = m.init_edges()
+    n_blocks = -(-int(src.shape[0]) // bs)
+    ex = m.executor(bucket_pow2(bs))
+    assert ex.has_plan and ex.plan.source == "inspect"
+    assert ex.n_compiles == 1
+    assert ex.n_executions == n_blocks - 1   # block 0 was the planning pass
+    m.run(block_size=bs)
+    assert ex.n_compiles == 1                # same executable, warm
+    assert ex.n_executions == 2 * n_blocks - 1
+
+
+def test_repeated_full_runs_reuse_executor(er_graph, er_nx):
+    m = Miner(er_graph, make_tc_app())
+    ref = triangle_count(er_nx)
+    assert m.run().count == ref              # host pass, records plan
+    assert m.run().count == ref              # compiled executor
+    assert m.run().count == ref
+    (ex,) = m._executors.values()
+    assert ex.n_compiles == 1 and ex.n_executions == 2
+
+
+# -- overflow -> re-plan retry ------------------------------------------------
+
+def test_overflow_triggers_replan_and_stays_correct(er_graph, er_nx):
+    m = Miner(er_graph, make_tc_app())
+    ex = m.executor(bucket_pow2(16))
+    ex.adopt_plan(((8, 4),), source="manual")      # far too small
+    r = m.run(block_size=16)
+    assert r.count == triangle_count(er_nx)
+    assert ex.n_replans >= 1
+    assert ex.plan.source == "grown"
+    # grown plan is sticky: rerun without further growth
+    replans = ex.n_replans
+    assert m.run(block_size=16).count == triangle_count(er_nx)
+    assert ex.n_replans == replans
+
+
+def test_overflow_retry_exhaustion_raises(er_graph):
+    m = Miner(er_graph, make_tc_app())
+    ex = m.executor(bucket_pow2(16))
+    ex.adopt_plan(((2, 1),), source="manual")
+    ex.max_retries = 0            # no growth budget: must surface the error
+    with pytest.raises(RuntimeError, match="overflows"):
+        m.run(block_size=16)
+
+
+# -- plan cache ---------------------------------------------------------------
+
+def test_plan_cache_roundtrip(tmp_path, er_graph, er_nx):
+    ref = triangle_count(er_nx)
+    cache_dir = str(tmp_path / "plans")
+    m1 = Miner(er_graph, make_tc_app())
+    assert m1.run(block_size=16, plan_cache=cache_dir).count == ref
+    ex1 = m1.executor(bucket_pow2(16))
+    assert ex1.plan.source == "inspect"
+    # fresh miner, warm cache: no host inspection pass at all
+    m2 = Miner(er_graph, make_tc_app())
+    src, _ = m2.init_edges()
+    n_blocks = -(-int(src.shape[0]) // 16)
+    assert m2.run(block_size=16, plan_cache=cache_dir).count == ref
+    ex2 = m2.executor(bucket_pow2(16))
+    assert ex2.plan.source == "cache"
+    assert ex2.plan.caps == ex1.plan.caps
+    assert ex2.n_executions == n_blocks      # every block went compiled
+
+
+def test_plan_cache_via_object(tmp_path, er_graph):
+    cache = PlanCache(str(tmp_path))
+    m = Miner(er_graph, make_mc_app(3))
+    r1 = m.run(plan_cache=cache)
+    m2 = Miner(er_graph, make_mc_app(3))
+    r2 = m2.run(plan_cache=cache)
+    assert (np.asarray(r1.p_map) == np.asarray(r2.p_map)).all()
+    (ex2,) = m2._executors.values()
+    assert ex2.plan.source == "cache"
+
+
+# -- blocked checkpointing (satellite fix) ------------------------------------
+
+def test_blocked_run_checkpoints_every_block(er_graph):
+    seen = []
+    m = Miner(er_graph, make_mc_app(3))
+    r = m.run(block_size=16,
+              checkpoint_cb=lambda bi, levels, pm: seen.append((bi, pm)))
+    src, _ = m.init_edges()
+    n_blocks = -(-int(src.shape[0]) // 16)
+    assert [bi for bi, _ in seen] == list(range(n_blocks))
+    # payload carries the accumulated totals; final one equals the result
+    assert seen[-1][1]["count"] == r.count
+    assert (np.asarray(seen[-1][1]["p_map"]) == np.asarray(r.p_map)).all()
+
+
+def test_blocked_checkpoint_count_only_app(er_graph, er_nx):
+    """Count-only apps (no p_map) still checkpoint a resumable count."""
+    seen = []
+    r = Miner(er_graph, make_tc_app()).run(
+        block_size=16, checkpoint_cb=lambda bi, lv, pl: seen.append(pl))
+    assert seen[-1]["count"] == r.count == triangle_count(er_nx)
+    assert seen[-1]["p_map"] is None
+    counts = [pl["count"] for pl in seen]
+    assert counts == sorted(counts)          # monotone accumulation
+
+
+def test_unblocked_checkpoint_still_per_level(er_graph):
+    seen = []
+    Miner(er_graph, make_mc_app(4)).run(
+        checkpoint_cb=lambda level, levels, pm: seen.append(level))
+    assert seen == [2, 3]
+
+
+# -- bounded FSM (single-jit) -------------------------------------------------
+
+def _fsm_fixture():
+    g = G.erdos_renyi(14, 0.3, seed=5, labels=3)
+    app = make_fsm_app(3, min_support=2, max_patterns=64)
+    return g, app
+
+
+def test_bounded_mine_edge_matches_host_run():
+    g, app = _fsm_fixture()
+    m = Miner(g, app)
+    ref = m.run()
+    ctx = m.ctx
+    eid = jnp.arange(ctx.n_uedges, dtype=jnp.int32)
+    codes, sup, ovf = bounded_mine_edge(
+        ctx, app, ctx.usrc, ctx.udst, eid, ctx.n_uedges,
+        caps=((4096, 4096),), filter_caps=(1024, 1024))
+    assert not bool(ovf)
+    assert (np.asarray(codes) == ref.codes).all()
+    assert (np.asarray(sup) == ref.supports).all()
+
+
+def test_bounded_mine_edge_overflow_flag():
+    g, app = _fsm_fixture()
+    m = Miner(g, app)
+    ctx = m.ctx
+    eid = jnp.arange(ctx.n_uedges, dtype=jnp.int32)
+    _, _, ovf = bounded_mine_edge(ctx, app, ctx.usrc, ctx.udst, eid,
+                                  ctx.n_uedges, caps=((8, 4),),
+                                  filter_caps=(4, 4))
+    assert bool(ovf)
+
+
+def test_fsm_repeated_run_uses_edge_executor():
+    g, app = _fsm_fixture()
+    m = Miner(g, app)
+    r1 = m.run()
+    r2 = m.run()                             # compiled bounded_mine_edge
+    assert r1.count == r2.count
+    assert (r1.codes == r2.codes).all()
+    assert (r1.supports == r2.supports).all()
+    (ex,) = m._executors.values()
+    assert ex.n_executions == 1 and ex.plan.kind == "edge"
+
+
+# -- collective domain reduce: bitmap path == lexsort path --------------------
+
+def test_reduce_domain_sharded_local_oracle():
+    """axis_names=() -> collective-free bitmap path; must equal the
+    lexsort-based reduce_domain bit for bit."""
+    from repro.core.engine import _EdgePipeline, _PhaseOps, run_level_loop
+    from repro.core.phases import get_backend
+    from repro.core.phases.reference import (reduce_domain,
+                                             reduce_domain_sharded)
+    from repro.core.plan import HostCapPolicy
+
+    g, app = _fsm_fixture()
+    m = Miner(g, app)
+    ops = _PhaseOps(m.ctx, app, get_backend("reference"))
+    pipe = _EdgePipeline(ops)
+    run_level_loop(pipe, HostCapPolicy())
+    codes_a, sup_a, pat_a, pv_a = reduce_domain(m.ctx, app, pipe.levels)
+    codes_b, sup_b, pat_b, pv_b = reduce_domain_sharded(m.ctx, app,
+                                                        pipe.levels, ())
+    np.testing.assert_array_equal(np.asarray(codes_a), np.asarray(codes_b))
+    np.testing.assert_array_equal(np.asarray(sup_a), np.asarray(sup_b))
+    np.testing.assert_array_equal(np.asarray(pat_a), np.asarray(pat_b))
+    np.testing.assert_array_equal(np.asarray(pv_a), np.asarray(pv_b))
