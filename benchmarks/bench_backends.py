@@ -1,4 +1,4 @@
-"""Phase-backend comparison + plan-once/execute-many trajectory.
+"""Phase-backend comparison + plan-once/execute-many trajectory + CI guard.
 
 Times full mining runs per backend on scaling graphs and writes
 ``BENCH_backends.json`` next to the repo root so successive PRs accumulate
@@ -16,6 +16,14 @@ Each (graph, app, backend) cell records four timings:
   warm_plan_s  — steady state: the compiled plan executor, one jit call
                  per run, no per-level host sync
   seconds      — legacy field, = warm_plan_s (kept for trajectory tools)
+
+Schema 3 adds ``out_cap_total`` — the sum of planned post-filter output
+capacities — so the survivor-scale memory claim of eager pruning is
+tracked alongside the timings.
+
+``--check`` is the CI perf guard: before overwriting, the committed
+baseline is loaded and any (graph, app, backend) row whose warm_plan_s
+regressed by more than 2x fails the job.
 """
 from __future__ import annotations
 
@@ -31,6 +39,7 @@ from repro.graph import generators as G
 BACKENDS = ("reference", "pallas")
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_backends.json"
+REGRESSION_FACTOR = 2.0
 
 
 def graphs(small: bool):
@@ -51,12 +60,39 @@ def _result_key(r):
     return (int(r.count) if r.p_map is None else [int(x) for x in r.p_map])
 
 
-def run(small: bool = True) -> list[str]:
+def check_regressions(baseline: dict, records: list[dict]) -> list[str]:
+    """Rows regressed past REGRESSION_FACTOR vs the committed baseline."""
+    base = {(r["graph"], r["app"], r["backend"]): r["warm_plan_s"]
+            for r in baseline.get("records", [])}
+    bad = []
+    for r in records:
+        key = (r["graph"], r["app"], r["backend"])
+        if key not in base or base[key] <= 0:
+            continue
+        ratio = r["warm_plan_s"] / base[key]
+        if ratio > REGRESSION_FACTOR:
+            bad.append(f"{'/'.join(key)}: {ratio:.2f}x "
+                       f"({base[key] * 1e3:.2f}ms -> "
+                       f"{r['warm_plan_s'] * 1e3:.2f}ms)")
+    return bad
+
+
+def run(small: bool = True, check: bool = False) -> list[str]:
+    baseline = None
+    if OUT_PATH.exists():
+        try:
+            baseline = json.loads(OUT_PATH.read_text())
+        except ValueError:
+            baseline = None
+    if check and baseline is None:
+        # a guard that silently skips is worse than no guard
+        raise SystemExit("--check requested but no readable baseline at "
+                         f"{OUT_PATH}")
     out = []
     records = []
     for gname, g in graphs(small).items():
         for aname, make_app in apps():
-            baseline = None
+            baseline_result = None
             for backend in BACKENDS:
                 m = Miner(g, make_app(), backend=backend)
                 # cold: first-ever run (compiles + inspects + executes)
@@ -74,9 +110,11 @@ def run(small: bool = True) -> list[str]:
                 result = _result_key(r)
                 assert result == _result_key(r_cold), \
                     f"plan executor diverged from host run: {aname}/{gname}"
-                if baseline is None:
-                    baseline = result
-                derived = (f"match={result == baseline};"
+                if baseline_result is None:
+                    baseline_result = result
+                out_cap_total = sum(rep["out_cap_total"]
+                                    for rep in m.plan_reports())
+                derived = (f"match={result == baseline_result};"
                            f"host={host * 1e6:.0f}us;"
                            f"cold={cold * 1e6:.0f}us")
                 out.append(emit(f"backends/{aname}/{gname}/{backend}", warm,
@@ -85,15 +123,25 @@ def run(small: bool = True) -> list[str]:
                                 "backend": backend, "seconds": warm,
                                 "cold_plan_s": cold, "host_run_s": host,
                                 "warm_plan_s": warm,
+                                "out_cap_total": out_cap_total,
                                 "n_vertices": g.n_vertices,
                                 "n_edges": g.n_edges // 2,
-                                "matches_reference": result == baseline})
-    OUT_PATH.write_text(json.dumps({"schema": 2, "records": records},
+                                "matches_reference":
+                                    result == baseline_result})
+    OUT_PATH.write_text(json.dumps({"schema": 3, "records": records},
                                    indent=2))
     print(f"# wrote {OUT_PATH}")
     bad = [r for r in records if not r["matches_reference"]]
     if bad:
         raise SystemExit(f"backend parity violated: {bad}")
+    if baseline is not None:
+        regressions = check_regressions(baseline, records)
+        for line in regressions:
+            print(f"# REGRESSION {line}")
+        if check and regressions:
+            raise SystemExit(
+                f"{len(regressions)} warm-plan regression(s) beyond "
+                f"{REGRESSION_FACTOR}x vs committed BENCH_backends.json")
     return out
 
 
@@ -101,6 +149,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
                     help="CI smoke mode: small graphs only")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >2x warm-plan regression vs the "
+                         "committed BENCH_backends.json baseline")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(small=args.small)
+    run(small=args.small, check=args.check)

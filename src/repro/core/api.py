@@ -21,7 +21,8 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import (CSRGraph, PackedGraph, pack_adjacency,
+                             packed_contains)
 from repro.sparse.intersect import adj_contains
 
 
@@ -43,9 +44,25 @@ class GraphCtx:
     usrc: Optional[jnp.ndarray] = None       # i32[m/2] endpoints per uid
     udst: Optional[jnp.ndarray] = None
     n_uedges: int = 0
+    # bit-packed adjacency bitmap (u32 rows); None = CSR search only
+    packed: Optional[PackedGraph] = None
 
     def is_connected(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-        """Listing 2 ``isConnected`` — binary search on sorted adjacency."""
+        """Listing 2 ``isConnected``.
+
+        With a packed adjacency bitmap the probe is one word gather + bit
+        test (O(1) instead of O(log max_degree)); unpacked rows — and the
+        ``search="linear"`` ablation — fall back to the CSR scan.
+        """
+        if self.packed is not None and self.search == "binary":
+            hit = packed_contains(self.packed, u, v)
+            if self.packed.full:
+                return hit
+            slot = self.packed.row_slot[jnp.clip(u, 0,
+                                                 self.n_vertices - 1)]
+            fallback = adj_contains(self.row_ptr, self.col_idx, u, v,
+                                    self.n_steps, method=self.search)
+            return jnp.where(slot >= 0, hit, fallback)
         return adj_contains(self.row_ptr, self.col_idx, u, v, self.n_steps,
                             method=self.search)
 
@@ -56,8 +73,21 @@ class GraphCtx:
 
 def make_ctx(g: CSRGraph, search: str = "binary",
              n_labels: Optional[int] = None,
-             with_edge_uids: bool = False) -> GraphCtx:
-    """Build a GraphCtx from a CSR graph (host-side preprocessing)."""
+             with_edge_uids: bool = False,
+             pack_bits: bool = True,
+             pack_max_bytes: int = 4 << 20,
+             pack_partial: bool = False) -> GraphCtx:
+    """Build a GraphCtx from a CSR graph (host-side preprocessing).
+
+    ``pack_bits`` builds the bit-packed adjacency bitmap (u32 rows) that
+    turns ``isConnected`` into an O(1) bit test; disabled automatically
+    for the ``search="linear"`` ablation so the knob keeps measuring the
+    CSR scan.  By default only a *full* pack (every row fits under
+    ``pack_max_bytes``) is attached: a partial pack of high-degree rows
+    makes every ``is_connected`` evaluate both the bitmap probe and the
+    CSR fallback (vectorized select), which is a pessimization unless a
+    consumer exploits the packed rows — opt in with ``pack_partial``.
+    """
     max_deg = max(g.max_degree, 1)
     n_steps = max(1, math.ceil(math.log2(max_deg + 1)))
     if n_labels is None:
@@ -75,11 +105,18 @@ def make_ctx(g: CSRGraph, search: str = "binary",
         usrc = jnp.asarray((uniq // g.n_vertices).astype(np.int32))
         udst = jnp.asarray((uniq % g.n_vertices).astype(np.int32))
         n_uedges = int(uniq.shape[0])
+    packed = None
+    if pack_bits and search == "binary":
+        n_words = -(-max(g.n_vertices, 1) // 32)
+        would_be_full = g.n_vertices * n_words * 4 <= pack_max_bytes
+        if would_be_full or pack_partial:   # never build a pack we'd drop
+            packed = pack_adjacency(g, max_bytes=pack_max_bytes)
     return GraphCtx(
         row_ptr=g.row_ptr, col_idx=g.col_idx, labels=g.labels,
         n_vertices=g.n_vertices, n_edges=g.n_edges, max_degree=max_deg,
         n_steps=n_steps, search=search, n_labels=n_labels,
-        edge_uid=edge_uid, usrc=usrc, udst=udst, n_uedges=n_uedges)
+        edge_uid=edge_uid, usrc=usrc, udst=udst, n_uedges=n_uedges,
+        packed=packed)
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +177,50 @@ def is_auto_canonical_vertex_bits(emb: jnp.ndarray, u: jnp.ndarray,
     return ok & found
 
 
+def is_auto_canonical_kernel(emb_cols, u, src_slot, state, conn):
+    """Elementwise (kernel-traceable) automorphism-canonical test.
+
+    The ``to_add_kernel`` form of :func:`is_auto_canonical_vertex_bits`:
+    ``emb_cols``/``conn`` are length-k tuples of arrays (one per parent
+    slot) instead of [N, k] matrices, and every operation is elementwise —
+    the contract that lets the same function be traced both on flat jnp
+    batches (reference backend) and on VMEM lane tiles inside the fused
+    Pallas extend kernel.  Assumes symmetric adjacency (undirected graph).
+    """
+    k = len(emb_cols)
+    ok = u > emb_cols[0]
+    found = jnp.zeros(u.shape, bool)
+    for j in range(k):
+        adj = conn[j]
+        ok = ok & ~(found & (u < emb_cols[j]))
+        found = found | adj
+        ok = ok & (u != emb_cols[j])
+        ok = ok & ~(adj & (jnp.int32(j) < src_slot))
+    return ok & found
+
+
+def resolve_kernel_predicate(app: "MiningApp"):
+    """The eager in-kernel ``toAdd`` predicate for ``app``, or None.
+
+    Fused backends prune candidates *inside* the extend kernel (filter +
+    stream compaction fused into enumeration) whenever the app's predicate
+    is expressible in the elementwise kernel form: either the app supplies
+    ``to_add_kernel`` explicitly, or it relies entirely on the default
+    automorphism-canonical test on an undirected graph (the bits-based
+    variant is exact there).  Apps with only host-side hooks — or
+    ``use_dag`` apps without hooks, where the precomputed connectivity
+    bits have the wrong ``isConnected`` direction for the default test —
+    return None and take the unfused enumerate-then-filter path.
+    """
+    if app.kind != "vertex":
+        return None
+    if app.to_add_kernel is not None:
+        return app.to_add_kernel
+    if app.to_add is None and app.to_add_bits is None and not app.use_dag:
+        return is_auto_canonical_kernel
+    return None
+
+
 def is_auto_canonical_edge(ctx: GraphCtx, eids: jnp.ndarray,
                            new_eid: jnp.ndarray, new_src: jnp.ndarray,
                            new_dst: jnp.ndarray, e_src: jnp.ndarray,
@@ -186,6 +267,17 @@ class MiningApp:
     the extend kernel.  Backends that don't precompute connectivity ignore
     it and call ``to_add``.  ``backend`` names the app's preferred phase
     backend (see repro.core.phases); ``Miner(backend=...)`` overrides it.
+
+    ``to_add_kernel`` is the strictest — and fastest — form:
+    ``fn(emb_cols, u, src_slot, state, conn) -> bool`` where ``emb_cols``
+    and ``conn`` are length-k tuples of arrays and every operation must be
+    elementwise (no ``ctx``, no gathers).  Predicates in this form are
+    evaluated *inside* the fused Pallas extend kernel, so dead candidates
+    are pruned and stream-compacted before they are ever materialized
+    (the paper's eager pruning, §4); the reference backend traces the
+    same function on flat batches, keeping the two backends bitwise
+    equal.  Supply it whenever the app's ``toAdd`` only needs the parent
+    vertices, the candidate, and the k connectivity bits.
     """
 
     name: str
@@ -200,6 +292,7 @@ class MiningApp:
     to_extend: Optional[Callable] = None
     to_add: Optional[Callable] = None
     to_add_bits: Optional[Callable] = None  # fused-backend toAdd variant
+    to_add_kernel: Optional[Callable] = None  # in-kernel elementwise toAdd
     get_pattern: Optional[Callable] = None
     to_prune: Optional[Callable] = None
     init_state: Optional[Callable] = None   # (ctx, emb[N,2]) -> state[N]

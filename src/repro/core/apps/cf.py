@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.api import (GraphCtx, MiningApp, is_auto_canonical_vertex,
+from repro.core.api import (GraphCtx, MiningApp, is_auto_canonical_kernel,
+                            is_auto_canonical_vertex,
                             is_auto_canonical_vertex_bits)
 
 
@@ -64,6 +65,26 @@ def make_cf_app(k: int, use_dag: bool = True,
                        lambda: is_auto_canonical_vertex_bits(emb, u, conn,
                                                              src_slot))
 
+    def to_add_kernel(emb_cols, u, src_slot, state, conn):
+        # elementwise form: evaluated *inside* the fused extend kernel, so
+        # non-clique candidates are pruned and compacted before they are
+        # ever materialized (the paper's eager pruning, Listing 3)
+        kk = len(emb_cols)
+        ok = u >= 0
+        for j in range(kk):
+            ok = ok & conn[j]
+        if use_dag:
+            for j in range(kk):
+                ok = ok & (u != emb_cols[j])
+            if not eager_prune:
+                ok = ok & (src_slot == kk - 1)
+        elif eager_prune:
+            ok = ok & (u > emb_cols[kk - 1])
+        else:
+            ok = ok & is_auto_canonical_kernel(emb_cols, u, src_slot,
+                                               state, conn)
+        return ok
+
     return MiningApp(name=f"{k}-clique", kind="vertex", max_size=k,
                      use_dag=use_dag, to_extend=to_extend, to_add=to_add,
-                     to_add_bits=to_add_bits)
+                     to_add_bits=to_add_bits, to_add_kernel=to_add_kernel)

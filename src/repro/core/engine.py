@@ -113,7 +113,9 @@ class _PhaseOps:
                 return be.candidate_bound_vertex(ctx, app, emb, n)
 
             def extend(emb, n, st, *, cand_cap, out_cap):
-                return be.extend_vertex(ctx, app, emb, n, st, cand_cap,
+                # fused extend+filter+compact with counts: the one
+                # enumeration per level (no separate inspection on replay)
+                return be.extend_pruned(ctx, app, emb, n, st, cand_cap,
                                         out_cap, fuse_filter=fuse_filter)
 
             def reduce(emb, n, st):
@@ -197,12 +199,13 @@ class _VertexPipeline:
                                  cand_cap=cand_cap)
 
     def extend(self, cand_cap: int, out_cap: int):
-        new_level, self.emb = self.ops._extend(self.emb, self.n, self.state,
-                                               cand_cap=cand_cap,
-                                               out_cap=out_cap)
+        new_level, self.emb, n_cand = self.ops._extend(
+            self.emb, self.n, self.state, cand_cap=cand_cap,
+            out_cap=out_cap)
         self.levels.append(new_level)
         self.n = new_level.n
         self.state = self.state[new_level.idx]  # memo state follows the tree
+        return n_cand, new_level.n
 
     def reduce_filter(self, level: int, policy):
         app = self.ops.app
@@ -274,11 +277,12 @@ class _EdgePipeline:
                                    cand_cap=cand_cap)
 
     def extend(self, cand_cap: int, out_cap: int):
-        new_level = self.ops._extend_e(*self._frontier(),
-                                       self.levels[-1].n,
-                                       cand_cap=cand_cap, out_cap=out_cap)
+        new_level, n_cand = self.ops._extend_e(
+            *self._frontier(), self.levels[-1].n,
+            cand_cap=cand_cap, out_cap=out_cap)
         self.levels.append(new_level)
         self._front = None
+        return n_cand, new_level.n
 
     def reduce_filter(self, level: int, policy):
         self._reduce_filter(policy)
@@ -345,8 +349,13 @@ def run_level_loop(pipe, policy, collect_stats: bool = False,
         record(pre_level, 0, t0)
     for level in pipe.level_range():
         t0 = time.perf_counter()
-        cand_cap, out_cap, n_cand = policy.extend_caps(pipe)
-        pipe.extend(cand_cap, out_cap)
+        cand_cap, out_cap = policy.extend_caps(pipe)
+        # one fused enumeration per level: extend_pruned applies the
+        # app's eager toAdd predicate and stream-compacts in the same
+        # pass, returning the true counts — the policy's overflow check
+        # (plan replay) consumes them instead of a second inspection run
+        n_cand, n_surv = pipe.extend(cand_cap, out_cap)
+        policy.note_extend(n_cand, n_surv, cand_cap, out_cap)
         pipe.reduce_filter(level, policy)
         if collect_stats:
             record(level, int(n_cand), t0)
@@ -423,6 +432,9 @@ class Miner:
                 out.append({"cap0": cap0, "source": ex.plan.source,
                             "caps": list(ex.plan.caps),
                             "filter_caps": list(ex.plan.filter_caps),
+                            "out_cap_total":
+                                sum(o for _, o in ex.plan.caps)
+                                + sum(ex.plan.filter_caps),
                             "compiles": ex.n_compiles,
                             "executions": ex.n_executions,
                             "replans": ex.n_replans})

@@ -13,6 +13,10 @@ The op surface, grouped by phase:
   EXTEND   candidate_bound_{vertex,edge}  cheap degree-sum upper bound
            inspect_{vertex,edge}          exact (candidate, survivor) counts
            extend_{vertex,edge}           produce the next SoA level
+           extend_pruned                  fused extend+filter+compact with
+                                          candidate/survivor counts (the
+                                          warm-path op: no separate
+                                          inspection pass)
   REDUCE   reduce_count                   classify + count support
            reduce_domain                  FSM canonical codes + MNI support
            reduce_domain_sharded          same, collective (shard_map) MNI
@@ -64,6 +68,23 @@ class PhaseBackend:
                       cand_cap: int, out_cap: int, fuse_filter: bool = True):
         raise NotImplementedError
 
+    def extend_pruned(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                      n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
+                      cand_cap: int, out_cap: int, fuse_filter: bool = True):
+        """Fused extend + eager toAdd filter + stream compaction.
+
+        Returns ``(level, new_emb, n_candidates)``; the survivor count is
+        ``level.n``.  Because the true counts come back with the result,
+        a plan-replay caller needs **no** separate inspection pass — the
+        overflow check reads them directly (``n_candidates > cand_cap`` or
+        ``level.n > out_cap``).  Backends fuse as deeply as they can: the
+        reference backend evaluates the resolved elementwise predicate and
+        prefix-sum-compacts in one XLA fusion; the Pallas backend prunes
+        and compacts inside the extend kernel so dead candidates never
+        reach HBM.
+        """
+        raise NotImplementedError
+
     # -- EXTEND: edge-induced ---------------------------------------------
 
     def candidate_bound_edge(self, ctx, app, v0, vid, his, n_valid):
@@ -75,6 +96,11 @@ class PhaseBackend:
 
     def extend_edge(self, ctx, app, v0, vid, his, eid, n_valid,
                     cand_cap: int, out_cap: int):
+        """Produce the next edge-induced level.
+
+        Returns ``(level, n_candidates)`` — same fused-counts contract as
+        :meth:`extend_pruned` (survivors are ``level.n``).
+        """
         raise NotImplementedError
 
     # -- REDUCE / FILTER ---------------------------------------------------

@@ -8,16 +8,25 @@ candidate slot.  The ``toAdd`` filter is then evaluated from the bitmask:
 ``app.to_add_bits`` when the app provides it, else the bits-based
 automorphism-canonical test — no second pass over the adjacency.
 
-Everything downstream (compaction, reduce, filter, the whole edge-induced
-pipeline) is inherited from the reference backend; per-op fallback is the
-intended composition model — a backend overrides exactly the ops it
-accelerates.
+When the app's predicate is expressible in the elementwise
+``to_add_kernel`` form (:func:`repro.core.api.resolve_kernel_predicate`),
+:meth:`extend_pruned` goes further: the predicate *and* the exclusive-scan
+stream compaction run inside the kernel, connectivity is answered from
+the u32 bit-packed adjacency bitmap (``ctx.packed``, one word gather per
+probe instead of a log-depth binary search), and only the compacted
+survivor buffer — ``out_cap``-scale, not ``cand_cap``-scale — ever
+reaches HBM.  This is the paper's eager pruning (§4) fused end to end.
+
+Everything downstream (reduce, filter, the whole edge-induced pipeline)
+is inherited from the reference backend; per-op fallback is the intended
+composition model — a backend overrides exactly the ops it accelerates.
 
 Notes:
   * ``interpret=None`` auto-selects interpreter mode off-TPU, so the same
     backend name works on the CPU CI box and on real hardware.
-  * The kernel always binary-searches (the paper's §5.4 choice); the
-    ``search="linear"`` ablation knob only affects the reference backend.
+  * The kernel binary-searches when no full bitmap is available (the
+    paper's §5.4 choice); the ``search="linear"`` ablation knob only
+    affects the reference backend.
   * The bits-based default canonical test assumes symmetric adjacency
     (undirected input graph).  For ``use_dag`` apps without a
     ``to_add_bits``/``to_add`` hook, ``vertex_add_mask`` falls back to
@@ -29,10 +38,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import GraphCtx, MiningApp
+from repro.core.api import GraphCtx, MiningApp, resolve_kernel_predicate
+from repro.core.embedding_list import EmbeddingLevel
 from repro.core.phases.reference import (ReferenceBackend, vertex_add_mask,
                                          vertex_ext_degrees)
-from repro.kernels.extend_fused import fused_extend
+from repro.kernels.extend_fused import fused_extend, fused_extend_pruned
 
 
 class PallasExtendBackend(ReferenceBackend):
@@ -49,18 +59,25 @@ class PallasExtendBackend(ReferenceBackend):
             return jax.default_backend() != "tpu"
         return self.interpret
 
-    def _vertex_candidates(self, ctx: GraphCtx, app: MiningApp,
-                           emb: jnp.ndarray, n_valid: jnp.ndarray,
-                           state, cand_cap: int):
-        cap, k = emb.shape
+    @staticmethod
+    def _kernel_inputs(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                       n_valid: jnp.ndarray):
         deg = vertex_ext_degrees(ctx, app, emb, n_valid)
         counts = deg.reshape(-1).astype(jnp.int32)
         offsets = jnp.cumsum(counts)                  # inclusive prefix sum
         starts = offsets - counts
-        total = offsets[-1].astype(jnp.int32)
         embc = jnp.clip(emb, 0, ctx.n_vertices - 1).reshape(-1)
         vlo = ctx.row_ptr[embc]
         vhi = ctx.row_ptr[embc + 1]
+        return offsets, starts, vlo, vhi
+
+    def _vertex_candidates(self, ctx: GraphCtx, app: MiningApp,
+                           emb: jnp.ndarray, n_valid: jnp.ndarray,
+                           state, cand_cap: int):
+        cap, k = emb.shape
+        offsets, starts, vlo, vhi = self._kernel_inputs(ctx, app, emb,
+                                                        n_valid)
+        total = offsets[-1].astype(jnp.int32)
         row, u, src_slot, conn = fused_extend(
             ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi,
             k=k, cand_cap=cand_cap, n_steps=ctx.n_steps,
@@ -70,6 +87,52 @@ class PallasExtendBackend(ReferenceBackend):
         u = jnp.where(live, u, -1)
         conn_b = (((conn[:, None] >> jnp.arange(k, dtype=jnp.int32)[None, :])
                    & 1).astype(bool) & live[:, None])
-        add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state,
-                              live, conn=conn_b)
+        pred = resolve_kernel_predicate(app)
+        if pred is not None:
+            # same predicate resolution as extend_pruned (and as the
+            # reference backend), so inspection counts and extension
+            # survivors can never drift apart
+            parent = emb[row_c]
+            st = (jnp.zeros(u.shape, jnp.int32) if state is None
+                  else state[row_c])
+            add = pred(tuple(parent[:, j] for j in range(k)), u, src_slot,
+                       st, tuple(conn_b[:, j] for j in range(k))) & live
+        else:
+            add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state,
+                                  live, conn=conn_b)
         return row_c, u, add, total
+
+    def extend_pruned(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
+                      n_valid: jnp.ndarray, state, cand_cap: int,
+                      out_cap: int, fuse_filter: bool = True):
+        pred = resolve_kernel_predicate(app)
+        if pred is None or not fuse_filter:
+            # hooks not expressible in-kernel (or the materialize-then-
+            # filter ablation): full-buffer enumeration + host-side hook
+            return super().extend_pruned(ctx, app, emb, n_valid, state,
+                                         cand_cap, out_cap,
+                                         fuse_filter=fuse_filter)
+        cap, k = emb.shape
+        offsets, starts, vlo, vhi = self._kernel_inputs(ctx, app, emb,
+                                                        n_valid)
+        total = offsets[-1].astype(jnp.int32)
+        st = (jnp.zeros((cap,), jnp.int32) if state is None
+              else state.astype(jnp.int32))
+        pg = ctx.packed
+        use_bitmap = pg is not None and pg.full
+        bits = (pg.words.reshape(-1) if use_bitmap
+                else jnp.zeros((1,), jnp.uint32))
+        n_words = pg.n_words if use_bitmap else 1
+        row, u, n_surv = fused_extend_pruned(
+            ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi, st,
+            bits, k=k, cand_cap=cand_cap, out_cap=out_cap,
+            n_steps=ctx.n_steps, n_vertices=ctx.n_vertices,
+            n_words=n_words, pred=pred, use_bitmap=use_bitmap,
+            block_c=self.block_c, interpret=self._use_interpret())
+        live_out = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
+        vid = jnp.where(live_out, u, -1).astype(jnp.int32)
+        idx = jnp.where(live_out, jnp.clip(row, 0, cap - 1),
+                        0).astype(jnp.int32)
+        level = EmbeddingLevel(vid=vid, idx=idx, n=n_surv)
+        new_emb = jnp.concatenate([emb[idx], vid[:, None]], axis=1)
+        return level, new_emb, total

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.core.api import (GraphCtx, MiningApp, is_auto_canonical_edge,
                             is_auto_canonical_vertex,
-                            is_auto_canonical_vertex_bits)
+                            is_auto_canonical_vertex_bits,
+                            resolve_kernel_predicate)
 from repro.core.embedding_list import EmbeddingLevel, materialize_edges
 from repro.core.phases.base import PhaseBackend
 from repro.core import pattern as P
@@ -90,6 +91,26 @@ def vertex_add_mask(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
     return add & live
 
 
+def apply_kernel_predicate(ctx: GraphCtx, pred, emb: jnp.ndarray,
+                           row_c: jnp.ndarray, u: jnp.ndarray,
+                           src_slot: jnp.ndarray,
+                           state: Optional[jnp.ndarray],
+                           live: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate an elementwise ``to_add_kernel`` predicate on flat batches.
+
+    Connectivity bits are probed here (O(1) against the packed bitmap);
+    the Pallas backend traces the *same* ``pred`` inside the extend kernel
+    on its in-VMEM bits, so the two backends stay bitwise equal.
+    """
+    k = emb.shape[1]
+    parent = emb[row_c]
+    emb_cols = tuple(parent[:, j] for j in range(k))
+    conn = tuple(ctx.is_connected(parent[:, j], u) for j in range(k))
+    st = (jnp.zeros(u.shape, jnp.int32) if state is None
+          else state[row_c])
+    return pred(emb_cols, u, src_slot, st, conn) & live
+
+
 def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
                        n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
                        cand_cap: int):
@@ -110,7 +131,13 @@ def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
     u = ctx.col_idx[jnp.clip(ptr, 0, ctx.n_edges - 1)]
     u = jnp.where(live, u, -1)
     src_slot = jnp.clip(col, 0, k - 1).astype(jnp.int32)
-    add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state, live)
+    pred = resolve_kernel_predicate(app)
+    if pred is not None:
+        add = apply_kernel_predicate(ctx, pred, emb, row_c, u, src_slot,
+                                     state, live)
+    else:
+        add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state,
+                              live)
     return row_c, u, add, total
 
 
@@ -233,8 +260,12 @@ def candidate_bound_edge(ctx, app, v0, vid, his, n_valid):
 
 
 def extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap, out_cap):
-    """Produce the next edge-induced SoA level (vid, his, idx, eid)."""
-    row, s, u, new_eid, add, _ = _edge_candidates(
+    """Produce the next edge-induced SoA level (vid, his, idx, eid).
+
+    Returns ``(level, n_candidates)`` — the fused-counts contract of
+    :func:`extend_pruned`, so plan replay needs no inspection pass.
+    """
+    row, s, u, new_eid, add, total = _edge_candidates(
         ctx, app, v0, vid, his, eid, n_valid, cand_cap)
     gather, n_new = compact_mask(add, out_cap)
     live_out = jnp.arange(out_cap) < n_new
@@ -245,7 +276,7 @@ def extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap, out_cap):
         his=jnp.where(live_out, s[gather], 0).astype(jnp.int32),
         eid=jnp.where(live_out, new_eid[gather], -1).astype(jnp.int32),
     )
-    return level
+    return level, total
 
 
 # ---------------------------------------------------------------------------
@@ -448,7 +479,8 @@ def _domain_support(ctx, app, uniq, pat_valid, distinct, pat, valid, V,
 
 def reduce_domain_sharded(ctx: GraphCtx, app: MiningApp,
                           levels: list[EmbeddingLevel],
-                          axis_names: tuple[str, ...]):
+                          axis_names: tuple[str, ...],
+                          packed: bool = True):
     """FSM reduce over ``shard_map``-distributed embeddings (exact MNI).
 
     The paper disables simple blocking for FSM because MNI support needs a
@@ -460,8 +492,9 @@ def reduce_domain_sharded(ctx: GraphCtx, app: MiningApp,
          tables are aligned by all-gather + global unique (deterministic,
          so every device holds the same code table);
       2. domain membership is materialized as a (pattern, domain, vertex)
-         bitmap and psum-merged — the union of per-device vertex sets,
-         which is exactly the global MNI domain;
+         bitmap, merged across devices as a set union, and distinct
+         counts are read off the merged bitmap — exactly the global MNI
+         domain;
       3. support = min over real domains of the merged distinct counts.
 
     Because every device then filters with the same global supports, the
@@ -469,6 +502,18 @@ def reduce_domain_sharded(ctx: GraphCtx, app: MiningApp,
     the paper's "global support sync".  With ``axis_names=()`` this is a
     collective-free local reduce, numerically identical to
     :func:`reduce_domain` (used by tests as the bitmap-path oracle).
+
+    ``packed=True`` (default) bit-packs the vertex axis into u32 words —
+    32x smaller than the dense u8 bitmap, the difference between "fine at
+    test scale" and "fits at web scale".  Bits are set exactly once via a
+    lexsort dedupe + scatter-add (add of once-only power-of-two values ==
+    bitwise OR), and the cross-device union is an all-gather + local OR:
+    integer ``pmax`` on packed words is *not* a bitwise OR, and psum would
+    carry between bits, so the packed path trades the dense psum for
+    moving ``n_devices`` copies of a 32x smaller tensor — less wire bytes
+    up to 32 devices, identical (exact) results at any device count.
+    ``packed=False`` keeps the dense u8 psum/pmax merge as the oracle
+    path for parity tests.
     """
     vert_vid, n_verts, valid, perms, codes_all, canon = \
         _canonical_edge_codes(ctx, app, levels)
@@ -492,13 +537,40 @@ def reduce_domain_sharded(ctx: GraphCtx, app: MiningApp,
     park = Pn * V
     dom, vid, ok, bucket = _domain_contributions(
         vert_vid, n_verts, valid & hit, perms, codes_all, canon, pat, park)
-    member = jnp.zeros((park + 1, ctx.n_vertices), jnp.uint8)
-    member = member.at[bucket, jnp.clip(vid, 0, ctx.n_vertices - 1)].max(
-        ok.astype(jnp.uint8))
-    member = member[:park]
-    for ax in axis_names:        # pmax == set union, device-count-proof
-        member = jax.lax.pmax(member, ax)
-    distinct = jnp.sum((member > 0).astype(jnp.int32), axis=1)
+    if packed:
+        n_words = -(-ctx.n_vertices // 32)
+        vid_c = jnp.clip(vid, 0, ctx.n_vertices - 1)
+        # set each (bucket, vertex) bit exactly once: lexsort + adjacent-
+        # unique dedupe, then one scatter-add of the per-vertex bit value
+        # (a once-only sum of distinct powers of two is a bitwise OR)
+        order = jnp.lexsort((vid_c, bucket))
+        bucket_s, vid_s = bucket[order], vid_c[order]
+        first = jnp.ones(bucket_s.shape, bool)
+        first = first.at[1:].set((bucket_s[1:] != bucket_s[:-1])
+                                 | (vid_s[1:] != vid_s[:-1]))
+        sel = first & (bucket_s < park)
+        bit = jnp.where(sel,
+                        jnp.uint32(1) << (vid_s & 31).astype(jnp.uint32),
+                        jnp.uint32(0))
+        member = jnp.zeros((park + 1, n_words), jnp.uint32)
+        member = member.at[jnp.minimum(bucket_s, park), vid_s >> 5].add(bit)
+        member = member[:park]
+        for ax in axis_names:    # set union = all-gather + bitwise OR
+            devs = jax.lax.all_gather(member, ax)
+            member = devs[0]
+            for d in range(1, devs.shape[0]):
+                member = member | devs[d]
+        distinct = jnp.sum(jax.lax.population_count(member).astype(
+            jnp.int32), axis=1)
+    else:
+        member = jnp.zeros((park + 1, ctx.n_vertices), jnp.uint8)
+        member = member.at[bucket,
+                           jnp.clip(vid, 0, ctx.n_vertices - 1)].max(
+            ok.astype(jnp.uint8))
+        member = member[:park]
+        for ax in axis_names:    # pmax == set union, device-count-proof
+            member = jax.lax.pmax(member, ax)
+        distinct = jnp.sum((member > 0).astype(jnp.int32), axis=1)
     distinct = distinct.reshape(Pn, V)
     return _domain_support(ctx, app, uniq, pat_valid, distinct, pat, valid,
                            V, n_eff)
@@ -561,6 +633,14 @@ class ReferenceBackend(PhaseBackend):
         row, u, add, _ = self._vertex_candidates(ctx, app, emb, n_valid,
                                                  state, cand_cap)
         return finish_extend_vertex(emb, row, u, add, out_cap, fuse_filter)
+
+    def extend_pruned(self, ctx, app, emb, n_valid, state, cand_cap,
+                      out_cap, fuse_filter=True):
+        row, u, add, total = self._vertex_candidates(ctx, app, emb, n_valid,
+                                                     state, cand_cap)
+        level, new_emb = finish_extend_vertex(emb, row, u, add, out_cap,
+                                              fuse_filter)
+        return level, new_emb, total
 
     # -- edge EXTEND
     def candidate_bound_edge(self, ctx, app, v0, vid, his, n_valid):

@@ -16,10 +16,13 @@ This module separates *planning* from *execution*:
   process skips the inspection pass entirely (``--plan-cache``).
 * Capacity policies — the *one* level loop in :mod:`repro.core.engine`
   asks a policy for each level's capacities.  :class:`HostCapPolicy` is
-  the paper's inspection-execution (exact counts, host sync, bucketed to
-  powers of two) and records the plan as a side effect;
-  :class:`PlanCapPolicy` replays a recorded plan with **no host sync** —
-  it is jit-traceable and accumulates an overflow flag instead.
+  the paper's inspection-execution (exact counts, host sync; candidate
+  caps bucket to powers of two, output caps to tight survivor-scale
+  multiples — see :func:`bucket_cap`) and records the plan as a side
+  effect; :class:`PlanCapPolicy` replays a recorded plan with **no host
+  sync and no inspection pass** — the fused ``extend_pruned`` op reports
+  the true counts with its result, and the policy folds them into a
+  jit-traceable overflow flag.
 * :class:`MiningExecutor` — compiles the whole mining run once per plan
   (one XLA executable with static capacities) and reuses it across edge
   blocks and repeated runs.  Overflow (a block bigger than the plan
@@ -49,6 +52,28 @@ def bucket_pow2(n: int, minimum: int = 128) -> int:
     """Round up to the next power of two (bounded retrace count)."""
     n = max(int(n), minimum)
     return 1 << (n - 1).bit_length()
+
+
+def bucket_cap(n: int, quantum: int = 128, minimum: int = 128) -> int:
+    """Survivor-scale capacity: round up to a tight multiple of quantum.
+
+    Post-filter buffers (extend ``out_cap``, FSM filter caps) are planned
+    from *exact* survivor counts, so the pow2 slack bucket_pow2 carries —
+    up to 2x over-allocation — buys nothing once a plan is recorded: the
+    executor compiles per plan anyway.  Tight caps are the memory half of
+    eager pruning: warm-run buffers scale with survivors, not candidates.
+    Overflow (a later block/run with more survivors) is already handled by
+    the executor's grow-and-retry loop.
+    """
+    n = max(int(n), minimum)
+    return -(-n // quantum) * quantum
+
+
+PLAN_SCHEMA = 2
+
+
+class StalePlanError(ValueError):
+    """A serialized plan from an incompatible (older/newer) schema."""
 
 
 # ---------------------------------------------------------------------------
@@ -83,7 +108,7 @@ class MiningPlan:
 
     def to_json(self) -> str:
         return json.dumps({
-            "schema": 1, "kind": self.kind, "cap0": self.cap0,
+            "schema": PLAN_SCHEMA, "kind": self.kind, "cap0": self.cap0,
             "caps": [list(c) for c in self.caps],
             "filter_caps": list(self.filter_caps),
             "signature": self.signature, "source": self.source})
@@ -91,6 +116,13 @@ class MiningPlan:
     @classmethod
     def from_json(cls, text: str) -> "MiningPlan":
         d = json.loads(text)
+        schema = d.get("schema")
+        if schema != PLAN_SCHEMA:
+            # capacity semantics changed (e.g. pow2 -> survivor-scale
+            # buckets); replaying a stale plan would be silently wasteful
+            # or overflow-loop, so callers must ignore it and re-plan
+            raise StalePlanError(
+                f"plan schema {schema!r} != current {PLAN_SCHEMA}")
         return cls(kind=d["kind"], cap0=int(d["cap0"]),
                    caps=tuple((int(c), int(o)) for c, o in d["caps"]),
                    filter_caps=tuple(int(f) for f in d["filter_caps"]),
@@ -109,10 +141,18 @@ def plan_signature(graph_digest: str, app, backend_name: str, cap0: int,
 
 
 class PlanCache:
-    """Directory of ``<signature>.json`` plans (atomic writes)."""
+    """Directory of ``<signature>.json`` plans (atomic writes).
 
-    def __init__(self, directory: str):
+    Entries carry a schema version: stale-schema (or corrupt) files are
+    ignored on load and deleted, so a capacity-semantics change never
+    replays an incompatible plan.  ``max_entries`` caps the directory with
+    LRU-by-mtime eviction — reads touch the file's mtime, writes evict the
+    oldest entries past the cap (``--plan-cache-max`` on the CLI).
+    """
+
+    def __init__(self, directory: str, max_entries: Optional[int] = None):
         self.directory = directory
+        self.max_entries = max_entries
 
     def _path(self, signature: str) -> str:
         return os.path.join(self.directory, f"{signature}.json")
@@ -121,8 +161,19 @@ class PlanCache:
         path = self._path(signature)
         if not os.path.exists(path):
             return None
-        with open(path) as f:
-            plan = MiningPlan.from_json(f.read())
+        try:
+            with open(path) as f:
+                plan = MiningPlan.from_json(f.read())
+        except (StalePlanError, ValueError, KeyError):
+            try:
+                os.remove(path)              # stale schema / corrupt entry
+            except OSError:
+                pass
+            return None
+        try:
+            os.utime(path)                   # LRU touch
+        except OSError:
+            pass
         return dataclasses.replace(plan, source="cache")
 
     def put(self, plan: MiningPlan) -> str:
@@ -132,7 +183,30 @@ class PlanCache:
         with os.fdopen(fd, "w") as f:
             f.write(plan.to_json())
         os.replace(tmp, path)
+        self._evict()
         return path
+
+    def _evict(self) -> None:
+        if self.max_entries is None:
+            return
+        try:
+            names = [n for n in os.listdir(self.directory)
+                     if n.endswith(".json")]
+        except OSError:
+            return
+        if len(names) <= self.max_entries:
+            return
+        def mtime(name):
+            try:
+                return os.path.getmtime(os.path.join(self.directory, name))
+            except OSError:
+                return 0.0
+        for name in sorted(names, key=mtime)[: len(names)
+                                             - self.max_entries]:
+            try:
+                os.remove(os.path.join(self.directory, name))
+            except OSError:
+                pass
 
 
 # ---------------------------------------------------------------------------
@@ -143,10 +217,13 @@ class HostCapPolicy:
     """Inspection-execution with per-level host sync; records the plan.
 
     ``extend_caps`` runs the cheap degree-sum bound, then the exact
-    inspection jit, and buckets both counts to powers of two — exactly the
-    paper's inspection-execution at the host/XLA boundary.  Every decision
-    is appended to ``caps`` / ``filter_caps`` so a finished run doubles as
-    a planning pass.
+    inspection jit — the paper's inspection-execution at the host/XLA
+    boundary.  Candidate capacities bucket to powers of two (the bound is
+    loose and varies); output capacities are planned *post-filter* at
+    tight survivor scale (:func:`bucket_cap`) from the exact survivor
+    count the inspection observed.  Every decision is appended to
+    ``caps`` / ``filter_caps`` so a finished run doubles as a planning
+    pass.
     """
 
     traceable = False
@@ -157,13 +234,27 @@ class HostCapPolicy:
 
     def extend_caps(self, pipe):
         cand_cap = bucket_pow2(int(pipe.bound()))
-        n_cand, n_next = pipe.inspect(cand_cap)
-        out_cap = bucket_pow2(int(n_next))
+        _, n_next = pipe.inspect(cand_cap)
+        out_cap = bucket_cap(int(n_next))
         self.caps.append((cand_cap, out_cap))
-        return cand_cap, out_cap, int(n_cand)
+        return cand_cap, out_cap
+
+    def note_extend(self, n_cand, n_surv, cand_cap: int,
+                    out_cap: int) -> None:
+        # out_cap was planned from the inspection pass's exact survivor
+        # count; more survivors coming back from extend_pruned means the
+        # inspect and extend predicates disagree (app hook drift between
+        # to_add/to_add_bits/to_add_kernel).  With tight survivor-scale
+        # caps that would silently truncate results — fail loudly instead.
+        if int(n_surv) > out_cap or int(n_cand) > cand_cap:
+            raise RuntimeError(
+                f"extend produced {int(n_surv)} survivors / "
+                f"{int(n_cand)} candidates for planned caps "
+                f"({cand_cap}, {out_cap}): the app's toAdd hook variants "
+                f"disagree between inspection and extension")
 
     def filter_cap(self, n_keep) -> int:
-        cap = bucket_pow2(int(n_keep))
+        cap = bucket_cap(int(n_keep))
         self.filter_caps.append(cap)
         return cap
 
@@ -174,9 +265,13 @@ class HostCapPolicy:
 class PlanCapPolicy:
     """Replay a :class:`MiningPlan` with no host sync (jit-traceable).
 
+    The fused ``extend_pruned`` op returns the true candidate/survivor
+    counts with its result, so plan replay runs **no** inspection pass at
+    all — the loop body is one enumeration per level instead of two.
     Capacities overflowing truncate the worklist; the accumulated
-    ``overflow`` flag reports it so the executor (or the bounded-mode
-    caller) can re-plan and retry — the bounded-mode contract.
+    ``overflow`` flag (fed by :meth:`note_extend`) reports it so the
+    executor (or the bounded-mode caller) can re-plan and retry — the
+    bounded-mode contract.
     """
 
     traceable = True
@@ -190,9 +285,12 @@ class PlanCapPolicy:
     def extend_caps(self, pipe):
         cand_cap, out_cap = self.plan.caps[self._li]
         self._li += 1
-        total, n_next = pipe.inspect(cand_cap)
-        self._ovf = self._ovf | (total > cand_cap) | (n_next > out_cap)
-        return cand_cap, out_cap, total
+        return cand_cap, out_cap
+
+    def note_extend(self, n_cand, n_surv, cand_cap: int,
+                    out_cap: int) -> None:
+        self._ovf = (self._ovf | (n_cand > cand_cap)
+                     | (n_surv > out_cap))
 
     def filter_cap(self, n_keep) -> int:
         cap = self.plan.filter_caps[self._fi]

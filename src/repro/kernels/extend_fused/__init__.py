@@ -1,2 +1,4 @@
-from repro.kernels.extend_fused.ops import fused_extend
-from repro.kernels.extend_fused.ref import fused_extend_ref
+from repro.kernels.extend_fused.ops import (fused_extend,
+                                            fused_extend_pruned)
+from repro.kernels.extend_fused.ref import (fused_extend_pruned_ref,
+                                            fused_extend_ref)

@@ -30,11 +30,18 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _take(arr, idx2d):
     """Gather a 1-D VMEM array at a [1, block] index tile."""
     return jnp.take(arr, idx2d.reshape(-1), axis=0).reshape(idx2d.shape)
+
+
+def _take_tile(tile, idx2d):
+    """Gather a computed [1, block] tile at a [1, block] index tile."""
+    return jnp.take(tile.reshape(-1), idx2d.reshape(-1),
+                    axis=0).reshape(idx2d.shape)
 
 
 def _fused_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
@@ -140,3 +147,197 @@ def fused_extend_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
         interpret=interpret,
     )(offsets, starts, emb_flat, vlo, vhi, col)
     return row[:cand_cap], u[:cand_cap], src_slot[:cand_cap], conn[:cand_cap]
+
+
+# ---------------------------------------------------------------------------
+# Eager in-kernel pruning: predicate + stream compaction fused into EXTEND
+
+
+def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
+                          col_ref, state_ref, bits_ref,
+                          row_ref, u_ref, cnt_ref, base_ref, *,
+                          k: int, m: int, n_parents: int, n_steps: int,
+                          n_steps_p: int, block_c: int, cand_cap: int,
+                          out_len: int, n_tiles: int, n_vertices: int,
+                          n_words: int, use_bitmap: bool, pred):
+    offsets = offsets_ref[...]
+    starts = starts_ref[...]
+    emb_flat = emb_ref[...]
+    vlo = vlo_ref[...]
+    vhi = vhi_ref[...]
+    col = col_ref[...]
+    state = state_ref[...]
+    bits = bits_ref[...]
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        base_ref[0] = 0
+
+    slot = (i * block_c
+            + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1))
+
+    # stage 1 — parent search on the inclusive prefix sum (as fused_extend)
+    low = jnp.zeros_like(slot)
+    high = jnp.full_like(slot, n_parents - 1)
+    for _ in range(n_steps_p):
+        mid = (low + high) >> 1
+        val = _take(offsets, jnp.clip(mid, 0, n_parents - 1))
+        go_right = val <= slot
+        low = jnp.where(go_right, mid + 1, low)
+        high = jnp.where(go_right, high, mid - 1)
+    p = jnp.clip(low, 0, n_parents - 1)
+    row = p // k
+    src_slot = p % k
+
+    # stage 2 — candidate gather from the CSR chunk
+    rank = slot - _take(starts, p)
+    ptr = _take(vlo, p) + rank
+    u = _take(col, jnp.clip(ptr, 0, m - 1))
+    total = offsets[n_parents - 1]
+    live = (slot < total) & (slot < cand_cap)
+
+    # stage 3 — k-way connectivity: one bitmap word gather + bit test per
+    # slot when the graph is fully bit-packed, else the CSR binary search
+    base_p = row * k
+    u_c = jnp.clip(u, 0, n_vertices - 1)
+    emb_cols, conn_cols = [], []
+    for j in range(k):
+        pj = jnp.clip(base_p + j, 0, n_parents - 1)
+        ev = _take(emb_flat, pj)
+        if use_bitmap:
+            widx = jnp.clip(ev, 0, n_vertices - 1) * n_words + (u_c >> 5)
+            w = _take(bits, widx)
+            bit = (w >> (u_c & 31).astype(jnp.uint32)) & jnp.uint32(1)
+            found = bit == 1
+        else:
+            lo_b = _take(vlo, pj)
+            hi_b = _take(vhi, pj)
+            lo_s, hi_s = lo_b, hi_b - 1
+            for _ in range(max(n_steps, 1)):
+                mid = (lo_s + hi_s) >> 1
+                val = _take(col, jnp.clip(mid, 0, m - 1))
+                go_right = val < u
+                lo_s = jnp.where(go_right, mid + 1, lo_s)
+                hi_s = jnp.where(go_right, hi_s, mid - 1)
+            probe = jnp.clip(lo_s, 0, m - 1)
+            found = (_take(col, probe) == u) & (lo_s < hi_b) & (lo_b < hi_b)
+        found = found & (ev >= 0) & (u >= 0)
+        emb_cols.append(ev)
+        conn_cols.append(found)
+
+    # stage 4 — the app's eager toAdd / symmetry-break predicate, traced
+    # directly into the kernel on the (1, block_c) lane tiles
+    st = _take(state, jnp.clip(row, 0, n_parents // k - 1))
+    mask = pred(tuple(emb_cols), u, src_slot, st, tuple(conn_cols)) & live
+
+    # stage 5 — in-tile exclusive-scan stream compaction.  incl[j] is the
+    # 1-based output rank of slot j among this tile's survivors; the
+    # stable compaction gather sel[t] = "first j with incl[j] >= t+1" is
+    # the same branchless binary search as stage 1, over the tile.
+    mi = mask.astype(jnp.int32)
+    incl = jnp.cumsum(mi, axis=1)
+    cnt = incl[0, block_c - 1]
+    t = 1 + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
+    lo_t = jnp.zeros_like(t)
+    hi_t = jnp.full_like(t, block_c - 1)
+    for _ in range(max(1, math.ceil(math.log2(block_c)))):
+        mid = (lo_t + hi_t) >> 1
+        val = _take_tile(incl, jnp.clip(mid, 0, block_c - 1))
+        go_right = val < t
+        lo_t = jnp.where(go_right, mid + 1, lo_t)
+        hi_t = jnp.where(go_right, hi_t, mid - 1)
+    sel = jnp.clip(lo_t, 0, block_c - 1)
+    lane_live = t <= cnt
+    comp_row = jnp.where(lane_live, _take_tile(row, sel), 0)
+    comp_u = jnp.where(lane_live, _take_tile(u, sel), -1)
+
+    # stage 6 — append at the running survivor offset.  The grid is
+    # sequential (TPU contract; interpret mode likewise), so the SMEM
+    # running count makes the cross-tile exclusive scan free.  Overflowing
+    # tiles clamp into the tail headroom — garbage there is fine because
+    # the true survivor count is returned and flagged by the planner.
+    base = base_ref[0]
+    bw = jnp.minimum(base, out_len - block_c)
+    row_ref[pl.dslice(bw, block_c)] = comp_row.reshape(block_c)
+    u_ref[pl.dslice(bw, block_c)] = comp_u.reshape(block_c)
+    base_ref[0] = base + cnt
+    cnt_ref[0] = base + cnt
+
+
+def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
+                               starts: jnp.ndarray, emb_flat: jnp.ndarray,
+                               vlo: jnp.ndarray, vhi: jnp.ndarray,
+                               state: jnp.ndarray, bits: jnp.ndarray, *,
+                               k: int, cand_cap: int, out_cap: int,
+                               n_steps: int, n_vertices: int, n_words: int,
+                               pred, use_bitmap: bool, block_c: int = 512,
+                               interpret: bool = False):
+    """Fused EXTEND with eager in-kernel pruning + stream compaction.
+
+    One kernel enumerates candidates (ragged expand + CSR gather), probes
+    k-way connectivity (against the u32 bit-packed adjacency bitmap when
+    ``use_bitmap``, CSR binary search otherwise), evaluates the app's
+    elementwise ``to_add_kernel`` predicate ``pred`` per candidate, and
+    exclusive-scan-compacts the survivors into ``out_cap``-scale buffers —
+    dead candidates are never materialized in HBM (paper §4 / §5.2 eager
+    pruning).  Returns (row i32[out_cap], u i32[out_cap], n_surv i32[1])
+    with ``n_surv`` the *true* survivor count (may exceed ``out_cap``;
+    slots past ``min(n_surv, out_cap)`` are garbage the caller masks).
+
+    The cross-tile output offset lives in SMEM scratch and relies on the
+    sequential TPU grid (interpret mode is likewise sequential); this
+    kernel is not safe on architectures with concurrent grid tiles.
+    """
+    n_parents = offsets.shape[0]
+    m = col_idx.shape[0]
+    cap = n_parents // k
+
+    def rup(x, q):
+        return -(-x // q) * q
+
+    p_pad = rup(n_parents, 128)
+
+    def pad_to(x, size, fill=0):
+        return jnp.pad(x, (0, size - x.shape[0]), constant_values=fill)
+
+    offsets_p = pad_to(offsets.astype(jnp.int32), p_pad)
+    starts_p = pad_to(starts.astype(jnp.int32), p_pad)
+    emb_p = pad_to(emb_flat.astype(jnp.int32), p_pad)
+    vlo_p = pad_to(vlo.astype(jnp.int32), p_pad)
+    vhi_p = pad_to(vhi.astype(jnp.int32), p_pad)
+    m_pad = rup(m, 128)
+    col = pad_to(col_idx, m_pad, fill=2**31 - 1)
+    cap_pad = rup(max(cap, 1), 128)
+    state_p = pad_to(state.astype(jnp.int32), cap_pad)
+    b_pad = rup(max(int(bits.shape[0]), 1), 128)
+    bits_p = pad_to(bits.astype(jnp.uint32), b_pad)
+    c_pad = rup(cand_cap, block_c)
+    n_tiles = c_pad // block_c
+    out_len = rup(out_cap, block_c) + block_c
+    n_steps_p = max(1, math.ceil(math.log2(n_parents + 1)))
+
+    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    row, u, cnt = pl.pallas_call(
+        functools.partial(_pruned_extend_kernel, k=k, m=m,
+                          n_parents=n_parents, n_steps=n_steps,
+                          n_steps_p=n_steps_p, block_c=block_c,
+                          cand_cap=cand_cap, out_len=out_len,
+                          n_tiles=n_tiles, n_vertices=n_vertices,
+                          n_words=n_words, use_bitmap=use_bitmap,
+                          pred=pred),
+        grid=(n_tiles,),
+        in_specs=[full(p_pad)] * 5 + [full(m_pad), full(cap_pad),
+                                      full(b_pad)],
+        out_specs=[full(out_len), full(out_len), full(1)],
+        out_shape=[jax.ShapeDtypeStruct((out_len,), jnp.int32),
+                   jax.ShapeDtypeStruct((out_len,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(offsets_p, starts_p, emb_p, vlo_p, vhi_p, col, state_p, bits_p)
+    n_surv = cnt[0]
+    live = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
+    return (jnp.where(live, row[:out_cap], 0),
+            jnp.where(live, u[:out_cap], -1), n_surv)

@@ -1,11 +1,12 @@
-"""Jitted public wrapper for the fused extend kernel."""
+"""Jitted public wrappers for the fused extend kernels."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.extend_fused.extend import fused_extend_pallas
+from repro.kernels.extend_fused.extend import (fused_extend_pallas,
+                                               fused_extend_pruned_pallas)
 
 
 @partial(jax.jit, static_argnames=("k", "cand_cap", "n_steps", "block_c",
@@ -21,3 +22,25 @@ def fused_extend(col_idx, offsets, starts, emb_flat, vlo, vhi, *, k: int,
     return fused_extend_pallas(col_idx, offsets, starts, emb_flat, vlo, vhi,
                                k=k, cand_cap=cand_cap, n_steps=n_steps,
                                block_c=block_c, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "cand_cap", "out_cap", "n_steps",
+                                   "n_vertices", "n_words", "pred",
+                                   "use_bitmap", "block_c", "interpret"))
+def fused_extend_pruned(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
+                        bits, *, k: int, cand_cap: int, out_cap: int,
+                        n_steps: int, n_vertices: int, n_words: int, pred,
+                        use_bitmap: bool, block_c: int = 512,
+                        interpret: bool = False):
+    """Eager-pruning fused extend: enumerate + in-kernel ``pred`` filter +
+    stream compaction, connectivity via the bit-packed bitmap when
+    ``use_bitmap``.  ``pred`` is a static elementwise callable (the app's
+    ``to_add_kernel``).  Returns (row, u) compacted to ``out_cap`` and the
+    true survivor count; see
+    :func:`repro.kernels.extend_fused.extend.fused_extend_pruned_pallas`.
+    """
+    return fused_extend_pruned_pallas(
+        col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits, k=k,
+        cand_cap=cand_cap, out_cap=out_cap, n_steps=n_steps,
+        n_vertices=n_vertices, n_words=n_words, pred=pred,
+        use_bitmap=use_bitmap, block_c=block_c, interpret=interpret)

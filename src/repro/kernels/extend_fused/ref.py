@@ -1,9 +1,10 @@
-"""Pure-jnp oracle for the fused extend kernel (same outputs, XLA ops)."""
+"""Pure-jnp oracles for the fused extend kernels (same outputs, XLA ops)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.sparse.intersect import binary_contains
+from repro.sparse.ops import compact_mask
 
 
 def fused_extend_ref(col_idx, offsets, starts, emb_flat, vlo, vhi, *,
@@ -25,3 +26,28 @@ def fused_extend_ref(col_idx, offsets, starts, emb_flat, vlo, vhi, *,
         found = found & (emb_flat[pj] >= 0) & (u >= 0)
         conn = conn | (found.astype(jnp.int32) << j)
     return row, u, src_slot, conn
+
+
+def fused_extend_pruned_ref(col_idx, offsets, starts, emb_flat, vlo, vhi,
+                            state, *, k: int, cand_cap: int, out_cap: int,
+                            n_steps: int, pred):
+    """Oracle for the eager-pruning kernel: enumerate, evaluate ``pred``,
+    prefix-sum compact — composed from the reference XLA ops.  Returns
+    (row i32[out_cap], u i32[out_cap], n_surv i32[]) with the same
+    padding contract as :func:`fused_extend_pruned_pallas`."""
+    n_parents = offsets.shape[0]
+    row, u, src_slot, conn = fused_extend_ref(
+        col_idx, offsets, starts, emb_flat, vlo, vhi, k=k,
+        cand_cap=cand_cap, n_steps=n_steps)
+    total = offsets[-1]
+    slots = jnp.arange(cand_cap, dtype=jnp.int32)
+    live = slots < jnp.minimum(total, cand_cap)
+    row_c = jnp.clip(row, 0, n_parents // k - 1)
+    emb_cols = tuple(emb_flat[row_c * k + j] for j in range(k))
+    conn_cols = tuple(((conn >> j) & 1).astype(bool) for j in range(k))
+    st = state[row_c]
+    mask = pred(emb_cols, u, src_slot, st, conn_cols) & live
+    gather, n_surv = compact_mask(mask, out_cap)
+    live_out = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
+    return (jnp.where(live_out, row_c[gather], 0),
+            jnp.where(live_out, u[gather], -1), n_surv)

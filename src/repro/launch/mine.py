@@ -62,6 +62,9 @@ def main(argv=None):
     ap.add_argument("--plan-cache", default=None, metavar="DIR",
                     help="persist/load capacity plans; a warm cache skips "
                          "the per-level inspection pass")
+    ap.add_argument("--plan-cache-max", type=int, default=None, metavar="N",
+                    help="cap the plan-cache directory at N entries "
+                         "(LRU-by-mtime eviction)")
     ap.add_argument("--repeat", type=int, default=1,
                     help="run the mining N times (later runs reuse the "
                          "compiled plan executor)")
@@ -95,17 +98,22 @@ def main(argv=None):
                              "(global support sync); use mine_sharded")
         m = int(miner.init_edges()[0].shape[0])
         block_size = -(-m // args.blocks)
+    plan_cache = args.plan_cache
+    if plan_cache is not None and args.plan_cache_max is not None:
+        from repro.core import PlanCache
+        plan_cache = PlanCache(plan_cache, max_entries=args.plan_cache_max)
     r = None
     for i in range(max(args.repeat, 1)):
         t0 = time.time()
         r = miner.run(block_size=block_size, collect_stats=args.stats,
-                      plan_cache=args.plan_cache)
+                      plan_cache=plan_cache)
         dt = time.time() - t0
         if args.repeat > 1:
             print(f"[mine] run {i}: {dt:.3f}s")
     for rep in miner.plan_reports():
         print(f"[mine] plan cap0={rep['cap0']} source={rep['source']} "
-              f"caps={rep['caps']} compiles={rep['compiles']} "
+              f"caps={rep['caps']} out_cap_total={rep['out_cap_total']} "
+              f"compiles={rep['compiles']} "
               f"executions={rep['executions']} replans={rep['replans']}")
     if app.kind == "edge":
         found = [(int(c), int(s)) for c, s in zip(r.codes, r.supports)
