@@ -7,5 +7,8 @@ from repro.core.plan import (HostCapPolicy, MiningExecutor, MiningPlan,
                              PlanCache, PlanCapPolicy, plan_signature)
 from repro.core.phases import (PhaseBackend, available_backends, get_backend,
                                register_backend)
-from repro.core.apps import (make_tc_app, make_cf_app, make_mc_app,
-                             make_fsm_app, triangle_count_fused)
+from repro.core.apps import (make_tc_app, make_cf_app, make_cf_app_compiled,
+                             make_mc_app, make_fsm_app, pattern_app,
+                             triangle_count_fused)
+from repro.core.patterns import (Pattern, compile_pattern,
+                                 n_connected_patterns, pattern_names)

@@ -87,6 +87,9 @@ def make_ctx(g: CSRGraph, search: str = "binary",
     makes every ``is_connected`` evaluate both the bitmap probe and the
     CSR fallback (vectorized select), which is a pessimization unless a
     consumer exploits the packed rows — opt in with ``pack_partial``.
+    The pruned Pallas kernel is such a consumer: its mixed connectivity
+    mode answers packed rows from the bitmap and binary-searches only
+    the tail (``Miner(pack_partial=True, pack_max_bytes=...)``).
     """
     max_deg = max(g.max_degree, 1)
     n_steps = max(1, math.ceil(math.log2(max_deg + 1)))
@@ -199,7 +202,7 @@ def is_auto_canonical_kernel(emb_cols, u, src_slot, state, conn):
     return ok & found
 
 
-def resolve_kernel_predicate(app: "MiningApp"):
+def resolve_kernel_predicate(app: "MiningApp", k: Optional[int] = None):
     """The eager in-kernel ``toAdd`` predicate for ``app``, or None.
 
     Fused backends prune candidates *inside* the extend kernel (filter +
@@ -211,11 +214,29 @@ def resolve_kernel_predicate(app: "MiningApp"):
     ``use_dag`` apps without hooks, where the precomputed connectivity
     bits have the wrong ``isConnected`` direction for the default test —
     return None and take the unfused enumerate-then-filter path.
+
+    ``to_add_kernel`` may be *per-level*: a sequence indexed by extension
+    level, entry ``k - 2`` deciding the extension from ``k`` parent
+    vertices to ``k + 1`` (the pattern compiler emits one predicate per
+    matching-order position).  Backends pass ``k`` — the parent embedding
+    width — to select the level's predicate; a plain callable ignores it.
     """
     if app.kind != "vertex":
         return None
     if app.to_add_kernel is not None:
-        return app.to_add_kernel
+        tak = app.to_add_kernel
+        if callable(tak):
+            return tak
+        if k is None:
+            raise ValueError(
+                f"app {app.name!r} has a per-level to_add_kernel; callers "
+                "must pass the level (parent embedding width k)")
+        idx = k - 2
+        if not 0 <= idx < len(tak):
+            raise ValueError(
+                f"app {app.name!r}: no to_add_kernel entry for level k={k} "
+                f"({len(tak)} per-level predicates)")
+        return tak[idx]
     if app.to_add is None and app.to_add_bits is None and not app.use_dag:
         return is_auto_canonical_kernel
     return None
@@ -277,7 +298,23 @@ class MiningApp:
     (the paper's eager pruning, §4); the reference backend traces the
     same function on flat batches, keeping the two backends bitwise
     equal.  Supply it whenever the app's ``toAdd`` only needs the parent
-    vertices, the candidate, and the k connectivity bits.
+    vertices, the candidate, and the k connectivity bits.  It may also be
+    a *sequence* of such predicates, indexed by extension level (entry
+    ``k - 2`` extends ``k``-vertex embeddings) — the form the pattern
+    compiler emits, one symmetry-breaking/connectivity predicate per
+    matching-order position (see :func:`resolve_kernel_predicate`).
+
+    ``directed_worklist`` makes the level-0 worklist the *directed* edge
+    list (both orientations of every undirected edge) instead of the
+    ``src < dst`` half.  Compiled pattern apps need it when matching
+    positions 0 and 1 are not automorphism-exchangeable (no ``v0 < v1``
+    symmetry-breaking constraint exists, so both orientations are
+    distinct partial matches).  Ignored by ``use_dag`` apps (the DAG
+    already directs the worklist).
+
+    ``plan_key`` is extra app identity folded into the capacity-plan
+    signature — pattern apps put the pattern's isomorphism hash here so
+    two different patterns of the same size never share a cached plan.
     """
 
     name: str
@@ -292,8 +329,11 @@ class MiningApp:
     to_extend: Optional[Callable] = None
     to_add: Optional[Callable] = None
     to_add_bits: Optional[Callable] = None  # fused-backend toAdd variant
-    to_add_kernel: Optional[Callable] = None  # in-kernel elementwise toAdd
+    # in-kernel elementwise toAdd: one callable, or a per-level sequence
+    to_add_kernel: Optional[Callable | tuple] = None
     get_pattern: Optional[Callable] = None
     to_prune: Optional[Callable] = None
     init_state: Optional[Callable] = None   # (ctx, emb[N,2]) -> state[N]
     backend: Optional[str] = None           # preferred phase backend
+    directed_worklist: bool = False         # level-0: both edge orientations
+    plan_key: str = ""                      # extra plan-signature identity

@@ -88,3 +88,17 @@ def make_cf_app(k: int, use_dag: bool = True,
     return MiningApp(name=f"{k}-clique", kind="vertex", max_size=k,
                      use_dag=use_dag, to_extend=to_extend, to_add=to_add,
                      to_add_bits=to_add_bits, to_add_kernel=to_add_kernel)
+
+
+def make_cf_app_compiled(k: int) -> MiningApp:
+    """k-clique via the pattern compiler instead of the hand-written rules.
+
+    ``pattern_app(Pattern.clique(k))`` derives the same eager pruning
+    automatically: the compiled symmetry-breaking chain for K_k is the
+    total order ``v0 < v1 < ... < v_{k-1}`` — the role DAG orientation
+    plays in the hand-written app.  Kept alongside :func:`make_cf_app`
+    as the compiler's parity check (both must count every clique once).
+    """
+    from repro.core.apps.psm import pattern_app
+    from repro.core.patterns import Pattern
+    return pattern_app(Pattern.clique(k))

@@ -18,13 +18,26 @@ import jax.numpy as jnp
 
 from repro.core.api import GraphCtx, MiningApp
 from repro.core import pattern as P
+from repro.core.patterns import n_connected_patterns
 from repro.core.reduce import build_adjacency
 
 
 def make_mc_app(k: int, mode: str = "memo", use_quick: bool = True,
                 max_patterns: int | None = None) -> MiningApp:
     if max_patterns is None:
-        max_patterns = P.N_MOTIFS.get(k, 32)
+        # the pattern table must hold every connected k-vertex graph; the
+        # exact bound comes from the pattern subsystem's exhaustive
+        # enumeration (2 / 6 / 21 / 112 for k = 3..6) — beyond its reach
+        # this raises instead of silently guessing a table size that
+        # would clip rare motifs out of the census
+        max_patterns = P.N_MOTIFS.get(k)
+        if max_patterns is None:
+            try:
+                max_patterns = n_connected_patterns(k)
+            except ValueError as e:
+                raise ValueError(
+                    f"{k}-motif counting needs an explicit max_patterns: "
+                    f"{e}") from e
 
     def get_pattern(ctx: GraphCtx, emb: jnp.ndarray, state, valid):
         kk = emb.shape[1]

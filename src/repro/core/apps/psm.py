@@ -1,0 +1,138 @@
+"""Generic pattern mining: any compiled pattern as a MiningApp.
+
+``pattern_app(Pattern.named("diamond"))`` turns a pattern spec into a
+mining application whose per-level hooks are *generated* from the
+compiled :class:`~repro.core.patterns.compile.MatchingPlan`:
+
+* ``to_extend`` activates exactly one anchor slot per level (the
+  matching order guarantees every position has an already-matched
+  neighbor), so each candidate is enumerated once, from one adjacency
+  list;
+* ``to_add_kernel`` is a tuple of per-level elementwise predicates —
+  required/forbidden connectivity bits plus the symmetry-breaking order
+  constraints — evaluated *inside* the fused Pallas extend kernel
+  (eager pruning): dead candidates are never materialized, and no
+  ``get_pattern`` reduce / canonical labeling ever runs.  Counting is
+  exact because the compiler's constraints admit one embedding per
+  automorphism class.
+
+Labeled patterns need a ``ctx.labels`` gather per candidate, which the
+elementwise kernel form cannot express — they compile to the batch
+``to_add`` hook instead (enumerate-then-filter path, still no
+isomorphism tests).
+
+The hand-written clique app (:mod:`repro.core.apps.cf`) survives as the
+parity oracle for this compiler: ``pattern_app(Pattern.clique(k))`` must
+count exactly what ``make_cf_app(k)`` counts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.api import GraphCtx, MiningApp
+from repro.core.patterns import LevelPlan, MatchingPlan, Pattern, \
+    compile_pattern
+
+__all__ = ["pattern_app", "make_level_kernel_predicate"]
+
+
+def make_level_kernel_predicate(lp: LevelPlan):
+    """Elementwise in-kernel ``toAdd`` for one matching-order position.
+
+    ``conn[j]`` answers "candidate u is adjacent to embedding slot j";
+    required slots must be set, forbidden slots clear (induced matching),
+    every non-required slot gets an explicit ``u != emb_j`` (matching is
+    injective, and non-adjacency — or, non-induced, no check at all —
+    does not imply distinctness), and each symmetry-breaking constraint
+    ``v_j < v_new`` becomes ``u > emb_j``.  Pure elementwise ops only, so
+    the same function traces on flat jnp batches (reference backend) and
+    on VMEM lane tiles inside the fused Pallas kernel.
+    """
+    required, forbidden = lp.required, lp.forbidden
+    distinct, smaller = lp.distinct, lp.smaller
+
+    def pred(emb_cols, u, src_slot, state, conn):
+        ok = u >= 0
+        for j in required:           # adjacency also implies u != emb_j
+            ok = ok & conn[j]
+        for j in forbidden:
+            ok = ok & ~conn[j]
+        for j in distinct:
+            ok = ok & (u != emb_cols[j])
+        for j in smaller:
+            ok = ok & (u > emb_cols[j])
+        return ok
+
+    return pred
+
+
+def _make_to_extend(plan: MatchingPlan):
+    anchors = {lp.position: lp.anchor for lp in plan.levels}
+
+    def to_extend(ctx: GraphCtx, emb: jnp.ndarray) -> jnp.ndarray:
+        mask = jnp.zeros(emb.shape, bool)
+        return mask.at[:, anchors[emb.shape[1]]].set(True)
+
+    return to_extend
+
+
+def _make_labeled_to_add(plan: MatchingPlan):
+    """Batch ``toAdd`` for labeled patterns (needs a ctx.labels gather)."""
+    labels = plan.pattern.labels
+    by_pos = {lp.position: lp for lp in plan.levels}
+
+    def to_add(ctx: GraphCtx, emb: jnp.ndarray, u: jnp.ndarray,
+               src_slot, state):
+        kk = emb.shape[1]
+        lp = by_pos[kk]
+        lab = (ctx.labels if ctx.labels is not None
+               else jnp.zeros((ctx.n_vertices,), jnp.int32))
+
+        def label_of(v):
+            return lab[jnp.clip(v, 0, ctx.n_vertices - 1)]
+
+        ok = (u >= 0) & (label_of(u) == labels[kk])
+        if kk == 2:
+            # first extension doubles as the level-0 label filter: bad
+            # (v0, v1) labelings produce no survivors and die here
+            ok = ok & (label_of(emb[:, 0]) == labels[0])
+            ok = ok & (label_of(emb[:, 1]) == labels[1])
+        for j in lp.required:
+            ok = ok & ctx.is_connected(emb[:, j], u)
+        for j in lp.forbidden:
+            ok = ok & ~ctx.is_connected(emb[:, j], u)
+        for j in lp.distinct:
+            ok = ok & (u != emb[:, j])
+        for j in lp.smaller:
+            ok = ok & (u > emb[:, j])
+        return ok
+
+    return to_add
+
+
+def pattern_app(pattern: Pattern, induced: bool = True,
+                backend: Optional[str] = None) -> MiningApp:
+    """Compile ``pattern`` and wrap the plan as a generic MiningApp.
+
+    ``induced=True`` counts vertex-induced occurrences (motif-census
+    semantics: the compiled diamond count equals ``mc(4)``'s diamond
+    histogram entry); ``induced=False`` counts subgraph occurrences
+    (extra edges allowed).  Every occurrence is counted exactly once —
+    the compiled symmetry-breaking constraints replace both DAG
+    orientation and the runtime canonical test.  The result is
+    ``MineResult.count``; there is no reduce step and no pattern map.
+    """
+    plan = compile_pattern(pattern, induced=induced)
+    p = plan.pattern
+    common = dict(
+        name=f"psm[{pattern.name}]", kind="vertex", max_size=p.k,
+        backend=backend, max_patterns=1,
+        directed_worklist=not plan.first_pair_symmetric,
+        plan_key=plan.plan_key, to_extend=_make_to_extend(plan))
+    if p.labels is None:
+        kernels = tuple(make_level_kernel_predicate(lp)
+                        for lp in plan.levels)
+        return MiningApp(to_add_kernel=kernels, **common)
+    return MiningApp(to_add=_make_labeled_to_add(plan), **common)

@@ -383,7 +383,8 @@ class Miner:
 
     def __init__(self, graph: CSRGraph, app: MiningApp,
                  search: str = "binary", fuse_filter: bool = True,
-                 materialize_fn=None, backend: BackendSpec = None):
+                 materialize_fn=None, backend: BackendSpec = None,
+                 pack_max_bytes: int = 4 << 20, pack_partial: bool = False):
         self.app = app
         self.graph_in = graph
         self.backend = get_backend(backend if backend is not None
@@ -391,7 +392,9 @@ class Miner:
         g = orient_dag(graph) if app.use_dag else graph
         self.graph = g
         self.ctx = make_ctx(g, search=search,
-                            with_edge_uids=(app.kind == "edge"))
+                            with_edge_uids=(app.kind == "edge"),
+                            pack_max_bytes=pack_max_bytes,
+                            pack_partial=pack_partial)
         self.fuse_filter = fuse_filter
         self._materialize = materialize_fn or materialize
         self.ops = _PhaseOps(self.ctx, app, self.backend,
@@ -446,8 +449,13 @@ class Miner:
     # -- public ------------------------------------------------------------
 
     def init_edges(self):
-        """Level-0 worklist: DAG edges (directed) or undirected src<dst."""
-        if self.app.use_dag:
+        """Level-0 worklist: DAG edges (directed) or undirected src<dst.
+
+        Apps with ``directed_worklist`` (compiled patterns whose first two
+        matching positions are not automorphism-exchangeable) get both
+        orientations of every undirected edge.
+        """
+        if self.app.use_dag or self.app.directed_worklist:
             return self.graph.edge_list()
         return self.graph.undirected_edge_list()
 

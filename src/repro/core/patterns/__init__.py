@@ -1,0 +1,7 @@
+# Pattern-query subsystem: specs, the host compiler, and enumeration.
+from repro.core.patterns.spec import (MAX_PATTERN_SIZE, PATTERN_LIBRARY,
+                                      Pattern, enumerate_connected_codes,
+                                      n_connected_patterns, pattern_names)
+from repro.core.patterns.compile import (LevelPlan, MatchingPlan,
+                                         compile_pattern, matching_order,
+                                         symmetry_break)

@@ -24,9 +24,12 @@ composition model — a backend overrides exactly the ops it accelerates.
 Notes:
   * ``interpret=None`` auto-selects interpreter mode off-TPU, so the same
     backend name works on the CPU CI box and on real hardware.
-  * The kernel binary-searches when no full bitmap is available (the
-    paper's §5.4 choice); the ``search="linear"`` ablation knob only
-    affects the reference backend.
+  * Connectivity inside the pruned kernel is three-mode: full bitmap
+    when every row is packed, *mixed* when only a partial (high-degree)
+    pack fits the byte budget — packed rows answer from the bitmap, the
+    tail binary-searches the CSR (the power-law case) — and pure binary
+    search with no pack (the paper's §5.4 choice).  The
+    ``search="linear"`` ablation knob only affects the reference backend.
   * The bits-based default canonical test assumes symmetric adjacency
     (undirected input graph).  For ``use_dag`` apps without a
     ``to_add_bits``/``to_add`` hook, ``vertex_add_mask`` falls back to
@@ -87,7 +90,7 @@ class PallasExtendBackend(ReferenceBackend):
         u = jnp.where(live, u, -1)
         conn_b = (((conn[:, None] >> jnp.arange(k, dtype=jnp.int32)[None, :])
                    & 1).astype(bool) & live[:, None])
-        pred = resolve_kernel_predicate(app)
+        pred = resolve_kernel_predicate(app, k)
         if pred is not None:
             # same predicate resolution as extend_pruned (and as the
             # reference backend), so inspection counts and extension
@@ -105,7 +108,7 @@ class PallasExtendBackend(ReferenceBackend):
     def extend_pruned(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
                       n_valid: jnp.ndarray, state, cand_cap: int,
                       out_cap: int, fuse_filter: bool = True):
-        pred = resolve_kernel_predicate(app)
+        pred = resolve_kernel_predicate(app, emb.shape[1])
         if pred is None or not fuse_filter:
             # hooks not expressible in-kernel (or the materialize-then-
             # filter ablation): full-buffer enumeration + host-side hook
@@ -118,16 +121,29 @@ class PallasExtendBackend(ReferenceBackend):
         total = offsets[-1].astype(jnp.int32)
         st = (jnp.zeros((cap,), jnp.int32) if state is None
               else state.astype(jnp.int32))
+        # connectivity-probe mode: full pack -> pure bitmap; partial pack
+        # -> mixed (bitmap for packed rows, CSR binary search for the
+        # tail — the power-law case where only high-degree rows fit the
+        # pack budget); no pack -> CSR search only
         pg = ctx.packed
-        use_bitmap = pg is not None and pg.full
-        bits = (pg.words.reshape(-1) if use_bitmap
-                else jnp.zeros((1,), jnp.uint32))
-        n_words = pg.n_words if use_bitmap else 1
+        if pg is not None and pg.full:
+            conn_mode, n_rows = "bitmap", pg.n_packed
+            bits = pg.words.reshape(-1)
+            row_slot = jnp.zeros((1,), jnp.int32)
+        elif pg is not None:
+            conn_mode, n_rows = "mixed", pg.n_packed
+            bits = pg.words.reshape(-1)
+            row_slot = pg.row_slot
+        else:
+            conn_mode, n_rows = "search", 1
+            bits = jnp.zeros((1,), jnp.uint32)
+            row_slot = jnp.zeros((1,), jnp.int32)
+        n_words = pg.n_words if pg is not None else 1
         row, u, n_surv = fused_extend_pruned(
             ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi, st,
-            bits, k=k, cand_cap=cand_cap, out_cap=out_cap,
+            bits, row_slot, k=k, cand_cap=cand_cap, out_cap=out_cap,
             n_steps=ctx.n_steps, n_vertices=ctx.n_vertices,
-            n_words=n_words, pred=pred, use_bitmap=use_bitmap,
+            n_words=n_words, n_rows=n_rows, pred=pred, conn_mode=conn_mode,
             block_c=self.block_c, interpret=self._use_interpret())
         live_out = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
         vid = jnp.where(live_out, u, -1).astype(jnp.int32)

@@ -131,7 +131,7 @@ def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
     u = ctx.col_idx[jnp.clip(ptr, 0, ctx.n_edges - 1)]
     u = jnp.where(live, u, -1)
     src_slot = jnp.clip(col, 0, k - 1).astype(jnp.int32)
-    pred = resolve_kernel_predicate(app)
+    pred = resolve_kernel_predicate(app, k)
     if pred is not None:
         add = apply_kernel_predicate(ctx, pred, emb, row_c, u, src_slot,
                                      state, live)

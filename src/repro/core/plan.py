@@ -135,7 +135,8 @@ def plan_signature(graph_digest: str, app, backend_name: str, cap0: int,
     """Stable identity of (graph, app knobs, backend, block capacity)."""
     fields = (graph_digest, app.name, app.kind, app.max_size, app.use_dag,
               app.needs_reduce, app.needs_filter, app.support_mode,
-              app.max_patterns, app.min_support, backend_name, int(cap0),
+              app.max_patterns, app.min_support, app.plan_key,
+              app.directed_worklist, backend_name, int(cap0),
               bool(fuse_filter))
     return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
 

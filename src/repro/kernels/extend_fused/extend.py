@@ -154,12 +154,12 @@ def fused_extend_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
 
 
 def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
-                          col_ref, state_ref, bits_ref,
+                          col_ref, state_ref, bits_ref, slot_ref,
                           row_ref, u_ref, cnt_ref, base_ref, *,
                           k: int, m: int, n_parents: int, n_steps: int,
                           n_steps_p: int, block_c: int, cand_cap: int,
                           out_len: int, n_tiles: int, n_vertices: int,
-                          n_words: int, use_bitmap: bool, pred):
+                          n_words: int, n_rows: int, conn_mode: str, pred):
     offsets = offsets_ref[...]
     starts = starts_ref[...]
     emb_flat = emb_ref[...]
@@ -168,6 +168,7 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
     col = col_ref[...]
     state = state_ref[...]
     bits = bits_ref[...]
+    row_slot = slot_ref[...]
 
     i = pl.program_id(0)
 
@@ -198,31 +199,49 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
     total = offsets[n_parents - 1]
     live = (slot < total) & (slot < cand_cap)
 
-    # stage 3 — k-way connectivity: one bitmap word gather + bit test per
-    # slot when the graph is fully bit-packed, else the CSR binary search
+    # stage 3 — k-way connectivity.  Three modes (static):
+    #   "bitmap" — every row is bit-packed: one word gather + bit test,
+    #              rows indexed by vertex id (row_slot is the identity);
+    #   "mixed"  — partial pack: packed rows (row_slot[v] >= 0) answer
+    #              from the bitmap, the long tail falls back to the CSR
+    #              binary search (both evaluated branchlessly per lane,
+    #              select on the slot sign — the VPU has no divergence);
+    #   "search" — no pack: CSR binary search only.
     base_p = row * k
     u_c = jnp.clip(u, 0, n_vertices - 1)
     emb_cols, conn_cols = [], []
+
+    def csr_probe(pj):
+        lo_b = _take(vlo, pj)
+        hi_b = _take(vhi, pj)
+        lo_s, hi_s = lo_b, hi_b - 1
+        for _ in range(max(n_steps, 1)):
+            mid = (lo_s + hi_s) >> 1
+            val = _take(col, jnp.clip(mid, 0, m - 1))
+            go_right = val < u
+            lo_s = jnp.where(go_right, mid + 1, lo_s)
+            hi_s = jnp.where(go_right, hi_s, mid - 1)
+        probe = jnp.clip(lo_s, 0, m - 1)
+        return (_take(col, probe) == u) & (lo_s < hi_b) & (lo_b < hi_b)
+
+    def bitmap_probe(rows):
+        widx = jnp.clip(rows, 0, n_rows - 1) * n_words + (u_c >> 5)
+        w = _take(bits, widx)
+        return ((w >> (u_c & 31).astype(jnp.uint32))
+                & jnp.uint32(1)) == 1
+
     for j in range(k):
         pj = jnp.clip(base_p + j, 0, n_parents - 1)
         ev = _take(emb_flat, pj)
-        if use_bitmap:
-            widx = jnp.clip(ev, 0, n_vertices - 1) * n_words + (u_c >> 5)
-            w = _take(bits, widx)
-            bit = (w >> (u_c & 31).astype(jnp.uint32)) & jnp.uint32(1)
-            found = bit == 1
+        ev_c = jnp.clip(ev, 0, n_vertices - 1)
+        if conn_mode == "bitmap":
+            found = bitmap_probe(ev_c)
+        elif conn_mode == "mixed":
+            pack_row = _take(row_slot, ev_c)    # don't shadow `slot` above
+            found = jnp.where(pack_row >= 0, bitmap_probe(pack_row),
+                              csr_probe(pj))
         else:
-            lo_b = _take(vlo, pj)
-            hi_b = _take(vhi, pj)
-            lo_s, hi_s = lo_b, hi_b - 1
-            for _ in range(max(n_steps, 1)):
-                mid = (lo_s + hi_s) >> 1
-                val = _take(col, jnp.clip(mid, 0, m - 1))
-                go_right = val < u
-                lo_s = jnp.where(go_right, mid + 1, lo_s)
-                hi_s = jnp.where(go_right, hi_s, mid - 1)
-            probe = jnp.clip(lo_s, 0, m - 1)
-            found = (_take(col, probe) == u) & (lo_s < hi_b) & (lo_b < hi_b)
+            found = csr_probe(pj)
         found = found & (ev >= 0) & (u >= 0)
         emb_cols.append(ev)
         conn_cols.append(found)
@@ -269,22 +288,30 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
 def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                                starts: jnp.ndarray, emb_flat: jnp.ndarray,
                                vlo: jnp.ndarray, vhi: jnp.ndarray,
-                               state: jnp.ndarray, bits: jnp.ndarray, *,
+                               state: jnp.ndarray, bits: jnp.ndarray,
+                               row_slot: jnp.ndarray, *,
                                k: int, cand_cap: int, out_cap: int,
                                n_steps: int, n_vertices: int, n_words: int,
-                               pred, use_bitmap: bool, block_c: int = 512,
+                               n_rows: int, pred, conn_mode: str = "search",
+                               block_c: int = 512,
                                interpret: bool = False):
     """Fused EXTEND with eager in-kernel pruning + stream compaction.
 
     One kernel enumerates candidates (ragged expand + CSR gather), probes
-    k-way connectivity (against the u32 bit-packed adjacency bitmap when
-    ``use_bitmap``, CSR binary search otherwise), evaluates the app's
-    elementwise ``to_add_kernel`` predicate ``pred`` per candidate, and
-    exclusive-scan-compacts the survivors into ``out_cap``-scale buffers —
-    dead candidates are never materialized in HBM (paper §4 / §5.2 eager
-    pruning).  Returns (row i32[out_cap], u i32[out_cap], n_surv i32[1])
-    with ``n_surv`` the *true* survivor count (may exceed ``out_cap``;
-    slots past ``min(n_surv, out_cap)`` are garbage the caller masks).
+    k-way connectivity, evaluates the app's elementwise ``to_add_kernel``
+    predicate ``pred`` per candidate, and exclusive-scan-compacts the
+    survivors into ``out_cap``-scale buffers — dead candidates are never
+    materialized in HBM (paper §4 / §5.2 eager pruning).  Returns
+    (row i32[out_cap], u i32[out_cap], n_surv i32[1]) with ``n_surv`` the
+    *true* survivor count (may exceed ``out_cap``; slots past
+    ``min(n_surv, out_cap)`` are garbage the caller masks).
+
+    ``conn_mode`` picks the connectivity probe: ``"bitmap"`` (full pack —
+    ``bits`` holds ``n_vertices`` u32 rows, indexed by vertex id),
+    ``"mixed"`` (partial pack — ``bits`` holds ``n_rows`` packed rows,
+    ``row_slot[v]`` maps a vertex to its row or -1, unpacked rows fall
+    back to the CSR binary search), or ``"search"`` (CSR only; ``bits`` /
+    ``row_slot`` may be dummies).
 
     The cross-tile output offset lives in SMEM scratch and relies on the
     sequential TPU grid (interpret mode is likewise sequential); this
@@ -313,6 +340,8 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     state_p = pad_to(state.astype(jnp.int32), cap_pad)
     b_pad = rup(max(int(bits.shape[0]), 1), 128)
     bits_p = pad_to(bits.astype(jnp.uint32), b_pad)
+    s_pad = rup(max(int(row_slot.shape[0]), 1), 128)
+    slot_p = pad_to(row_slot.astype(jnp.int32), s_pad, fill=-1)
     c_pad = rup(cand_cap, block_c)
     n_tiles = c_pad // block_c
     out_len = rup(out_cap, block_c) + block_c
@@ -325,18 +354,19 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                           n_steps_p=n_steps_p, block_c=block_c,
                           cand_cap=cand_cap, out_len=out_len,
                           n_tiles=n_tiles, n_vertices=n_vertices,
-                          n_words=n_words, use_bitmap=use_bitmap,
-                          pred=pred),
+                          n_words=n_words, n_rows=n_rows,
+                          conn_mode=conn_mode, pred=pred),
         grid=(n_tiles,),
         in_specs=[full(p_pad)] * 5 + [full(m_pad), full(cap_pad),
-                                      full(b_pad)],
+                                      full(b_pad), full(s_pad)],
         out_specs=[full(out_len), full(out_len), full(1)],
         out_shape=[jax.ShapeDtypeStruct((out_len,), jnp.int32),
                    jax.ShapeDtypeStruct((out_len,), jnp.int32),
                    jax.ShapeDtypeStruct((1,), jnp.int32)],
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
-    )(offsets_p, starts_p, emb_p, vlo_p, vhi_p, col, state_p, bits_p)
+    )(offsets_p, starts_p, emb_p, vlo_p, vhi_p, col, state_p, bits_p,
+      slot_p)
     n_surv = cnt[0]
     live = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
     return (jnp.where(live, row[:out_cap], 0),

@@ -25,22 +25,25 @@ def fused_extend(col_idx, offsets, starts, emb_flat, vlo, vhi, *, k: int,
 
 
 @partial(jax.jit, static_argnames=("k", "cand_cap", "out_cap", "n_steps",
-                                   "n_vertices", "n_words", "pred",
-                                   "use_bitmap", "block_c", "interpret"))
+                                   "n_vertices", "n_words", "n_rows",
+                                   "pred", "conn_mode", "block_c",
+                                   "interpret"))
 def fused_extend_pruned(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
-                        bits, *, k: int, cand_cap: int, out_cap: int,
-                        n_steps: int, n_vertices: int, n_words: int, pred,
-                        use_bitmap: bool, block_c: int = 512,
+                        bits, row_slot, *, k: int, cand_cap: int,
+                        out_cap: int, n_steps: int, n_vertices: int,
+                        n_words: int, n_rows: int, pred,
+                        conn_mode: str = "search", block_c: int = 512,
                         interpret: bool = False):
     """Eager-pruning fused extend: enumerate + in-kernel ``pred`` filter +
-    stream compaction, connectivity via the bit-packed bitmap when
-    ``use_bitmap``.  ``pred`` is a static elementwise callable (the app's
-    ``to_add_kernel``).  Returns (row, u) compacted to ``out_cap`` and the
-    true survivor count; see
+    stream compaction.  ``conn_mode`` selects the connectivity probe:
+    full bit-packed bitmap, mixed bitmap/CSR (partial packs, via
+    ``row_slot``), or CSR binary search.  ``pred`` is a static
+    elementwise callable (the app's ``to_add_kernel``).  Returns (row, u)
+    compacted to ``out_cap`` and the true survivor count; see
     :func:`repro.kernels.extend_fused.extend.fused_extend_pruned_pallas`.
     """
     return fused_extend_pruned_pallas(
-        col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits, k=k,
-        cand_cap=cand_cap, out_cap=out_cap, n_steps=n_steps,
-        n_vertices=n_vertices, n_words=n_words, pred=pred,
-        use_bitmap=use_bitmap, block_c=block_c, interpret=interpret)
+        col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
+        row_slot, k=k, cand_cap=cand_cap, out_cap=out_cap, n_steps=n_steps,
+        n_vertices=n_vertices, n_words=n_words, n_rows=n_rows, pred=pred,
+        conn_mode=conn_mode, block_c=block_c, interpret=interpret)

@@ -7,6 +7,12 @@ capacity plan so later invocations skip the inspection pass entirely
 (plan-once / execute-many); ``--repeat`` reruns the mining to show the
 warm-executor (single-jit) path; ``--blocks`` splits the level-0 worklist
 into K edge blocks served by one compiled executor.
+
+Arbitrary patterns go through the pattern compiler: ``--pattern diamond``
+(any library name; ``--pattern list`` prints them) or ``--pattern-edges
+"0-1,1-2,0-2"`` compiles a matching order + symmetry-breaking kernel
+predicates at plan time and mines the pattern with zero runtime
+isomorphism tests.
 """
 from __future__ import annotations
 
@@ -15,8 +21,9 @@ import time
 
 import numpy as np
 
-from repro.core import (Miner, make_cf_app, make_fsm_app, make_mc_app,
-                        make_tc_app, triangle_count_fused)
+from repro.core import (Miner, Pattern, make_cf_app, make_fsm_app,
+                        make_mc_app, make_tc_app, pattern_app,
+                        pattern_names, triangle_count_fused)
 from repro.graph import generators as G
 
 
@@ -52,6 +59,17 @@ def make_app(name: str, minsup: int):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="tc", help="tc | k-cf | k-mc | k-fsm")
+    ap.add_argument("--pattern", default=None, metavar="NAME",
+                    help="mine a compiled pattern from the library "
+                         "(e.g. diamond, 5-clique; 'list' to print all); "
+                         "overrides --app")
+    ap.add_argument("--pattern-edges", default=None, metavar="EDGES",
+                    help='mine a custom compiled pattern, e.g. '
+                         '"0-1,1-2,0-2"; overrides --app')
+    ap.add_argument("--non-induced", action="store_true",
+                    help="compiled patterns: count subgraph occurrences "
+                         "(extra edges allowed) instead of vertex-induced "
+                         "matches")
     ap.add_argument("--graph", default="rmat:10")
     ap.add_argument("--labels", type=int, default=None)
     ap.add_argument("--minsup", type=int, default=100)
@@ -77,6 +95,9 @@ def main(argv=None):
     ap.add_argument("--stats", action="store_true")
     args = ap.parse_args(argv)
 
+    if args.pattern == "list":
+        print("[mine] pattern library:", ", ".join(pattern_names()))
+        return
     labels = args.labels or (3 if "fsm" in args.app else None)
     g = load_graph(args.graph, labels=labels)
     print(f"[mine] graph: {g.n_vertices} vertices, {g.n_edges // 2} edges")
@@ -85,7 +106,15 @@ def main(argv=None):
         n = triangle_count_fused(g)
         print(f"[mine] fused TC: {n} triangles in {time.time()-t0:.3f}s")
         return
-    app = make_app(args.app, args.minsup)
+    if args.pattern is not None or args.pattern_edges is not None:
+        pat = (Pattern.named(args.pattern) if args.pattern is not None
+               else Pattern.from_string(args.pattern_edges))
+        app = pattern_app(pat, induced=not args.non_induced)
+        print(f"[mine] compiled pattern {pat.name!r}: k={pat.k}, "
+              f"{pat.n_edges} edges, "
+              f"{'induced' if not args.non_induced else 'non-induced'}")
+    else:
+        app = make_app(args.app, args.minsup)
     from repro.core import available_backends
     if args.backend is not None and args.backend not in available_backends():
         raise SystemExit(f"unknown backend {args.backend!r} "

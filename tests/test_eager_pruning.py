@@ -63,6 +63,26 @@ def test_partial_pack_falls_back_to_csr():
                                   np.asarray(ctx.is_connected(u, v)))
 
 
+def test_mixed_partial_pack_in_pruned_kernel():
+    """Power-law graph whose pack budget only covers the high-degree
+    rows: the pruned pallas kernel must take the mixed path (bitmap for
+    packed rows, CSR binary search for the tail) and still count exactly
+    what the reference backend counts."""
+    from repro.core import Pattern, pattern_app
+
+    g = G.rmat(7, edge_factor=6, seed=3)           # 128 vertices, power-law
+    n_words = -(-g.n_vertices // 32)
+    budget = 20 * n_words * 4                      # ~20 hub rows only
+    for make in (lambda: make_cf_app(4, use_dag=False),
+                 lambda: pattern_app(Pattern.named("diamond"))):
+        ref = Miner(g, make()).run().count
+        m = Miner(g, make(), backend="pallas", pack_max_bytes=budget,
+                  pack_partial=True)
+        assert m.ctx.packed is not None and not m.ctx.packed.full
+        assert m.ctx.packed.n_packed < g.n_vertices
+        assert m.run().count == ref
+
+
 def test_linear_search_ablation_skips_packing():
     g = G.erdos_renyi(20, 0.3, seed=1)
     assert make_ctx(g, search="linear").packed is None

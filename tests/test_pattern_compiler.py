@@ -1,0 +1,336 @@
+"""Pattern compiler: spec/library semantics, compiled matching plans,
+pattern_app counts vs the brute-force oracle (property-based, both
+backends), plan-cache isolation by pattern hash, the derived motif-table
+bound, and the CLI/quickstart surfaces."""
+import os
+import random
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+from oracles import pattern_count_bruteforce, pattern_count_noninduced
+from repro.core import (Miner, Pattern, compile_pattern, make_cf_app,
+                        make_cf_app_compiled, make_mc_app,
+                        n_connected_patterns, pattern_app, pattern_names)
+from repro.core.api import resolve_kernel_predicate
+from repro.core.pattern import DIAMOND4, TAILED4
+from repro.core.patterns import enumerate_connected_codes, symmetry_break
+from repro.core.plan import plan_signature
+from repro.graph import generators as G
+
+BACKENDS = ("reference", "pallas")
+
+
+# -- spec / library -----------------------------------------------------------
+
+def test_constructors_and_library():
+    assert Pattern.clique(4).n_edges == 6
+    assert Pattern.cycle(5).n_edges == 5
+    assert Pattern.path(4).n_edges == 3
+    assert Pattern.star(5).n_edges == 4
+    assert Pattern.from_string("0-1,1-2,0-2").canonical_code() == \
+        Pattern.clique(3).canonical_code()
+    for name in pattern_names():
+        p = Pattern.named(name)
+        assert p.is_connected() and 3 <= p.k <= 6
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="self-loop"):
+        Pattern.from_edges([(0, 0), (0, 1)])
+    with pytest.raises(ValueError, match="disconnected"):
+        Pattern.from_edges([(0, 1), (2, 3)])
+    with pytest.raises(ValueError, match="3 vertices"):
+        Pattern.from_edges([(0, 1)])
+    with pytest.raises(ValueError, match="k <= 6"):
+        Pattern.path(7)
+    with pytest.raises(KeyError, match="unknown pattern"):
+        Pattern.named("heptagon")
+
+
+def test_canonical_code_is_isomorphism_invariant():
+    a = Pattern.from_edges([(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)])
+    b = Pattern.from_edges([(3, 2), (3, 1), (2, 1), (3, 0), (2, 0)])
+    assert a.canonical_code() == b.canonical_code()
+    assert a.hash_hex() == b.hash_hex()
+    assert a.canonical_code() != Pattern.cycle(4).canonical_code()
+
+
+def test_labeled_codes_distinguish_labelings():
+    p1 = Pattern.from_edges([(0, 1), (1, 2)], labels=[0, 1, 0])
+    p2 = Pattern.from_edges([(0, 1), (1, 2)], labels=[1, 0, 0])
+    p3 = Pattern.from_edges([(0, 1), (1, 2)], labels=[0, 0, 1])
+    assert p1.canonical_code() != p2.canonical_code()   # center label differs
+    assert p2.canonical_code() == p3.canonical_code()   # end-label symmetric
+
+
+# -- compiler invariants ------------------------------------------------------
+
+def test_compiled_plan_invariants():
+    for name in pattern_names():
+        plan = compile_pattern(Pattern.named(name))
+        adj = plan.pattern.adjacency()
+        assert adj[0, 1], "level-0 worklist must be a pattern edge"
+        seen = {0, 1}
+        for lp in plan.levels:
+            assert lp.required, "connectivity-first order broken"
+            assert lp.anchor in lp.required
+            assert set(lp.required) | set(lp.forbidden) == set(
+                range(lp.position))
+            assert all(j in seen for j in lp.smaller)
+            seen.add(lp.position)
+        # stabilizer-chain bookkeeping: every constraint is (a < b)
+        assert all(a < b for a, b in plan.constraints)
+
+
+def test_symmetry_break_orbit_product_equals_aut():
+    """The product of consumed orbit sizes equals |Aut| (orbit-stabilizer),
+    so constraints admit exactly one embedding per automorphism class."""
+    for name in ("diamond", "4-clique", "5-cycle", "bowtie", "4-star"):
+        p = compile_pattern(Pattern.named(name)).pattern
+        constraints, n_aut = symmetry_break(p)
+        # replay the chain on the constraint list: group sizes shrink by
+        # the orbit size at each pivot
+        group = p.automorphisms()
+        prod = 1
+        while len(group) > 1:
+            moved = min(i for i in range(p.k)
+                        if any(s[i] != i for s in group))
+            orbit = {s[moved] for s in group}
+            prod *= len(orbit)
+            group = [s for s in group if s[moved] == moved]
+        assert prod == n_aut == len(p.automorphisms())
+
+
+def test_clique_compiles_to_total_order():
+    plan = compile_pattern(Pattern.clique(5))
+    assert plan.n_automorphisms == 120
+    assert plan.first_pair_symmetric
+    assert set(plan.constraints) == {(a, b) for a in range(5)
+                                    for b in range(a + 1, 5)}
+
+
+def test_directed_worklist_only_when_asymmetric():
+    assert not pattern_app(Pattern.named("diamond")).directed_worklist
+    assert not pattern_app(Pattern.clique(4)).directed_worklist
+    assert pattern_app(Pattern.named("wedge")).directed_worklist
+    assert pattern_app(Pattern.named("tailed-triangle")).directed_worklist
+
+
+def test_per_level_kernel_predicates_resolve():
+    app = pattern_app(Pattern.named("house"))
+    assert isinstance(app.to_add_kernel, tuple)
+    assert len(app.to_add_kernel) == 3                 # positions 2, 3, 4
+    for k in (2, 3, 4):
+        assert resolve_kernel_predicate(app, k) is app.to_add_kernel[k - 2]
+    with pytest.raises(ValueError, match="per-level"):
+        resolve_kernel_predicate(app)
+    # no reduce step anywhere: counting is pure extend_pruned
+    assert app.get_pattern is None and not app.needs_reduce
+
+
+# -- counts vs the brute-force oracle ----------------------------------------
+
+GRAPHS = [G.erdos_renyi(26, 0.25, seed=11), G.rmat(5, edge_factor=4, seed=3)]
+
+
+@pytest.mark.parametrize("name", ["diamond", "5-clique", "house",
+                                  "tailed-triangle", "4-cycle", "5-star"])
+def test_library_counts_match_oracle_both_backends(name):
+    pat = Pattern.named(name)
+    for g in GRAPHS:
+        expected = pattern_count_bruteforce(g, pat)
+        for backend in BACKENDS:
+            got = Miner(g, pattern_app(pat), backend=backend).run().count
+            assert got == expected, (name, backend, got, expected)
+
+
+def _random_connected_pattern(seed: int, k: int) -> Pattern:
+    rng = random.Random(seed)
+    edges = {(rng.randrange(v), v) for v in range(1, k)}  # spanning tree
+    for i in range(k):
+        for j in range(i + 1, k):
+            if rng.random() < 0.4:
+                edges.add((i, j))
+    return Pattern.from_edges(sorted(edges), k=k,
+                              name=f"rand-{k}v-s{seed}")
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(3, 5),
+       n=st.integers(10, 20), p=st.sampled_from([0.2, 0.3, 0.45]),
+       backend=st.sampled_from(BACKENDS))
+@settings(max_examples=10, deadline=None)
+def test_random_patterns_match_oracle(seed, k, n, p, backend):
+    """Property: for random connected patterns and random graphs, the
+    compiled pattern app counts exactly the brute-force induced
+    occurrences — on both backends."""
+    pat = _random_connected_pattern(seed, k)
+    g = G.erdos_renyi(n, p, seed=seed % 97)
+    expected = pattern_count_bruteforce(g, pat)
+    got = Miner(g, pattern_app(pat), backend=backend).run().count
+    assert got == expected, (pat.edges, backend, got, expected)
+
+
+def test_compiled_clique_parity_with_handwritten(er_graph):
+    for k in (3, 4, 5):
+        ref = Miner(er_graph, make_cf_app(k)).run().count
+        for backend in BACKENDS:
+            app = make_cf_app_compiled(k)
+            assert Miner(er_graph, app, backend=backend).run().count == ref
+
+
+def test_compiled_counts_match_motif_histogram(er_graph):
+    pm = np.asarray(Miner(er_graph, make_mc_app(4)).run().p_map)
+    diamond = Miner(er_graph,
+                    pattern_app(Pattern.named("diamond"))).run().count
+    tailed = Miner(er_graph,
+                   pattern_app(Pattern.named("tailed-triangle"))).run().count
+    assert diamond == int(pm[DIAMOND4])
+    assert tailed == int(pm[TAILED4])
+
+
+def test_noninduced_counts():
+    # every 4-subset of K5 hosts three non-induced 4-cycles
+    g = G.clique(5)
+    pat = Pattern.cycle(4)
+    app = pattern_app(pat, induced=False)
+    assert Miner(g, app).run().count == pattern_count_noninduced(g, pat) \
+        == 15
+    # induced 4-cycles in a clique: none
+    assert Miner(g, pattern_app(pat)).run().count == 0
+
+
+@pytest.mark.parametrize("name", ["4-path", "tailed-triangle", "house",
+                                  "4-star"])
+def test_noninduced_counts_stay_injective(name):
+    """Non-induced matching drops the forbidden connectivity masks but
+    must stay an injective mapping: patterns whose non-adjacent slot
+    pairs carry no symmetry constraint would otherwise admit degenerate
+    embeddings that reuse a vertex."""
+    g = G.erdos_renyi(12, 0.3, seed=5)
+    pat = Pattern.named(name)
+    expected = pattern_count_noninduced(g, pat)
+    for backend in BACKENDS:
+        app = pattern_app(pat, induced=False)
+        got = Miner(g, app, backend=backend).run().count
+        assert got == expected, (name, backend, got, expected)
+
+
+def test_labeled_pattern_on_fig2_graph():
+    # the Fig. 2 labeled graph contains four blue-red-green chains
+    g = G.paper_fig2_graph()
+    chain = Pattern.from_edges([(0, 1), (1, 2)], labels=[0, 1, 2],
+                               name="brg-chain")
+    expected = pattern_count_bruteforce(g, chain)
+    app = pattern_app(chain)
+    assert app.to_add is not None          # labeled -> batch-hook path
+    got = Miner(g, app).run().count
+    assert got == expected == 4
+
+
+# -- plan cache: pattern hash in the signature --------------------------------
+
+def test_same_k_patterns_get_distinct_plan_signatures():
+    a, b = pattern_app(Pattern.named("diamond")), \
+        pattern_app(Pattern.named("4-cycle"))
+    assert a.plan_key != b.plan_key
+    assert plan_signature("g0", a, "pallas", 512) != \
+        plan_signature("g0", b, "pallas", 512)
+    # induced vs non-induced of the SAME pattern must not share either
+    c = pattern_app(Pattern.named("diamond"), induced=False)
+    assert plan_signature("g0", a, "pallas", 512) != \
+        plan_signature("g0", c, "pallas", 512)
+
+
+def test_pattern_plan_cache_no_cross_contamination(tmp_path, er_graph):
+    """Two different same-k patterns mined through one cache dir must
+    record two plans, and each warm replay must reproduce its own cold
+    count."""
+    cold = {}
+    for name in ("diamond", "4-cycle"):
+        m = Miner(er_graph, pattern_app(Pattern.named(name)))
+        cold[name] = m.run(plan_cache=str(tmp_path)).count
+    assert len([f for f in os.listdir(tmp_path)
+                if f.endswith(".json")]) == 2
+    for name in ("diamond", "4-cycle"):
+        m = Miner(er_graph, pattern_app(Pattern.named(name)))
+        r = m.run(plan_cache=str(tmp_path))
+        (rep,) = m.plan_reports()
+        assert rep["source"] == "cache"
+        assert r.count == cold[name]
+
+
+def test_warm_executor_replay_matches_cold(er_graph):
+    m = Miner(er_graph, pattern_app(Pattern.named("diamond")),
+              backend="pallas")
+    cold = m.run().count
+    m.run()                                  # compiles the plan executor
+    warm = m.run().count
+    (rep,) = m.plan_reports()
+    assert warm == cold and rep["executions"] >= 1
+
+
+# -- enumeration / derived motif bound ----------------------------------------
+
+def test_connected_graph_enumeration_counts():
+    assert [n_connected_patterns(k) for k in (1, 2, 3, 4, 5, 6)] == \
+        [1, 1, 2, 6, 21, 112]
+    assert len(set(enumerate_connected_codes(5))) == 21
+
+
+def test_mc_max_patterns_derived_not_guessed():
+    assert make_mc_app(5).max_patterns == 21
+    assert make_mc_app(6).max_patterns == 112
+    with pytest.raises(ValueError, match="max_patterns"):
+        make_mc_app(7)
+    assert make_mc_app(7, max_patterns=1000).max_patterns == 1000
+
+
+def test_mc5_census_total_matches_subset_count():
+    # all 21 5-motif patterns fit the derived table: census total equals
+    # the number of connected 5-subsets (each classified exactly once)
+    g = G.erdos_renyi(14, 0.35, seed=4)
+    r = Miner(g, make_mc_app(5)).run()
+    total = 0
+    for name in ("5-clique", "5-cycle", "5-path", "5-star", "house",
+                 "bowtie"):
+        total += pattern_count_bruteforce(g, Pattern.named(name))
+    # the six library 5-patterns are a subset of all 21 classes
+    assert int(np.asarray(r.p_map).sum()) >= total
+
+
+# -- CLI / example surfaces ---------------------------------------------------
+
+def test_mine_cli_pattern_flag(tmp_path, capsys):
+    from repro.launch.mine import main
+    main(["--pattern", "diamond", "--graph", "er:26,0.25", "--backend",
+          "pallas", "--plan-cache", str(tmp_path), "--repeat", "2"])
+    out = capsys.readouterr().out
+    g = G.erdos_renyi(26, 0.25, seed=0)
+    expected = pattern_count_bruteforce(g, Pattern.named("diamond"))
+    assert f"count = {expected}" in out
+    assert any(f.endswith(".json") for f in os.listdir(tmp_path))
+
+
+def test_mine_cli_pattern_edges(capsys):
+    from repro.launch.mine import main
+    main(["--pattern-edges", "0-1,1-2,0-2", "--graph", "er:20,0.3"])
+    out = capsys.readouterr().out
+    g = G.erdos_renyi(20, 0.3, seed=0)
+    expected = pattern_count_bruteforce(g, Pattern.clique(3))
+    assert f"count = {expected}" in out
+
+
+def test_mine_cli_pattern_list(capsys):
+    from repro.launch.mine import main
+    main(["--pattern", "list"])
+    assert "diamond" in capsys.readouterr().out
+
+
+def test_quickstart_example_smoke(capsys):
+    """The quickstart example must run end-to-end on the current API."""
+    import quickstart  # noqa: F401  (examples/ on sys.path via conftest)
+    quickstart.main(scale=4)
+    out = capsys.readouterr().out
+    assert "compiled-pattern counts match" in out

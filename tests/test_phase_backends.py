@@ -179,7 +179,8 @@ def test_extend_pruned_bitwise_parity(aname, make_app, seed):
 
 def test_pruned_kernel_matches_oracle():
     """fused_extend_pruned (pallas, interpret) == fused_extend_pruned_ref
-    (pure jnp), with and without the bit-packed connectivity bitmap."""
+    (pure jnp) in every connectivity mode: full bitmap, mixed
+    partial-pack (bitmap rows + CSR fallback), and pure CSR search."""
     import jax.numpy as jnp
     from repro.core.api import is_auto_canonical_kernel
     from repro.graph.csr import pack_adjacency
@@ -191,18 +192,30 @@ def test_pruned_kernel_matches_oracle():
     emb = jnp.asarray(rng.integers(0, 40, size=(50, 3)), jnp.int32)
     offsets, starts, emb_flat, vlo, vhi, n_steps = _kernel_inputs(g, emb)
     state = jnp.zeros((50,), jnp.int32)
-    pg = pack_adjacency(g)
+    full_pg = pack_adjacency(g)
+    n_words = full_pg.n_words
+    partial_pg = pack_adjacency(g, max_bytes=12 * n_words * 4)  # 12 rows
+    assert full_pg.full and not partial_pg.full
+    modes = {
+        "bitmap": (full_pg.words.reshape(-1), jnp.zeros((1,), jnp.int32),
+                   full_pg.n_packed),
+        "mixed": (partial_pg.words.reshape(-1), partial_pg.row_slot,
+                  partial_pg.n_packed),
+        "search": (jnp.zeros((1,), jnp.uint32), jnp.zeros((1,), jnp.int32),
+                   1),
+    }
     args = (g.col_idx, offsets, starts, emb_flat, vlo, vhi, state)
     for cand_cap, out_cap in [(int(offsets[-1]) + 17, 256),
                               (max(int(offsets[-1]) // 2, 8), 32)]:
         kw = dict(k=3, cand_cap=cand_cap, out_cap=out_cap, n_steps=n_steps)
         ref = fused_extend_pruned_ref(*args, pred=is_auto_canonical_kernel,
                                       **kw)
-        for use_bitmap in (True, False):
+        for conn_mode, (bits, row_slot, n_rows) in modes.items():
             got = fused_extend_pruned(
-                *args, pg.words.reshape(-1), n_vertices=g.n_vertices,
-                n_words=pg.n_words, pred=is_auto_canonical_kernel,
-                use_bitmap=use_bitmap, interpret=True, block_c=128, **kw)
+                *args, bits, row_slot, n_vertices=g.n_vertices,
+                n_words=n_words, n_rows=n_rows,
+                pred=is_auto_canonical_kernel, conn_mode=conn_mode,
+                interpret=True, block_c=128, **kw)
             for r, o in zip(ref, got):
                 np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
 
