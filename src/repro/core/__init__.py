@@ -8,7 +8,10 @@ from repro.core.plan import (HostCapPolicy, MiningExecutor, MiningPlan,
 from repro.core.phases import (PhaseBackend, available_backends, get_backend,
                                register_backend)
 from repro.core.apps import (make_tc_app, make_cf_app, make_cf_app_compiled,
-                             make_mc_app, make_fsm_app, pattern_app,
+                             make_mc_app, make_mc_set_app, make_fsm_app,
+                             pattern_app, pattern_set_app,
                              triangle_count_fused)
 from repro.core.patterns import (Pattern, compile_pattern,
-                                 n_connected_patterns, pattern_names)
+                                 compile_pattern_set, motif_patterns,
+                                 n_connected_patterns, named_pattern_set,
+                                 pattern_names, pattern_set_names)

@@ -242,6 +242,37 @@ def resolve_kernel_predicate(app: "MiningApp", k: Optional[int] = None):
     return None
 
 
+def resolve_state_kernel(app: "MiningApp", k: Optional[int] = None):
+    """The eager in-kernel state-update hook for ``app``, or None.
+
+    ``update_state_kernel`` has the same elementwise contract as
+    ``to_add_kernel`` — ``fn(emb_cols, u, src_slot, state, conn) ->
+    i32`` — but returns the *new* per-embedding memo state for each
+    candidate instead of a keep mask.  Backends evaluate it alongside the
+    ``to_add_kernel`` predicate (inside the fused Pallas kernel, or on
+    flat batches in the reference backend) and stream-compact the result
+    into the next level's ``state`` column, so path-dependent per-branch
+    information (the multi-pattern trie's branch bitmap) survives the
+    extension without a second pass.  Like ``to_add_kernel`` it may be a
+    per-level sequence indexed by ``k - 2``.
+    """
+    usk = app.update_state_kernel
+    if usk is None or app.kind != "vertex":
+        return None
+    if callable(usk):
+        return usk
+    if k is None:
+        raise ValueError(
+            f"app {app.name!r} has a per-level update_state_kernel; "
+            "callers must pass the level (parent embedding width k)")
+    idx = k - 2
+    if not 0 <= idx < len(usk):
+        raise ValueError(
+            f"app {app.name!r}: no update_state_kernel entry for level "
+            f"k={k} ({len(usk)} per-level updates)")
+    return usk[idx]
+
+
 def is_auto_canonical_edge(ctx: GraphCtx, eids: jnp.ndarray,
                            new_eid: jnp.ndarray, new_src: jnp.ndarray,
                            new_dst: jnp.ndarray, e_src: jnp.ndarray,
@@ -315,6 +346,17 @@ class MiningApp:
     ``plan_key`` is extra app identity folded into the capacity-plan
     signature — pattern apps put the pattern's isomorphism hash here so
     two different patterns of the same size never share a cached plan.
+
+    ``update_state_kernel`` is the state-update twin of ``to_add_kernel``
+    (same elementwise contract, returns the i32 memo state of the *new*
+    embedding); backends compact its output into the next level's state
+    column, so state can carry path-dependent facts the next level's
+    predicate needs — the multi-pattern trie threads its per-embedding
+    branch bitmap this way.  ``state_histogram(state[N], valid[N]) ->
+    p_map[max_patterns]`` turns the final state column directly into the
+    per-pattern histogram (a fixed bit-count, no canonical labeling and
+    no ``jnp.unique``); when present it replaces the ``get_pattern``
+    reduce entirely.
     """
 
     name: str
@@ -327,13 +369,22 @@ class MiningApp:
     max_patterns: int = 8           # static bound on distinct patterns
     min_support: int = 0
     to_extend: Optional[Callable] = None
+    # state-aware toExtend: (ctx, emb[N,k], state[N]) -> bool[N,k].  Takes
+    # precedence over to_extend when the memo state is available — the
+    # multi-pattern trie uses it to enumerate only the anchor slots of
+    # branches the embedding still carries (dead branches cost nothing)
+    to_extend_state: Optional[Callable] = None
     to_add: Optional[Callable] = None
     to_add_bits: Optional[Callable] = None  # fused-backend toAdd variant
     # in-kernel elementwise toAdd: one callable, or a per-level sequence
     to_add_kernel: Optional[Callable | tuple] = None
+    # in-kernel elementwise state update (same form as to_add_kernel)
+    update_state_kernel: Optional[Callable | tuple] = None
+    # final-state -> pattern histogram (replaces the get_pattern reduce)
+    state_histogram: Optional[Callable] = None
     get_pattern: Optional[Callable] = None
     to_prune: Optional[Callable] = None
-    init_state: Optional[Callable] = None   # (ctx, emb[N,2]) -> state[N]
+    init_state: Optional[Callable] = None  # (ctx, emb[N,2], n) -> state[N]
     backend: Optional[str] = None           # preferred phase backend
     directed_worklist: bool = False         # level-0: both edge orientations
     plan_key: str = ""                      # extra plan-signature identity

@@ -1,5 +1,5 @@
 from repro.core.apps.tc import make_tc_app, triangle_count_fused
 from repro.core.apps.cf import make_cf_app, make_cf_app_compiled
-from repro.core.apps.mc import make_mc_app
+from repro.core.apps.mc import make_mc_app, make_mc_set_app
 from repro.core.apps.fsm import make_fsm_app
-from repro.core.apps.psm import pattern_app
+from repro.core.apps.psm import pattern_app, pattern_set_app

@@ -1,6 +1,15 @@
 """k-motif counting (paper Listing 4, §4.2).
 
-Pattern-classification modes (Fig. 12c ablation):
+The default path for k <= 5 is the **multi-pattern trie**: all connected
+k-vertex patterns (enumerated by :mod:`repro.core.patterns.spec`) compile
+into one shared common-prefix plan (`compile_pattern_set`), counted in a
+single fused traversal with a per-embedding branch bitmap — no canonical
+labeling, no ``jnp.unique``, no reduce step at all.  For k = 3 / 4 the
+pattern-table order matches the classifier enums, so ``p_map`` is
+drop-in compatible with the older modes.
+
+Pattern-classification modes (Fig. 12c ablation + parity oracles):
+  * ``set``     — the multi-pattern trie (default for k <= 5).
   * ``memo``    — the paper's memoization (Fig. 6): carry the previous
     level's motif id (+ wedge-center position) in the per-embedding state;
     classify the new level from 3 connectivity bits.  State packing:
@@ -8,22 +17,65 @@ Pattern-classification modes (Fig. 12c ablation):
   * ``custom``  — Listing 6 style: rebuild the k×k adjacency, classify by
     edge count + degree signature (O(1), no isomorphism test).
   * ``generic`` — canonical labeling over all k! permutations (the Bliss
-    replacement), optionally reduced by quick patterns first.
+    replacement), optionally reduced by quick patterns first.  This is
+    the canonical-labeling-reduce parity oracle for the trie path, and
+    the k = 6+ fallback (the branch bitmap is one i32, so the trie caps
+    at 32 patterns; 6-vertex graphs have 112).
 
-k = 3 or 4 use the named-motif enums; k = 5 falls back to generic codes.
+k = 3 or 4 use the named-motif enums; k = 5 falls back to generic codes
+in the ``memo``/``generic`` modes.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 
 from repro.core.api import GraphCtx, MiningApp
 from repro.core import pattern as P
-from repro.core.patterns import n_connected_patterns
+from repro.core.patterns import motif_patterns, n_connected_patterns
 from repro.core.reduce import build_adjacency
 
+# the trie path threads a per-embedding branch bitmap in one i32
+_MAX_SET_K = 5
 
-def make_mc_app(k: int, mode: str = "memo", use_quick: bool = True,
+
+def make_mc_set_app(k: int, backend: str | None = None) -> MiningApp:
+    """mc(k) via the multi-pattern common-prefix trie (k <= 5).
+
+    One fused traversal counts every connected k-vertex pattern at once;
+    ``p_map`` comes in the motif-enum order for k = 3 / 4 and in
+    canonical-code order for k = 5 (``motif_patterns(k)``).
+    """
+    if k > _MAX_SET_K:
+        raise ValueError(
+            f"{k}-motif counting cannot use the multi-pattern trie: "
+            f"{n_connected_patterns(k) if k <= 6 else 'too many'} patterns "
+            f"exceed the 32-bit branch bitmap; use mode='generic' (the "
+            "canonical-labeling reduce) instead")
+    from repro.core.apps.psm import pattern_set_app
+    app = pattern_set_app(motif_patterns(k), induced=True, backend=backend)
+    return dataclasses.replace(app, name=f"{k}-motif")
+
+
+def make_mc_app(k: int, mode: str = "auto", use_quick: bool = True,
                 max_patterns: int | None = None) -> MiningApp:
+    if k in P.N_MOTIFS and P.N_MOTIFS[k] != n_connected_patterns(k):
+        # a silent disagreement between the hand-written enum table and
+        # the exhaustive enumeration would mis-size the pattern table and
+        # clip motifs out of the census — fail at construction, loudly
+        raise RuntimeError(
+            f"P.N_MOTIFS[{k}] = {P.N_MOTIFS[k]} disagrees with the "
+            f"exhaustive enumeration n_connected_patterns({k}) = "
+            f"{n_connected_patterns(k)}")
+    if mode == "auto":
+        # default: the multi-pattern trie where the bitmap fits; an
+        # explicit max_patterns means the caller wants the classic
+        # classified-reduce table semantics
+        mode = "set" if (k <= _MAX_SET_K and max_patterns is None) \
+            else "memo"
+    if mode == "set":
+        return make_mc_set_app(k)
     if max_patterns is None:
         # the pattern table must hold every connected k-vertex graph; the
         # exact bound comes from the pattern subsystem's exhaustive
@@ -43,9 +95,15 @@ def make_mc_app(k: int, mode: str = "memo", use_quick: bool = True,
         kk = emb.shape[1]
         if mode == "generic" or kk not in (3, 4):
             adj = build_adjacency(ctx, emb)
-            if use_quick:
+            # quick-pattern reduction is only a shortcut while the quick
+            # table can hold every possible identity-order code (2^pairs);
+            # truncating it (the old fixed max_unique=64) silently
+            # misclassified k >= 5 embeddings on dense graphs — this is
+            # the parity oracle, so above the bound canonicalize exactly
+            n_quick = 2 ** (kk * (kk - 1) // 2)
+            if use_quick and n_quick <= 1024:
                 codes = P.canonicalize_via_quick(adj, None, kk, 1,
-                                                 max_unique=64)
+                                                 max_unique=n_quick)
             else:
                 codes = P.canonical_code(adj, None, kk)
             big = jnp.int32(2**31 - 1)

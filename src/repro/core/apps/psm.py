@@ -27,15 +27,17 @@ count exactly what ``make_cf_app(k)`` counts.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax.numpy as jnp
 
 from repro.core.api import GraphCtx, MiningApp
-from repro.core.patterns import LevelPlan, MatchingPlan, Pattern, \
-    compile_pattern
+from repro.core.patterns import (LevelPlan, MatchingPlan, Pattern,
+                                 PatternSetPlan, compile_pattern,
+                                 compile_pattern_set)
 
-__all__ = ["pattern_app", "make_level_kernel_predicate"]
+__all__ = ["pattern_app", "pattern_set_app",
+           "make_level_kernel_predicate", "make_set_branch_bits"]
 
 
 def make_level_kernel_predicate(lp: LevelPlan):
@@ -136,3 +138,142 @@ def pattern_app(pattern: Pattern, induced: bool = True,
                         for lp in plan.levels)
         return MiningApp(to_add_kernel=kernels, **common)
     return MiningApp(to_add=_make_labeled_to_add(plan), **common)
+
+
+# ---------------------------------------------------------------------------
+# Multi-pattern sets: one fused traversal for a whole pattern set
+
+
+def make_set_branch_bits(branches):
+    """Elementwise branch-bitmap update for one trie level.
+
+    Returns the i32 bitmap whose bit ``b`` is set iff the candidate
+    extends branch ``b``: the parent embedding carried the branch's
+    parent bit, the candidate came from the branch's anchor slot, and it
+    satisfies the branch's connectivity / injectivity / symmetry rules.
+    This single function is both the level's ``to_add_kernel`` (any bit
+    set -> keep) and its ``update_state_kernel`` (the bitmap IS the new
+    state); backends trace it once per role and the compiler CSEs the
+    shared subexpressions.  Pure elementwise ops only — it runs inside
+    the fused Pallas extend kernel and on flat jnp batches identically.
+    """
+    branches = tuple(branches)
+
+    def bits(emb_cols, u, src_slot, state, conn):
+        out = jnp.zeros_like(state)
+        base = u >= 0
+        for b, br in enumerate(branches):
+            ok = base & (((state >> br.parent) & 1) == 1)
+            ok = ok & (src_slot == br.anchor)
+            for j in br.required:    # adjacency also implies u != emb_j
+                ok = ok & conn[j]
+            for j in br.forbidden:
+                ok = ok & ~conn[j]
+            for j in br.distinct:
+                ok = ok & (u != emb_cols[j])
+            for j in br.smaller:
+                ok = ok & (u > emb_cols[j])
+            if br.first_pair:        # folded v0 < v1 (directed worklist)
+                ok = ok & (emb_cols[0] < emb_cols[1])
+            out = out | (ok.astype(jnp.int32) << b)
+        return out
+
+    return bits
+
+
+def _make_set_to_extend(plan: PatternSetPlan):
+    anchors = {lvl[0].position: tuple(sorted({br.anchor for br in lvl}))
+               for lvl in plan.levels}
+
+    def to_extend(ctx: GraphCtx, emb: jnp.ndarray) -> jnp.ndarray:
+        mask = jnp.zeros(emb.shape, bool)
+        for a in anchors[emb.shape[1]]:
+            mask = mask.at[:, a].set(True)
+        return mask
+
+    return to_extend
+
+
+def _make_set_to_extend_state(plan: PatternSetPlan):
+    """Per-embedding anchor activation: slot a is enumerated only by rows
+    whose bitmap still carries a branch anchored at a — dead branches
+    generate no candidates at all (enumeration-side eager pruning)."""
+    by_level: dict = {}
+    for lvl in plan.levels:
+        slots: dict = {}
+        for br in lvl:
+            slots.setdefault(br.anchor, set()).add(br.parent)
+        by_level[lvl[0].position] = {
+            a: tuple(sorted(ps)) for a, ps in slots.items()}
+
+    def to_extend_state(ctx: GraphCtx, emb: jnp.ndarray,
+                        state: jnp.ndarray) -> jnp.ndarray:
+        mask = jnp.zeros(emb.shape, bool)
+        for a, parents in by_level[emb.shape[1]].items():
+            live = jnp.zeros(state.shape, bool)
+            for p in parents:
+                live = live | (((state >> p) & 1) == 1)
+            mask = mask.at[:, a].set(live)
+        return mask
+
+    return to_extend_state
+
+
+def _make_set_histogram(plan: PatternSetPlan, dedup_slot: tuple[int, ...]):
+    """Leaf bits -> per-INPUT-pattern counts.
+
+    ``dedup_slot[i]`` is input pattern i's index in the deduplicated
+    ``plan.patterns``; isomorphic duplicate inputs map to the same slot
+    and therefore report the same count — ``p_map[i]`` is always the
+    count of the caller's ``patterns[i]``.
+    """
+    n_dedup = len(plan.patterns)
+    leaves = plan.leaves
+    gather = jnp.asarray(dedup_slot, jnp.int32)
+
+    def state_histogram(state: jnp.ndarray, valid: jnp.ndarray):
+        v = valid.astype(jnp.int32)
+        pm = jnp.zeros((n_dedup,), jnp.int32)
+        for b, pid in enumerate(leaves):
+            pm = pm.at[pid].add(jnp.sum(v * ((state >> b) & 1)))
+        return pm[gather]
+
+    return state_histogram
+
+
+def pattern_set_app(patterns: Sequence[Pattern], induced: bool = True,
+                    backend: Optional[str] = None,
+                    name: Optional[str] = None) -> MiningApp:
+    """Compile a whole pattern set into ONE mining app (shared trie).
+
+    All patterns are counted in a single fused traversal: per level every
+    live trie branch is extended at once (``to_extend`` activates the
+    union of branch anchors), the branch bitmap threads through the
+    embedding list as the i32 memo state (``update_state_kernel``), and a
+    candidate survives iff it extends *any* live branch — eager pruning
+    at branch granularity inside the fused Pallas kernel.  Leaf counts
+    come straight off the final bitmap (``state_histogram``): no
+    canonical labeling, no ``jnp.unique``, no reduce of any kind.
+
+    ``MineResult.p_map[i]`` is the count of ``patterns[i]`` — isomorphic
+    duplicate inputs are mined once but each reports its (shared) count,
+    so the indexing always matches the caller's list.  With
+    ``induced=True`` each embedding matches at most one leaf, so
+    ``count == dedup'd p_map sum``; non-induced embeddings may match
+    several leaves and ``count`` reports matched embeddings.
+    """
+    plan = compile_pattern_set(patterns, induced=induced)
+    kernels = tuple(make_set_branch_bits(lvl) for lvl in plan.levels)
+    to_add = tuple((lambda bits: lambda *a: bits(*a) != 0)(b)
+                   for b in kernels)
+    return MiningApp(
+        name=name or f"psm-set[{len(plan.patterns)}x{plan.k}v]",
+        kind="vertex", max_size=plan.k, backend=backend,
+        max_patterns=len(plan.dedup_slot), needs_reduce=True,
+        directed_worklist=plan.directed, plan_key=plan.plan_key,
+        to_extend=_make_set_to_extend(plan),
+        to_extend_state=_make_set_to_extend_state(plan),
+        to_add_kernel=to_add, update_state_kernel=kernels,
+        state_histogram=_make_set_histogram(plan, plan.dedup_slot),
+        # every embedding starts at the trie root (bit 0)
+        init_state=lambda ctx, emb, n: jnp.ones(emb.shape[:1], jnp.int32))

@@ -40,6 +40,10 @@ class EmbeddingLevel:
     n: jnp.ndarray                   # i32[]     (valid prefix length)
     his: Optional[jnp.ndarray] = None   # i32[cap] (edge-induced)
     eid: Optional[jnp.ndarray] = None   # i32[cap] (undirected edge id)
+    # per-embedding memo state compacted by the extend op itself (set only
+    # when the app supplies update_state_kernel — e.g. the multi-pattern
+    # trie's branch bitmap); None = state follows the parent pointer
+    state: Optional[jnp.ndarray] = None  # i32[cap]
 
     @property
     def capacity(self) -> int:
@@ -51,10 +55,13 @@ class EmbeddingLevel:
             total += self.his.nbytes
         if self.eid is not None:
             total += self.eid.nbytes
+        if self.state is not None:
+            total += self.state.nbytes
         return total
 
     def tree_flatten(self):
-        return (self.vid, self.idx, self.n, self.his, self.eid), None
+        return (self.vid, self.idx, self.n, self.his, self.eid,
+                self.state), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):

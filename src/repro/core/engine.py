@@ -109,8 +109,8 @@ class _PhaseOps:
             def inspect(emb, n, st, *, cand_cap):
                 return be.inspect_vertex(ctx, app, emb, n, st, cand_cap)
 
-            def bound(emb, n):
-                return be.candidate_bound_vertex(ctx, app, emb, n)
+            def bound(emb, n, st):
+                return be.candidate_bound_vertex(ctx, app, emb, n, st)
 
             def extend(emb, n, st, *, cand_cap, out_cap):
                 # fused extend+filter+compact with counts: the one
@@ -192,7 +192,7 @@ class _VertexPipeline:
         return None
 
     def bound(self):
-        return self.ops._bound(self.emb, self.n)
+        return self.ops._bound(self.emb, self.n, self.state)
 
     def inspect(self, cand_cap: int):
         return self.ops._inspect(self.emb, self.n, self.state,
@@ -204,7 +204,11 @@ class _VertexPipeline:
             out_cap=out_cap)
         self.levels.append(new_level)
         self.n = new_level.n
-        self.state = self.state[new_level.idx]  # memo state follows the tree
+        # memo state follows the tree; apps with update_state_kernel get
+        # the state column the extend op compacted itself (path-dependent
+        # state — e.g. the multi-pattern branch bitmap)
+        self.state = (new_level.state if new_level.state is not None
+                      else self.state[new_level.idx])
         return n_cand, new_level.n
 
     def reduce_filter(self, level: int, policy):
@@ -214,7 +218,9 @@ class _VertexPipeline:
             pm, pat, self.state = self.ops._reduce(self.emb, self.n,
                                                    self.state)
             self.p_map = pm
-        else:
+        elif app.update_state_kernel is None:
+            # apps without a kernel state update get a fresh memo slot per
+            # level; kernel-threaded state must survive between levels
             self.state = jnp.zeros(self.emb.shape[:1], jnp.int32)
 
     def checkpoint_payload(self):

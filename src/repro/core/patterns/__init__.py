@@ -1,7 +1,12 @@
 # Pattern-query subsystem: specs, the host compiler, and enumeration.
 from repro.core.patterns.spec import (MAX_PATTERN_SIZE, PATTERN_LIBRARY,
-                                      Pattern, enumerate_connected_codes,
-                                      n_connected_patterns, pattern_names)
-from repro.core.patterns.compile import (LevelPlan, MatchingPlan,
-                                         compile_pattern, matching_order,
-                                         symmetry_break)
+                                      PATTERN_SETS, Pattern,
+                                      enumerate_connected_codes,
+                                      motif_patterns, n_connected_patterns,
+                                      named_pattern_set, pattern_names,
+                                      pattern_set_names)
+from repro.core.patterns.compile import (MAX_SET_BRANCHES, LevelPlan,
+                                         MatchingPlan, PatternSetPlan,
+                                         SetBranch, compile_pattern,
+                                         compile_pattern_set,
+                                         matching_order, symmetry_break)

@@ -34,12 +34,21 @@ output :class:`MatchingPlan` is immutable and hashable pieces only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import hashlib
+from typing import Optional, Sequence
+
+import numpy as np
 
 from repro.core.patterns.spec import Pattern
 
-__all__ = ["LevelPlan", "MatchingPlan", "compile_pattern",
-           "matching_order", "symmetry_break"]
+__all__ = ["LevelPlan", "MatchingPlan", "SetBranch", "PatternSetPlan",
+           "compile_pattern", "compile_pattern_set", "matching_order",
+           "symmetry_break", "MAX_SET_BRANCHES"]
+
+# The multi-pattern executor threads a per-embedding branch bitmap in the
+# i32 memo-state column, so a trie level holds at most 32 branches (one
+# bit per live trie node) — and therefore a set at most 32 patterns.
+MAX_SET_BRANCHES = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,19 +133,23 @@ def symmetry_break(pattern: Pattern) -> tuple[tuple[tuple[int, int], ...],
     the ``|Aut|`` automorphic placements of any match survives all
     constraints — matches are counted exactly once with no runtime
     canonical labeling."""
-    auts = pattern.automorphisms()
-    n_aut = len(auts)
+    return _stabilizer_constraints(pattern.k, pattern.automorphisms())
+
+
+def _stabilizer_constraints(k: int, auts: list[tuple[int, ...]]
+                            ) -> tuple[tuple[tuple[int, int], ...], int]:
+    """Stabilizer-chain constraints for an explicit automorphism group."""
     constraints: list[tuple[int, int]] = []
     group = auts
     while len(group) > 1:
-        moved = min(i for i in range(pattern.k)
+        moved = min(i for i in range(k)
                     if any(s[i] != i for s in group))
         orbit = sorted({s[moved] for s in group})
         for j in orbit:
             if j != moved:
                 constraints.append((moved, j))
         group = [s for s in group if s[moved] == moved]
-    return tuple(constraints), n_aut
+    return tuple(constraints), len(auts)
 
 
 def compile_pattern(pattern: Pattern, induced: bool = True) -> MatchingPlan:
@@ -170,3 +183,240 @@ def compile_pattern(pattern: Pattern, induced: bool = True) -> MatchingPlan:
                         n_automorphisms=n_aut,
                         first_pair_symmetric=(0, 1) in constraints,
                         induced=induced)
+
+
+# ---------------------------------------------------------------------------
+# Multi-pattern sets: merge matching orders into a common-prefix trie
+#
+# G2Miner's observation: patterns of a set usually share partial matching
+# orders, so a whole set (all of mc(k)'s motifs, a user's pattern list) can
+# be mined in ONE traversal — each level extends every live branch at once,
+# and a per-embedding branch bitmap records which trie nodes the embedding
+# still satisfies.  The compiler below picks each pattern's matching order
+# *among all legal orders* to maximize the shared prefix, then merges the
+# per-level (connectivity, symmetry) keys into a trie whose leaves are the
+# patterns.
+
+
+@dataclasses.dataclass(frozen=True)
+class SetBranch:
+    """One trie node: the rules for extending to ``position`` along it.
+
+    ``parent`` is the branch index at the previous level whose bitmap bit
+    must be set for this branch to stay live (bit 0 = the shared root for
+    the first extension level).  ``first_pair`` marks the folded
+    ``v_0 < v_1`` symmetry constraint — emitted only when the set runs on
+    a *directed* level-0 worklist (some other pattern needs both edge
+    orientations) and this branch's pattern has exchangeable first
+    positions, so the structural ``src < dst`` filter is unavailable and
+    the constraint must be checked explicitly."""
+
+    position: int
+    parent: int
+    anchor: int
+    required: tuple[int, ...]
+    forbidden: tuple[int, ...]
+    distinct: tuple[int, ...]
+    smaller: tuple[int, ...]
+    first_pair: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSetPlan:
+    """Compiled trie for one pattern set.
+
+    ``levels[i]`` holds the branches extending to position ``i + 2``;
+    ``leaves[b]`` maps final-level branch ``b`` to its pattern's index in
+    ``patterns``.  ``directed`` mirrors ``MiningApp.directed_worklist``.
+    ``n_nodes`` counts trie nodes — strictly fewer than the unshared
+    ``len(patterns) * (k - 2)`` whenever any prefix is shared.
+    ``dedup_slot[i]`` is the caller's i-th input pattern's index in the
+    deduplicated ``patterns`` (isomorphic duplicates share a slot), so
+    executors can report counts in the caller's indexing without
+    re-deriving the isomorphism identity."""
+
+    patterns: tuple[Pattern, ...]
+    k: int
+    induced: bool
+    directed: bool
+    levels: tuple[tuple[SetBranch, ...], ...]
+    leaves: tuple[int, ...]
+    n_nodes: int
+    dedup_slot: tuple[int, ...] = ()
+
+    @property
+    def plan_key(self) -> str:
+        """Plan-cache identity: the set's isomorphism hashes + semantics.
+
+        Order-insensitive (capacity plans depend on the branch union, not
+        on pattern indices), so permuted sets share cached plans."""
+        ident = (self.k, self.induced,
+                 tuple(sorted(p.hash_hex() for p in self.patterns)))
+        return "set:" + hashlib.sha1(repr(ident).encode()).hexdigest()[:16]
+
+
+def _valid_orders(pattern: Pattern) -> list[tuple[int, ...]]:
+    """Every vertex order whose each position >= 1 touches the prefix."""
+    adj = pattern.adjacency()
+    out: list[tuple[int, ...]] = []
+
+    def rec(prefix: list[int], remaining: set):
+        if not remaining:
+            out.append(tuple(prefix))
+            return
+        for v in sorted(remaining):
+            if not prefix or adj[v, prefix].any():
+                rec(prefix + [v], remaining - {v})
+
+    rec([], set(range(pattern.k)))
+    return out
+
+
+def _order_keys(adj: np.ndarray, auts: list, order: tuple[int, ...]):
+    """Per-level (required, smaller) keys + first-pair symmetry for one
+    candidate matching order (automorphisms conjugated, not recomputed)."""
+    k = adj.shape[0]
+    inv = [0] * k
+    for i, v in enumerate(order):
+        inv[v] = i
+    a2 = adj[np.ix_(order, order)]
+    auts2 = [tuple(inv[a[order[i]]] for i in range(k)) for a in auts]
+    constraints, _ = _stabilizer_constraints(k, auts2)
+    keys = []
+    for pos in range(2, k):
+        required = tuple(j for j in range(pos) if a2[j, pos])
+        smaller = tuple(a for a, b in constraints if b == pos)
+        keys.append((required, smaller))
+    return keys, (0, 1) in constraints
+
+
+def compile_pattern_set(patterns: Sequence[Pattern],
+                        induced: bool = True) -> PatternSetPlan:
+    """Compile a set of same-size unlabeled patterns into one shared trie.
+
+    Per pattern, every legal matching order is considered (connected
+    prefixes only); orders are chosen greedily, in input order, to
+    maximize the prefix shared with the trie built so far — "reordering
+    individual matching orders where legal".  Each order's
+    symmetry-breaking constraints come from the stabilizer chain of its
+    *conjugated* automorphism group, so any choice counts each match
+    exactly once; sharing therefore never trades correctness.
+
+    The level-0 worklist stays undirected (``src < dst``) whenever every
+    pattern admits an order whose first two positions are automorphism-
+    exchangeable (the ``v0 < v1`` constraint is then structural); one
+    asymmetric pattern switches the whole set to the directed worklist,
+    and symmetric branches regain exactness through an explicit
+    ``first_pair`` check at the first extension level.
+
+    Duplicate patterns (isomorphic specs) are deduplicated keeping first
+    occurrence; labeled patterns and mixed vertex counts are rejected.
+    """
+    pats = list(patterns)
+    if not pats:
+        raise ValueError("pattern set is empty")
+    slot_by_code: dict[int, int] = {}
+    deduped: list[Pattern] = []
+    dedup_slot: list[int] = []
+    for p in pats:
+        p.validate()
+        if p.labels is not None:
+            raise ValueError(
+                f"pattern {p.name!r} is labeled: pattern sets compile to "
+                "elementwise kernel predicates, which cannot gather "
+                "ctx.labels — mine labeled patterns individually via "
+                "pattern_app")
+        code = p.canonical_code()
+        if code not in slot_by_code:
+            slot_by_code[code] = len(deduped)
+            deduped.append(p)
+        dedup_slot.append(slot_by_code[code])
+    ks = {p.k for p in deduped}
+    if len(ks) != 1:
+        raise ValueError(
+            f"pattern set mixes vertex counts {sorted(ks)}: all patterns "
+            "of a set must have the same size (the shared level loop "
+            "extends every branch in lock step)")
+    if len(deduped) > MAX_SET_BRANCHES:
+        raise ValueError(
+            f"pattern set has {len(deduped)} patterns; the branch bitmap "
+            f"is one i32 per embedding, so sets are capped at "
+            f"{MAX_SET_BRANCHES}")
+    k = deduped[0].k
+
+    # candidate orders per pattern: (keys, first_pair), deduplicated
+    per_pattern = []
+    for p in deduped:
+        adj = p.adjacency()
+        auts = p.automorphisms()
+        cands, seen = [], set()
+        for order in _valid_orders(p):
+            keys, fp = _order_keys(adj, auts, order)
+            sig = (tuple(keys), fp)
+            if sig not in seen:
+                seen.add(sig)
+                cands.append((keys, fp))
+        per_pattern.append(cands)
+
+    directed = any(not any(fp for _, fp in cands) for cands in per_pattern)
+    if not directed:   # undirected worklist: symmetric-first orders only
+        per_pattern = [[c for c in cands if c[1]] for cands in per_pattern]
+
+    n_levels = k - 2
+    nodes: list[dict] = [{} for _ in range(n_levels)]
+    branches: list[list[SetBranch]] = [[] for _ in range(n_levels)]
+
+    def full_keys(keys, fp):
+        """Fold the first-pair check into the level-2 key (directed only:
+        an undirected worklist enforces v0 < v1 structurally)."""
+        out = []
+        for i, (required, smaller) in enumerate(keys):
+            pc = bool(directed and fp) if i == 0 else False
+            out.append((required, smaller, pc))
+        return tuple(out)
+
+    def prefix_len(keys):
+        parent, depth = 0, 0
+        for i, key in enumerate(keys):
+            nxt = nodes[i].get((parent, key))
+            if nxt is None:
+                break
+            parent, depth = nxt, depth + 1
+        return depth
+
+    leaves_by_node: dict[int, int] = {}
+    for pid, cands in enumerate(per_pattern):
+        scored = [full_keys(keys, fp) for keys, fp in cands]
+        best = min(scored, key=lambda fk: (-prefix_len(fk), fk))
+        parent = 0
+        for i, key in enumerate(best):
+            node = nodes[i].get((parent, key))
+            if node is None:
+                required, smaller, pc = key
+                non_adj = tuple(j for j in range(i + 2)
+                                if j not in required)
+                node = len(branches[i])
+                if node >= MAX_SET_BRANCHES:
+                    raise ValueError(
+                        f"trie level {i + 2} exceeds {MAX_SET_BRANCHES} "
+                        "branches (the i32 bitmap budget)")
+                nodes[i][(parent, key)] = node
+                branches[i].append(SetBranch(
+                    position=i + 2, parent=parent, anchor=max(required),
+                    required=required,
+                    forbidden=non_adj if induced else (),
+                    distinct=non_adj, smaller=smaller, first_pair=pc))
+            parent = node
+        if parent in leaves_by_node:
+            raise RuntimeError(
+                f"patterns {leaves_by_node[parent]} and {pid} compiled to "
+                "identical matching-order chains — dedupe should have "
+                "caught isomorphic inputs")
+        leaves_by_node[parent] = pid
+
+    leaves = tuple(leaves_by_node[i] for i in range(len(branches[-1])))
+    return PatternSetPlan(
+        patterns=tuple(deduped), k=k, induced=induced, directed=directed,
+        levels=tuple(tuple(b) for b in branches), leaves=leaves,
+        n_nodes=sum(len(b) for b in branches),
+        dedup_slot=tuple(dedup_slot))

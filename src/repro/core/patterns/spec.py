@@ -25,7 +25,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-__all__ = ["Pattern", "PATTERN_LIBRARY", "pattern_names",
+__all__ = ["Pattern", "PATTERN_LIBRARY", "PATTERN_SETS", "pattern_names",
+           "pattern_set_names", "named_pattern_set", "motif_patterns",
            "enumerate_connected_codes", "n_connected_patterns",
            "MAX_PATTERN_SIZE"]
 
@@ -337,3 +338,57 @@ def n_connected_patterns(k: int) -> int:
     clear message beyond k = :data:`MAX_PATTERN_SIZE`.
     """
     return len(enumerate_connected_codes(k))
+
+
+# The k = 3 / 4 motif orderings are pinned to the classifier enums of
+# repro.core.pattern (WEDGE=0, TRIANGLE=1; PATH4..CLIQUE4 = 0..5) so the
+# multi-pattern mc(k) path emits p_map in the same slot order as the
+# memo/custom classifiers and the networkx oracle.
+_MOTIF_ENUM_ORDER = {
+    3: ("wedge", "triangle"),
+    4: ("4-path", "4-star", "4-cycle", "tailed-triangle", "diamond",
+        "4-clique"),
+}
+
+
+def _pattern_from_code(code: int, k: int) -> Pattern:
+    """Decode an upper-triangle adjacency code back into a Pattern."""
+    edges = [(i, j) for i in range(k) for j in range(i + 1, k)
+             if (code >> _tri_bit(i, j, k)) & 1]
+    return Pattern.from_edges(edges, k=k, name=f"{k}v-{code:#x}")
+
+
+def motif_patterns(k: int) -> tuple[Pattern, ...]:
+    """All connected k-vertex patterns, as Pattern specs.
+
+    For k = 3 / 4 the tuple index equals the motif enum of
+    :mod:`repro.core.pattern`; for larger k patterns come in canonical-
+    code order (the :func:`enumerate_connected_codes` order).  This is
+    the pattern set the multi-pattern mc(k) plan compiles.
+    """
+    if k in _MOTIF_ENUM_ORDER:
+        pats = tuple(Pattern.named(n) for n in _MOTIF_ENUM_ORDER[k])
+        assert len(pats) == n_connected_patterns(k)
+        return pats
+    return tuple(_pattern_from_code(c, k)
+                 for c in enumerate_connected_codes(k))
+
+
+# Named pattern sets for the CLI (`--pattern-set motifs4`).
+PATTERN_SETS: dict = {
+    "motifs3": lambda: motif_patterns(3),
+    "motifs4": lambda: motif_patterns(4),
+    "motifs5": lambda: motif_patterns(5),
+}
+
+
+def pattern_set_names() -> list[str]:
+    return sorted(PATTERN_SETS)
+
+
+def named_pattern_set(name: str) -> tuple[Pattern, ...]:
+    key = name.strip().lower().replace("_", "-")
+    if key not in PATTERN_SETS:
+        raise KeyError(f"unknown pattern set {name!r} "
+                       f"(sets: {', '.join(pattern_set_names())})")
+    return PATTERN_SETS[key]()

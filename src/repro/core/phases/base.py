@@ -54,8 +54,10 @@ class PhaseBackend:
     # -- EXTEND: vertex-induced -------------------------------------------
 
     def candidate_bound_vertex(self, ctx: GraphCtx, app: MiningApp,
-                               emb: jnp.ndarray,
-                               n_valid: jnp.ndarray) -> jnp.ndarray:
+                               emb: jnp.ndarray, n_valid: jnp.ndarray,
+                               state: Optional[jnp.ndarray] = None
+                               ) -> jnp.ndarray:
+        """Degree-sum bound; ``state`` feeds state-aware toExtend masks."""
         raise NotImplementedError
 
     def inspect_vertex(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,

@@ -41,7 +41,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import GraphCtx, MiningApp, resolve_kernel_predicate
+from repro.core.api import (GraphCtx, MiningApp, resolve_kernel_predicate,
+                            resolve_state_kernel)
 from repro.core.embedding_list import EmbeddingLevel
 from repro.core.phases.reference import (ReferenceBackend, vertex_add_mask,
                                          vertex_ext_degrees)
@@ -64,8 +65,8 @@ class PallasExtendBackend(ReferenceBackend):
 
     @staticmethod
     def _kernel_inputs(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                       n_valid: jnp.ndarray):
-        deg = vertex_ext_degrees(ctx, app, emb, n_valid)
+                       n_valid: jnp.ndarray, state=None):
+        deg = vertex_ext_degrees(ctx, app, emb, n_valid, state)
         counts = deg.reshape(-1).astype(jnp.int32)
         offsets = jnp.cumsum(counts)                  # inclusive prefix sum
         starts = offsets - counts
@@ -79,7 +80,7 @@ class PallasExtendBackend(ReferenceBackend):
                            state, cand_cap: int):
         cap, k = emb.shape
         offsets, starts, vlo, vhi = self._kernel_inputs(ctx, app, emb,
-                                                        n_valid)
+                                                        n_valid, state)
         total = offsets[-1].astype(jnp.int32)
         row, u, src_slot, conn = fused_extend(
             ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi,
@@ -103,7 +104,7 @@ class PallasExtendBackend(ReferenceBackend):
         else:
             add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state,
                                   live, conn=conn_b)
-        return row_c, u, add, total
+        return row_c, u, src_slot, add, total
 
     def extend_pruned(self, ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
                       n_valid: jnp.ndarray, state, cand_cap: int,
@@ -117,7 +118,7 @@ class PallasExtendBackend(ReferenceBackend):
                                          fuse_filter=fuse_filter)
         cap, k = emb.shape
         offsets, starts, vlo, vhi = self._kernel_inputs(ctx, app, emb,
-                                                        n_valid)
+                                                        n_valid, state)
         total = offsets[-1].astype(jnp.int32)
         st = (jnp.zeros((cap,), jnp.int32) if state is None
               else state.astype(jnp.int32))
@@ -139,16 +140,20 @@ class PallasExtendBackend(ReferenceBackend):
             bits = jnp.zeros((1,), jnp.uint32)
             row_slot = jnp.zeros((1,), jnp.int32)
         n_words = pg.n_words if pg is not None else 1
-        row, u, n_surv = fused_extend_pruned(
+        upd = resolve_state_kernel(app, k)
+        *out, n_surv = fused_extend_pruned(
             ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi, st,
             bits, row_slot, k=k, cand_cap=cand_cap, out_cap=out_cap,
             n_steps=ctx.n_steps, n_vertices=ctx.n_vertices,
-            n_words=n_words, n_rows=n_rows, pred=pred, conn_mode=conn_mode,
-            block_c=self.block_c, interpret=self._use_interpret())
+            n_words=n_words, n_rows=n_rows, pred=pred, state_upd=upd,
+            conn_mode=conn_mode, block_c=self.block_c,
+            interpret=self._use_interpret())
+        row, u = out[0], out[1]
+        st_out = out[2] if upd is not None else None
         live_out = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
         vid = jnp.where(live_out, u, -1).astype(jnp.int32)
         idx = jnp.where(live_out, jnp.clip(row, 0, cap - 1),
                         0).astype(jnp.int32)
-        level = EmbeddingLevel(vid=vid, idx=idx, n=n_surv)
+        level = EmbeddingLevel(vid=vid, idx=idx, n=n_surv, state=st_out)
         new_emb = jnp.concatenate([emb[idx], vid[:, None]], axis=1)
         return level, new_emb, total

@@ -36,7 +36,7 @@ import numpy as np
 from repro.core.api import (GraphCtx, MiningApp, is_auto_canonical_edge,
                             is_auto_canonical_vertex,
                             is_auto_canonical_vertex_bits,
-                            resolve_kernel_predicate)
+                            resolve_kernel_predicate, resolve_state_kernel)
 from repro.core.embedding_list import EmbeddingLevel, materialize_edges
 from repro.core.phases.base import PhaseBackend
 from repro.core import pattern as P
@@ -50,11 +50,20 @@ _INT_MAX = np.int32(np.iinfo(np.int32).max)
 
 
 def vertex_ext_degrees(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                       n_valid: jnp.ndarray) -> jnp.ndarray:
-    """Step 1: per-(parent, slot) candidate counts, masked by ``toExtend``."""
+                       n_valid: jnp.ndarray,
+                       state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Step 1: per-(parent, slot) candidate counts, masked by ``toExtend``.
+
+    With a ``to_extend_state`` hook (and a state column) the mask is
+    per-embedding: rows enumerate only the slots their memo state still
+    needs — the multi-pattern trie's dead branches never generate
+    candidates at all.
+    """
     cap, k = emb.shape
     valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
-    if app.to_extend is not None:
+    if app.to_extend_state is not None and state is not None:
+        ext = app.to_extend_state(ctx, emb, state)
+    elif app.to_extend is not None:
         ext = app.to_extend(ctx, emb)
     else:
         ext = jnp.ones((cap, k), bool)
@@ -111,16 +120,38 @@ def apply_kernel_predicate(ctx: GraphCtx, pred, emb: jnp.ndarray,
     return pred(emb_cols, u, src_slot, st, conn) & live
 
 
+def apply_state_kernel(ctx: GraphCtx, upd, emb: jnp.ndarray,
+                       row_c: jnp.ndarray, u: jnp.ndarray,
+                       src_slot: jnp.ndarray,
+                       state: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Evaluate an elementwise ``update_state_kernel`` on flat batches.
+
+    Same plumbing (and therefore the same connectivity bits) as
+    :func:`apply_kernel_predicate`; the Pallas backend traces the same
+    ``upd`` inside the extend kernel, keeping the two backends bitwise
+    equal.  Non-surviving candidates' outputs are dropped by the
+    compaction gather, so no masking is needed here.
+    """
+    k = emb.shape[1]
+    parent = emb[row_c]
+    emb_cols = tuple(parent[:, j] for j in range(k))
+    conn = tuple(ctx.is_connected(parent[:, j], u) for j in range(k))
+    st = (jnp.zeros(u.shape, jnp.int32) if state is None
+          else state[row_c])
+    return upd(emb_cols, u, src_slot, st, conn).astype(jnp.int32)
+
+
 def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
                        n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
                        cand_cap: int):
     """Steps 1+2+filter: enumerate candidate (parent, u) pairs.
 
     Returns (parent_row i32[cand_cap], u i32[cand_cap],
-             add_mask bool[cand_cap], n_candidates i32[]).
+             src_slot i32[cand_cap], add_mask bool[cand_cap],
+             n_candidates i32[]).
     """
     cap, k = emb.shape
-    deg = vertex_ext_degrees(ctx, app, emb, n_valid)
+    deg = vertex_ext_degrees(ctx, app, emb, n_valid, state)
     slot_parent, rank, total = expand_ragged(deg.reshape(-1), cand_cap)
     row = slot_parent // k
     col = slot_parent % k
@@ -138,28 +169,35 @@ def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
     else:
         add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state,
                               live)
-    return row_c, u, add, total
+    return row_c, u, src_slot, add, total
 
 
 def inspect_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
                    n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
                    cand_cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Exact (n_candidates, n_survivors) for capacity planning."""
-    _, _, add, total = _vertex_candidates(ctx, app, emb, n_valid, state,
-                                          cand_cap)
+    _, _, _, add, total = _vertex_candidates(ctx, app, emb, n_valid, state,
+                                             cand_cap)
     return total, jnp.sum(add.astype(jnp.int32))
 
 
 def candidate_bound_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
-                           n_valid: jnp.ndarray) -> jnp.ndarray:
+                           n_valid: jnp.ndarray,
+                           state: Optional[jnp.ndarray] = None
+                           ) -> jnp.ndarray:
     """Cheap upper bound on candidate count (degree sum) — step 1 only."""
-    return jnp.sum(vertex_ext_degrees(ctx, app, emb, n_valid))
+    return jnp.sum(vertex_ext_degrees(ctx, app, emb, n_valid, state))
 
 
 def finish_extend_vertex(emb: jnp.ndarray, row: jnp.ndarray, u: jnp.ndarray,
                          add: jnp.ndarray, out_cap: int,
-                         fuse_filter: bool = True):
-    """Step 3's write: compact survivors into the next SoA level."""
+                         fuse_filter: bool = True,
+                         new_state: Optional[jnp.ndarray] = None):
+    """Step 3's write: compact survivors into the next SoA level.
+
+    ``new_state`` (i32[cand_cap], from ``update_state_kernel``) is
+    compacted with the same gather into the level's ``state`` column.
+    """
     if not fuse_filter:
         # Materialize the full candidate list (extra HBM traffic), then
         # filter — deliberately wasteful, for the ablation benchmark
@@ -168,10 +206,13 @@ def finish_extend_vertex(emb: jnp.ndarray, row: jnp.ndarray, u: jnp.ndarray,
         cand_vid = jax.lax.optimization_barrier(cand_vid)
         row, u = cand_vid[:, 0], cand_vid[:, 1]
     gather, n_new = compact_mask(add, out_cap)
-    vid = jnp.where(jnp.arange(out_cap) < n_new, u[gather], -1)
-    idx = jnp.where(jnp.arange(out_cap) < n_new, row[gather], 0)
+    live = jnp.arange(out_cap) < n_new
+    vid = jnp.where(live, u[gather], -1)
+    idx = jnp.where(live, row[gather], 0)
+    st = (None if new_state is None
+          else jnp.where(live, new_state[gather], 0).astype(jnp.int32))
     level = EmbeddingLevel(vid=vid.astype(jnp.int32),
-                           idx=idx.astype(jnp.int32), n=n_new)
+                           idx=idx.astype(jnp.int32), n=n_new, state=st)
     new_emb = jnp.concatenate(
         [emb[idx], vid[:, None].astype(jnp.int32)], axis=1)
     return level, new_emb
@@ -182,8 +223,8 @@ def extend_vertex(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
                   cand_cap: int, out_cap: int,
                   fuse_filter: bool = True):
     """Produce the next SoA level (and next emb matrix)."""
-    row, u, add, _ = _vertex_candidates(ctx, app, emb, n_valid, state,
-                                        cand_cap)
+    row, u, _, add, _ = _vertex_candidates(ctx, app, emb, n_valid, state,
+                                           cand_cap)
     return finish_extend_vertex(emb, row, u, add, out_cap, fuse_filter)
 
 
@@ -299,6 +340,13 @@ def reduce_count(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
     """Classify + count.  Returns (p_map i32[max_patterns], pat i32[N], state)."""
     cap = emb.shape[0]
     valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    if app.state_histogram is not None:
+        # the state column already carries the per-embedding pattern
+        # attribution (e.g. the multi-pattern trie's leaf-branch bitmap);
+        # the histogram is a fixed bit-count — no canonical labeling, no
+        # jnp.unique, no segment sort
+        p_map = app.state_histogram(state, valid).astype(jnp.int32)
+        return p_map, jnp.zeros((cap,), jnp.int32), state
     if app.get_pattern is not None:
         pat, new_state = app.get_pattern(ctx, emb, state, valid)
     else:
@@ -620,26 +668,32 @@ class ReferenceBackend(PhaseBackend):
     def _vertex_candidates(self, ctx, app, emb, n_valid, state, cand_cap):
         return _vertex_candidates(ctx, app, emb, n_valid, state, cand_cap)
 
-    def candidate_bound_vertex(self, ctx, app, emb, n_valid):
-        return candidate_bound_vertex(ctx, app, emb, n_valid)
+    def candidate_bound_vertex(self, ctx, app, emb, n_valid, state=None):
+        return candidate_bound_vertex(ctx, app, emb, n_valid, state)
 
     def inspect_vertex(self, ctx, app, emb, n_valid, state, cand_cap):
-        _, _, add, total = self._vertex_candidates(ctx, app, emb, n_valid,
-                                                   state, cand_cap)
+        _, _, _, add, total = self._vertex_candidates(ctx, app, emb,
+                                                      n_valid, state,
+                                                      cand_cap)
         return total, jnp.sum(add.astype(jnp.int32))
 
     def extend_vertex(self, ctx, app, emb, n_valid, state, cand_cap,
                       out_cap, fuse_filter=True):
-        row, u, add, _ = self._vertex_candidates(ctx, app, emb, n_valid,
-                                                 state, cand_cap)
+        row, u, _, add, _ = self._vertex_candidates(ctx, app, emb, n_valid,
+                                                    state, cand_cap)
         return finish_extend_vertex(emb, row, u, add, out_cap, fuse_filter)
 
     def extend_pruned(self, ctx, app, emb, n_valid, state, cand_cap,
                       out_cap, fuse_filter=True):
-        row, u, add, total = self._vertex_candidates(ctx, app, emb, n_valid,
-                                                     state, cand_cap)
+        row, u, src_slot, add, total = self._vertex_candidates(
+            ctx, app, emb, n_valid, state, cand_cap)
+        upd = resolve_state_kernel(app, emb.shape[1])
+        new_st = (None if upd is None
+                  else apply_state_kernel(ctx, upd, emb, row, u, src_slot,
+                                          state))
         level, new_emb = finish_extend_vertex(emb, row, u, add, out_cap,
-                                              fuse_filter)
+                                              fuse_filter,
+                                              new_state=new_st)
         return level, new_emb, total
 
     # -- edge EXTEND

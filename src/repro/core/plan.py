@@ -171,6 +171,21 @@ class PlanCache:
             except OSError:
                 pass
             return None
+        if plan.signature != signature:
+            # A renamed/copied/hand-edited entry whose recorded signature
+            # disagrees with its filename.  Replaying it would resurrect
+            # capacities planned for a DIFFERENT (graph, app, backend,
+            # cap0) identity — for FSM that includes min_support, whose
+            # filter_caps would silently truncate the support filter.
+            # plan_signature folds every cap-relevant app knob (including
+            # min_support and plan_key), so an honest lookup can only hit
+            # a plan recorded under the same semantics; anything else is
+            # dropped here.
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
         try:
             os.utime(path)                   # LRU touch
         except OSError:

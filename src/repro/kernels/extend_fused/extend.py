@@ -155,11 +155,19 @@ def fused_extend_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
 
 def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
                           col_ref, state_ref, bits_ref, slot_ref,
-                          row_ref, u_ref, cnt_ref, base_ref, *,
-                          k: int, m: int, n_parents: int, n_steps: int,
-                          n_steps_p: int, block_c: int, cand_cap: int,
-                          out_len: int, n_tiles: int, n_vertices: int,
-                          n_words: int, n_rows: int, conn_mode: str, pred):
+                          *refs, k: int, m: int, n_parents: int,
+                          n_steps: int, n_steps_p: int, block_c: int,
+                          cand_cap: int, out_len: int, n_tiles: int,
+                          n_vertices: int, n_words: int, n_rows: int,
+                          conn_mode: str, pred, state_upd):
+    # the compacted-state output exists only for state-updating apps —
+    # stateless ones (state_upd None, the common case) skip the extra
+    # buffer, gather, and write entirely (static specialization)
+    if state_upd is not None:
+        row_ref, u_ref, st_ref, cnt_ref, base_ref = refs
+    else:
+        row_ref, u_ref, cnt_ref, base_ref = refs
+        st_ref = None
     offsets = offsets_ref[...]
     starts = starts_ref[...]
     emb_flat = emb_ref[...]
@@ -246,10 +254,16 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
         emb_cols.append(ev)
         conn_cols.append(found)
 
-    # stage 4 — the app's eager toAdd / symmetry-break predicate, traced
-    # directly into the kernel on the (1, block_c) lane tiles
+    # stage 4 — the app's eager toAdd / symmetry-break predicate (and the
+    # optional state update — e.g. the multi-pattern branch bitmap),
+    # traced directly into the kernel on the (1, block_c) lane tiles.
+    # Shared subexpressions between pred and state_upd (the typical case:
+    # the bitmap IS the predicate) are CSE'd by the compiler.
     st = _take(state, jnp.clip(row, 0, n_parents // k - 1))
     mask = pred(tuple(emb_cols), u, src_slot, st, tuple(conn_cols)) & live
+    if state_upd is not None:
+        new_st = state_upd(tuple(emb_cols), u, src_slot, st,
+                           tuple(conn_cols)).astype(jnp.int32)
 
     # stage 5 — in-tile exclusive-scan stream compaction.  incl[j] is the
     # 1-based output rank of slot j among this tile's survivors; the
@@ -281,6 +295,9 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
     bw = jnp.minimum(base, out_len - block_c)
     row_ref[pl.dslice(bw, block_c)] = comp_row.reshape(block_c)
     u_ref[pl.dslice(bw, block_c)] = comp_u.reshape(block_c)
+    if st_ref is not None:
+        comp_st = jnp.where(lane_live, _take_tile(new_st, sel), 0)
+        st_ref[pl.dslice(bw, block_c)] = comp_st.reshape(block_c)
     base_ref[0] = base + cnt
     cnt_ref[0] = base + cnt
 
@@ -292,7 +309,8 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                                row_slot: jnp.ndarray, *,
                                k: int, cand_cap: int, out_cap: int,
                                n_steps: int, n_vertices: int, n_words: int,
-                               n_rows: int, pred, conn_mode: str = "search",
+                               n_rows: int, pred, state_upd=None,
+                               conn_mode: str = "search",
                                block_c: int = 512,
                                interpret: bool = False):
     """Fused EXTEND with eager in-kernel pruning + stream compaction.
@@ -302,9 +320,16 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     predicate ``pred`` per candidate, and exclusive-scan-compacts the
     survivors into ``out_cap``-scale buffers — dead candidates are never
     materialized in HBM (paper §4 / §5.2 eager pruning).  Returns
-    (row i32[out_cap], u i32[out_cap], n_surv i32[1]) with ``n_surv`` the
+    (row i32[out_cap], u i32[out_cap], n_surv i32[]) with ``n_surv`` the
     *true* survivor count (may exceed ``out_cap``; slots past
     ``min(n_surv, out_cap)`` are garbage the caller masks).
+
+    ``state_upd`` (optional, same elementwise contract as ``pred`` but
+    returning i32) computes each surviving candidate's new memo state —
+    the multi-pattern trie's branch bitmap rides through here.  When
+    given, the return becomes (row, u, st i32[out_cap], n_surv): the
+    compacted new-state column.  Stateless calls are specialized — no
+    extra buffer, gather, or write exists in their kernel.
 
     ``conn_mode`` picks the connectivity probe: ``"bitmap"`` (full pack —
     ``bits`` holds ``n_vertices`` u32 rows, indexed by vertex id),
@@ -348,26 +373,32 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     n_steps_p = max(1, math.ceil(math.log2(n_parents + 1)))
 
     full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
-    row, u, cnt = pl.pallas_call(
+    buf = jax.ShapeDtypeStruct((out_len,), jnp.int32)
+    n_bufs = 3 if state_upd is not None else 2
+    outs = pl.pallas_call(
         functools.partial(_pruned_extend_kernel, k=k, m=m,
                           n_parents=n_parents, n_steps=n_steps,
                           n_steps_p=n_steps_p, block_c=block_c,
                           cand_cap=cand_cap, out_len=out_len,
                           n_tiles=n_tiles, n_vertices=n_vertices,
                           n_words=n_words, n_rows=n_rows,
-                          conn_mode=conn_mode, pred=pred),
+                          conn_mode=conn_mode, pred=pred,
+                          state_upd=state_upd),
         grid=(n_tiles,),
         in_specs=[full(p_pad)] * 5 + [full(m_pad), full(cap_pad),
                                       full(b_pad), full(s_pad)],
-        out_specs=[full(out_len), full(out_len), full(1)],
-        out_shape=[jax.ShapeDtypeStruct((out_len,), jnp.int32),
-                   jax.ShapeDtypeStruct((out_len,), jnp.int32),
-                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        out_specs=[full(out_len)] * n_bufs + [full(1)],
+        out_shape=[buf] * n_bufs + [jax.ShapeDtypeStruct((1,), jnp.int32)],
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
     )(offsets_p, starts_p, emb_p, vlo_p, vhi_p, col, state_p, bits_p,
       slot_p)
+    *bufs, cnt = outs
     n_surv = cnt[0]
     live = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
-    return (jnp.where(live, row[:out_cap], 0),
-            jnp.where(live, u[:out_cap], -1), n_surv)
+    row, u = bufs[0], bufs[1]
+    out = (jnp.where(live, row[:out_cap], 0),
+           jnp.where(live, u[:out_cap], -1))
+    if state_upd is not None:
+        out = out + (jnp.where(live, bufs[2][:out_cap], 0),)
+    return out + (n_surv,)

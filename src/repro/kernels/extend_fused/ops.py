@@ -26,24 +26,29 @@ def fused_extend(col_idx, offsets, starts, emb_flat, vlo, vhi, *, k: int,
 
 @partial(jax.jit, static_argnames=("k", "cand_cap", "out_cap", "n_steps",
                                    "n_vertices", "n_words", "n_rows",
-                                   "pred", "conn_mode", "block_c",
-                                   "interpret"))
+                                   "pred", "state_upd", "conn_mode",
+                                   "block_c", "interpret"))
 def fused_extend_pruned(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
                         bits, row_slot, *, k: int, cand_cap: int,
                         out_cap: int, n_steps: int, n_vertices: int,
-                        n_words: int, n_rows: int, pred,
+                        n_words: int, n_rows: int, pred, state_upd=None,
                         conn_mode: str = "search", block_c: int = 512,
                         interpret: bool = False):
     """Eager-pruning fused extend: enumerate + in-kernel ``pred`` filter +
     stream compaction.  ``conn_mode`` selects the connectivity probe:
     full bit-packed bitmap, mixed bitmap/CSR (partial packs, via
     ``row_slot``), or CSR binary search.  ``pred`` is a static
-    elementwise callable (the app's ``to_add_kernel``).  Returns (row, u)
-    compacted to ``out_cap`` and the true survivor count; see
+    elementwise callable (the app's ``to_add_kernel``); ``state_upd``
+    (optional, same form, i32 result — the app's ``update_state_kernel``)
+    computes each survivor's new memo state in the same pass.  Returns
+    (row, u) compacted to ``out_cap`` plus the true survivor count —
+    with ``state_upd``, (row, u, st, n_surv); stateless calls compile
+    with no state buffer at all.  See
     :func:`repro.kernels.extend_fused.extend.fused_extend_pruned_pallas`.
     """
     return fused_extend_pruned_pallas(
         col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
         row_slot, k=k, cand_cap=cand_cap, out_cap=out_cap, n_steps=n_steps,
         n_vertices=n_vertices, n_words=n_words, n_rows=n_rows, pred=pred,
-        conn_mode=conn_mode, block_c=block_c, interpret=interpret)
+        state_upd=state_upd, conn_mode=conn_mode, block_c=block_c,
+        interpret=interpret)

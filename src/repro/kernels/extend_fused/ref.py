@@ -30,11 +30,13 @@ def fused_extend_ref(col_idx, offsets, starts, emb_flat, vlo, vhi, *,
 
 def fused_extend_pruned_ref(col_idx, offsets, starts, emb_flat, vlo, vhi,
                             state, *, k: int, cand_cap: int, out_cap: int,
-                            n_steps: int, pred):
-    """Oracle for the eager-pruning kernel: enumerate, evaluate ``pred``,
-    prefix-sum compact — composed from the reference XLA ops.  Returns
-    (row i32[out_cap], u i32[out_cap], n_surv i32[]) with the same
-    padding contract as :func:`fused_extend_pruned_pallas`."""
+                            n_steps: int, pred, state_upd=None):
+    """Oracle for the eager-pruning kernel: enumerate, evaluate ``pred``
+    (and the optional ``state_upd``), prefix-sum compact — composed from
+    the reference XLA ops.  Returns (row i32[out_cap], u i32[out_cap],
+    n_surv i32[]) — with ``state_upd``, (row, u, st i32[out_cap],
+    n_surv) — the same contract as
+    :func:`fused_extend_pruned_pallas`."""
     n_parents = offsets.shape[0]
     row, u, src_slot, conn = fused_extend_ref(
         col_idx, offsets, starts, emb_flat, vlo, vhi, k=k,
@@ -49,5 +51,10 @@ def fused_extend_pruned_ref(col_idx, offsets, starts, emb_flat, vlo, vhi,
     mask = pred(emb_cols, u, src_slot, st, conn_cols) & live
     gather, n_surv = compact_mask(mask, out_cap)
     live_out = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
-    return (jnp.where(live_out, row_c[gather], 0),
-            jnp.where(live_out, u[gather], -1), n_surv)
+    out = (jnp.where(live_out, row_c[gather], 0),
+           jnp.where(live_out, u[gather], -1))
+    if state_upd is not None:
+        new_st = state_upd(emb_cols, u, src_slot, st,
+                           conn_cols).astype(jnp.int32)
+        out = out + (jnp.where(live_out, new_st[gather], 0),)
+    return out + (n_surv,)

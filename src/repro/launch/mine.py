@@ -13,6 +13,12 @@ Arbitrary patterns go through the pattern compiler: ``--pattern diamond``
 "0-1,1-2,0-2"`` compiles a matching order + symmetry-breaking kernel
 predicates at plan time and mines the pattern with zero runtime
 isomorphism tests.
+
+Whole pattern *sets* go through the multi-pattern trie compiler:
+``--patterns diamond,4-cycle,4-clique`` (comma-separated library names)
+or ``--pattern-set motifs4`` (named sets; ``--pattern-set list`` prints
+them) merges the matching orders into one common-prefix plan and counts
+every pattern in a single fused traversal.
 """
 from __future__ import annotations
 
@@ -22,8 +28,9 @@ import time
 import numpy as np
 
 from repro.core import (Miner, Pattern, make_cf_app, make_fsm_app,
-                        make_mc_app, make_tc_app, pattern_app,
-                        pattern_names, triangle_count_fused)
+                        make_mc_app, make_tc_app, named_pattern_set,
+                        pattern_app, pattern_names, pattern_set_app,
+                        pattern_set_names, triangle_count_fused)
 from repro.graph import generators as G
 
 
@@ -66,6 +73,14 @@ def main(argv=None):
     ap.add_argument("--pattern-edges", default=None, metavar="EDGES",
                     help='mine a custom compiled pattern, e.g. '
                          '"0-1,1-2,0-2"; overrides --app')
+    ap.add_argument("--patterns", default=None, metavar="A,B,C",
+                    help="mine a whole pattern SET in one fused traversal "
+                         "(comma-separated library names, e.g. "
+                         "diamond,4-cycle); overrides --app")
+    ap.add_argument("--pattern-set", default=None, metavar="NAME",
+                    help="mine a named pattern set (e.g. motifs4; 'list' "
+                         "to print all) via the multi-pattern trie; "
+                         "overrides --app")
     ap.add_argument("--non-induced", action="store_true",
                     help="compiled patterns: count subgraph occurrences "
                          "(extra edges allowed) instead of vertex-induced "
@@ -98,6 +113,9 @@ def main(argv=None):
     if args.pattern == "list":
         print("[mine] pattern library:", ", ".join(pattern_names()))
         return
+    if args.pattern_set == "list":
+        print("[mine] pattern sets:", ", ".join(pattern_set_names()))
+        return
     labels = args.labels or (3 if "fsm" in args.app else None)
     g = load_graph(args.graph, labels=labels)
     print(f"[mine] graph: {g.n_vertices} vertices, {g.n_edges // 2} edges")
@@ -106,7 +124,19 @@ def main(argv=None):
         n = triangle_count_fused(g)
         print(f"[mine] fused TC: {n} triangles in {time.time()-t0:.3f}s")
         return
-    if args.pattern is not None or args.pattern_edges is not None:
+    set_names = None
+    if args.patterns is not None or args.pattern_set is not None:
+        pats = (named_pattern_set(args.pattern_set)
+                if args.pattern_set is not None else
+                tuple(Pattern.named(n) for n in args.patterns.split(",")
+                      if n.strip()))
+        app = pattern_set_app(pats, induced=not args.non_induced)
+        set_names = [p.name for p in pats]
+        print(f"[mine] compiled pattern set ({len(pats)} patterns, "
+              f"k={pats[0].k}, "
+              f"{'induced' if not args.non_induced else 'non-induced'}): "
+              f"one shared multi-pattern plan")
+    elif args.pattern is not None or args.pattern_edges is not None:
         pat = (Pattern.named(args.pattern) if args.pattern is not None
                else Pattern.from_string(args.pattern_edges))
         app = pattern_app(pat, induced=not args.non_induced)
@@ -153,9 +183,12 @@ def main(argv=None):
             print(f"        pattern {code:#010x}: support {sup}")
     elif r.p_map is not None:
         print(f"[mine] {app.name} pattern map in {dt:.3f}s:")
-        from repro.core.pattern import MOTIF_NAMES
-        names = MOTIF_NAMES.get(app.max_size,
-                                [str(i) for i in range(len(r.p_map))])
+        if set_names is not None:
+            names = set_names
+        else:
+            from repro.core.pattern import MOTIF_NAMES
+            names = MOTIF_NAMES.get(app.max_size,
+                                    [str(i) for i in range(len(r.p_map))])
         for name, cnt in zip(names, r.p_map):
             print(f"        {name}: {int(cnt)}")
     else:

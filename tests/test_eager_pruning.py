@@ -105,15 +105,17 @@ def _level1_inputs(g, app, backend):
     n = int(src.shape[0])
     levels = init_level0_vertex(src, dst, n)
     emb = materialize(levels)
-    state = jnp.zeros(emb.shape[:1], jnp.int32)
+    state = (app.init_state(m.ctx, emb, jnp.int32(n))
+             if app.init_state is not None
+             else jnp.zeros(emb.shape[:1], jnp.int32))
     return m, emb, jnp.int32(n), state
 
 
 def _composed_trio(ctx, app, emb, n, state, cand_cap, out_cap):
     """The pre-fusion pipeline: materialize all candidates, then filter,
     then compact — composed from the reference ops."""
-    row, u, add, total = _vertex_candidates(ctx, app, emb, n, state,
-                                            cand_cap)
+    row, u, _, add, total = _vertex_candidates(ctx, app, emb, n, state,
+                                               cand_cap)
     level, new_emb = finish_extend_vertex(emb, row, u, add, out_cap,
                                           fuse_filter=False)
     return level, new_emb, total
@@ -173,7 +175,12 @@ def test_to_add_kernel_only_app_mines_consistently(er_graph):
 
 def test_kernel_predicate_resolution():
     assert resolve_kernel_predicate(make_cf_app(4)) is not None
-    assert resolve_kernel_predicate(make_mc_app(3)) is not None  # default
+    # hook-less apps get the default canonical test as a plain callable
+    assert resolve_kernel_predicate(make_mc_app(3, mode="memo")) is not None
+    # the multi-pattern trie emits per-level predicates: level required
+    assert resolve_kernel_predicate(make_mc_app(3), 2) is not None
+    with pytest.raises(ValueError, match="per-level"):
+        resolve_kernel_predicate(make_mc_app(3))
     import dataclasses
     dag_no_hooks = dataclasses.replace(make_cf_app(3), to_add=None,
                                        to_add_bits=None, to_add_kernel=None)

@@ -163,18 +163,27 @@ def test_extend_pruned_bitwise_parity(aname, make_app, seed):
         src, dst = m.init_edges()
         n = int(src.shape[0])
         emb = materialize(init_level0_vertex(src, dst, n))
-        state = jnp.zeros(emb.shape[:1], jnp.int32)
+        state = (app.init_state(m.ctx, emb, jnp.int32(n))
+                 if app.init_state is not None
+                 else jnp.zeros(emb.shape[:1], jnp.int32))
         level, new_emb, n_cand = m.backend.extend_pruned(
             m.ctx, app, emb, jnp.int32(n), state, 1024, 512)
+        st = (None if level.state is None else np.asarray(level.state))
         results.append((np.asarray(level.vid), np.asarray(level.idx),
-                        int(level.n), np.asarray(new_emb), int(n_cand)))
-    (vid_r, idx_r, n_r, emb_r, c_r), (vid_p, idx_p, n_p, emb_p, c_p) = \
-        results
+                        int(level.n), np.asarray(new_emb), int(n_cand),
+                        st))
+    (vid_r, idx_r, n_r, emb_r, c_r, st_r), \
+        (vid_p, idx_p, n_p, emb_p, c_p, st_p) = results
     assert (n_r, c_r) == (n_p, c_p)
     np.testing.assert_array_equal(vid_r, vid_p)
     np.testing.assert_array_equal(idx_r, idx_p)
     live = vid_r >= 0
     np.testing.assert_array_equal(emb_r[live], emb_p[live])
+    # the compacted state column (update_state_kernel apps) is part of
+    # the bitwise contract too
+    assert (st_r is None) == (st_p is None)
+    if st_r is not None:
+        np.testing.assert_array_equal(st_r, st_p)
 
 
 def test_pruned_kernel_matches_oracle():
@@ -218,6 +227,52 @@ def test_pruned_kernel_matches_oracle():
                 interpret=True, block_c=128, **kw)
             for r, o in zip(ref, got):
                 np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+def test_pruned_kernel_state_output_matches_oracle():
+    """With a state_upd hook the kernel grows a compacted state output
+    (the multi-pattern branch bitmap path); without one the output —
+    and its gather/write — must not exist at all (3-tuple contract)."""
+    import jax.numpy as jnp
+    from repro.core.api import is_auto_canonical_kernel
+    from repro.graph.csr import pack_adjacency
+    from repro.kernels.extend_fused import (fused_extend_pruned,
+                                            fused_extend_pruned_ref)
+
+    g = G.erdos_renyi(40, 0.25, seed=6)
+    rng = np.random.default_rng(2)
+    emb = jnp.asarray(rng.integers(0, 40, size=(50, 3)), jnp.int32)
+    offsets, starts, emb_flat, vlo, vhi, n_steps = _kernel_inputs(g, emb)
+    state = jnp.asarray(rng.integers(0, 8, size=(50,)), jnp.int32)
+    pg = pack_adjacency(g)
+
+    def upd(emb_cols, u, src_slot, st, conn):
+        return (st * 2) | conn[0].astype(jnp.int32)
+
+    args = (g.col_idx, offsets, starts, emb_flat, vlo, vhi, state)
+    kw = dict(k=3, cand_cap=int(offsets[-1]) + 5, out_cap=128,
+              n_steps=n_steps)
+    ref = fused_extend_pruned_ref(*args, pred=is_auto_canonical_kernel,
+                                  state_upd=upd, **kw)
+    got = fused_extend_pruned(
+        *args, pg.words.reshape(-1), jnp.zeros((1,), jnp.int32),
+        n_vertices=g.n_vertices, n_words=pg.n_words, n_rows=pg.n_packed,
+        pred=is_auto_canonical_kernel, state_upd=upd, conn_mode="bitmap",
+        interpret=True, block_c=128, **kw)
+    assert len(ref) == len(got) == 4
+    for r, o in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+    # stateless specialization: the original 3-tuple, no state buffer
+    ref3 = fused_extend_pruned_ref(*args, pred=is_auto_canonical_kernel,
+                                   **kw)
+    got3 = fused_extend_pruned(
+        *args, pg.words.reshape(-1), jnp.zeros((1,), jnp.int32),
+        n_vertices=g.n_vertices, n_words=pg.n_words, n_rows=pg.n_packed,
+        pred=is_auto_canonical_kernel, conn_mode="bitmap",
+        interpret=True, block_c=128, **kw)
+    assert len(ref3) == len(got3) == 3
+    for r, o in zip(ref3, got3):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
 
 
 # -- fused kernel vs jnp oracle ----------------------------------------------

@@ -147,6 +147,54 @@ def test_plan_cache_via_object(tmp_path, er_graph):
     assert ex2.plan.source == "cache"
 
 
+def test_plan_cache_min_support_isolation(tmp_path):
+    """Regression: a cached FSM plan from a different min_support must
+    never be replayed — its filter_caps were sized for a different
+    support filter and would silently truncate survivors.  min_support is
+    folded into the plan signature, so the second run must re-plan."""
+    import os
+    from repro.core import make_fsm_app
+
+    g = G.erdos_renyi(14, 0.3, seed=5, labels=3)
+    cache = str(tmp_path)
+    m1 = Miner(g, make_fsm_app(3, min_support=1, max_patterns=64))
+    r1 = m1.run(plan_cache=cache)
+    (ex1,) = m1._executors.values()
+    m2 = Miner(g, make_fsm_app(3, min_support=4, max_patterns=64))
+    r2 = m2.run(plan_cache=cache)
+    (ex2,) = m2._executors.values()
+    assert ex2.signature != ex1.signature
+    assert ex2.plan.source == "inspect"          # no stale-cap replay
+    # looser support filter keeps more embeddings -> bigger filter caps
+    assert all(a >= b for a, b in zip(ex1.plan.filter_caps,
+                                      ex2.plan.filter_caps))
+    assert len([f for f in os.listdir(cache) if f.endswith(".json")]) == 2
+    # correctness of both censuses against each other: minsup-4 frequent
+    # patterns are exactly the minsup-1 patterns with support >= 4
+    sup1 = np.asarray(r1.supports)[np.asarray(r1.supports) >= 4]
+    sup2 = np.asarray(r2.supports)[np.asarray(r2.supports) >= 4]
+    assert sorted(sup1.tolist()) == sorted(sup2.tolist())
+
+
+def test_plan_cache_drops_signature_mismatched_entry(tmp_path, er_graph):
+    """A plan file whose recorded signature disagrees with its filename
+    (renamed/copied entry) must be ignored and deleted, not replayed."""
+    import os
+    import shutil
+
+    cache = PlanCache(str(tmp_path))
+    m = Miner(er_graph, make_tc_app())
+    m.run(plan_cache=cache)
+    (ex,) = m._executors.values()
+    good = os.path.join(str(tmp_path), f"{ex.signature}.json")
+    assert os.path.exists(good)
+    rogue = os.path.join(str(tmp_path), "deadbeefdeadbeefdead.json")
+    shutil.copy(good, rogue)
+    assert cache.get("deadbeefdeadbeefdead") is None
+    assert not os.path.exists(rogue)             # dropped, not replayed
+    assert cache.get(ex.signature) is not None   # honest entry untouched
+
+
 # -- blocked checkpointing (satellite fix) ------------------------------------
 
 def test_blocked_run_checkpoints_every_block(er_graph):
