@@ -32,8 +32,8 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 
 from repro.core.api import GraphCtx, MiningApp
-from repro.core.patterns import (LevelPlan, MatchingPlan, Pattern,
-                                 PatternSetPlan, compile_pattern,
+from repro.core.patterns import (GraphStats, LevelPlan, MatchingPlan,
+                                 Pattern, PatternSetPlan, compile_pattern,
                                  compile_pattern_set)
 
 __all__ = ["pattern_app", "pattern_set_app",
@@ -115,7 +115,8 @@ def _make_labeled_to_add(plan: MatchingPlan):
 
 
 def pattern_app(pattern: Pattern, induced: bool = True,
-                backend: Optional[str] = None) -> MiningApp:
+                backend: Optional[str] = None,
+                stats: Optional[GraphStats] = None) -> MiningApp:
     """Compile ``pattern`` and wrap the plan as a generic MiningApp.
 
     ``induced=True`` counts vertex-induced occurrences (motif-census
@@ -125,8 +126,10 @@ def pattern_app(pattern: Pattern, induced: bool = True,
     the compiled symmetry-breaking constraints replace both DAG
     orientation and the runtime canonical test.  The result is
     ``MineResult.count``; there is no reduce step and no pattern map.
+    ``stats`` (:func:`repro.core.patterns.graph_stats` of the target
+    graph) turns on input-aware matching-order selection.
     """
-    plan = compile_pattern(pattern, induced=induced)
+    plan = compile_pattern(pattern, induced=induced, stats=stats)
     p = plan.pattern
     common = dict(
         name=f"psm[{pattern.name}]", kind="vertex", max_size=p.k,
@@ -243,7 +246,8 @@ def _make_set_histogram(plan: PatternSetPlan, dedup_slot: tuple[int, ...]):
 
 def pattern_set_app(patterns: Sequence[Pattern], induced: bool = True,
                     backend: Optional[str] = None,
-                    name: Optional[str] = None) -> MiningApp:
+                    name: Optional[str] = None,
+                    stats: Optional[GraphStats] = None) -> MiningApp:
     """Compile a whole pattern set into ONE mining app (shared trie).
 
     All patterns are counted in a single fused traversal: per level every
@@ -262,7 +266,7 @@ def pattern_set_app(patterns: Sequence[Pattern], induced: bool = True,
     ``count == dedup'd p_map sum``; non-induced embeddings may match
     several leaves and ``count`` reports matched embeddings.
     """
-    plan = compile_pattern_set(patterns, induced=induced)
+    plan = compile_pattern_set(patterns, induced=induced, stats=stats)
     kernels = tuple(make_set_branch_bits(lvl) for lvl in plan.levels)
     to_add = tuple((lambda bits: lambda *a: bits(*a) != 0)(b)
                    for b in kernels)

@@ -56,8 +56,9 @@ from repro.core.embedding_list import (EmbeddingLevel, init_level0_edge,
                                        materialize_edges, total_bytes)
 from repro.core.phases import BackendSpec, get_backend
 from repro.core.plan import (HostCapPolicy, MiningExecutor, MiningPlan,
-                             PlanCache, PlanCapPolicy, bucket_pow2)
-from repro.graph.csr import CSRGraph
+                             PlanCache, PlanCapPolicy, bucket_pow2,
+                             estimate_plan, transfer_caps)
+from repro.graph.csr import CSRGraph, degree_profile
 from repro.graph.dag import orient_dag
 
 _bucket = bucket_pow2          # back-compat alias
@@ -207,8 +208,12 @@ class _VertexPipeline:
         # memo state follows the tree; apps with update_state_kernel get
         # the state column the extend op compacted itself (path-dependent
         # state — e.g. the multi-pattern branch bitmap)
-        self.state = (new_level.state if new_level.state is not None
-                      else self.state[new_level.idx])
+        if new_level.state is not None:
+            self.state = new_level.state
+        elif self.state.shape[0] == 0:       # empty level-0 worklist
+            self.state = jnp.zeros(new_level.idx.shape, jnp.int32)
+        else:
+            self.state = self.state[new_level.idx]
         return n_cand, new_level.n
 
     def reduce_filter(self, level: int, policy):
@@ -408,6 +413,7 @@ class Miner:
                              materialize_fn=materialize_fn, jit=True)
         self._executors: dict[int, MiningExecutor] = {}
         self._digest: Optional[str] = None
+        self._profile: Optional[tuple[tuple[float, ...], int]] = None
 
     # -- identity / executors ----------------------------------------------
 
@@ -421,6 +427,13 @@ class Miner:
                 h.update(np.asarray(self.graph.labels).tobytes())
             self._digest = h.hexdigest()[:16]
         return self._digest
+
+    def profile_sketch(self) -> tuple[tuple[float, ...], int]:
+        """Degree-profile sketch of the (oriented) graph for plan transfer."""
+        if self._profile is None:
+            self._profile = (degree_profile(self.graph),
+                             int(self.graph.n_edges))
+        return self._profile
 
     def executor(self, cap0: int, plan_cache: Optional[PlanCache] = None
                  ) -> MiningExecutor:
@@ -466,21 +479,66 @@ class Miner:
         return self.graph.undirected_edge_list()
 
     def run(self, block_size: Optional[int] = None, collect_stats=False,
-            checkpoint_cb=None, plan_cache: Optional[str | PlanCache] = None
-            ) -> MineResult:
+            checkpoint_cb=None, plan_cache: Optional[str | PlanCache] = None,
+            plan_source: str = "inspect", safety_factor: float = 2.0,
+            sample_size: int = 256, plan_seed: int = 0) -> MineResult:
+        """Mine the graph; ``plan_source`` picks how a cold run plans.
+
+        * ``"inspect"`` — the paper's inspection-execution: exact per-level
+          host inspection (also the planning pass).  Default.
+        * ``"estimate"`` — sampled estimator: a host-side pass over
+          ``sample_size`` sampled level-0 embeddings estimates every
+          capacity (times ``safety_factor``); the first real run goes
+          straight through the compiled executor, and the overflow
+          backstop guarantees exact results.
+        * ``"cache"`` — like ``"estimate"``, but first try transferring
+          the cached plan with the nearest degree profile (plan transfer
+          across graphs); fall back to the estimator.
+
+        An exact plan-cache hit (same graph/app/backend/cap0 signature)
+        always wins regardless of mode; ``collect_stats`` / per-level
+        checkpointing force the host inspection path.
+        """
+        if plan_source not in ("inspect", "estimate", "cache"):
+            raise ValueError(f"plan_source {plan_source!r} not in "
+                             "('inspect', 'estimate', 'cache')")
         cache = (PlanCache(plan_cache) if isinstance(plan_cache, str)
                  else plan_cache)
+        seeding = (None if plan_source == "inspect" or collect_stats
+                   or checkpoint_cb is not None
+                   else (plan_source, safety_factor, sample_size,
+                         plan_seed, cache))
         if self.app.kind == "edge":
             # paper §5.2: blocking disabled for FSM (global support sync);
             # the bounded/sharded FSM paths live in bounded_mine_edge.
-            return self._run_edge(collect_stats, checkpoint_cb, cache)
+            return self._run_edge(collect_stats, checkpoint_cb, cache,
+                                  seeding)
         src, dst = self.init_edges()
         m = int(src.shape[0])
         if not block_size or block_size >= m:
             return self._run_vertex_full(src, dst, m, collect_stats,
-                                         checkpoint_cb, cache)
+                                         checkpoint_cb, cache, seeding)
         return self._run_vertex_blocked(src, dst, m, block_size,
-                                        collect_stats, checkpoint_cb, cache)
+                                        collect_stats, checkpoint_cb, cache,
+                                        seeding)
+
+    def _seed_plan(self, ex: MiningExecutor, seeding) -> None:
+        """Give a cold executor an estimated or transferred plan."""
+        if seeding is None or ex.has_plan:
+            return
+        plan_source, safety_factor, sample_size, plan_seed, cache = seeding
+        if plan_source == "cache" and cache is not None:
+            profile, n_edges = self.profile_sketch()
+            near = cache.nearest(ex.app_key, self.app.kind, profile,
+                                 n_edges, exclude=(ex.signature,))
+            if near is not None:
+                caps, fcaps = transfer_caps(near, ex.cap0, safety_factor)
+                ex.adopt_plan(caps, fcaps, source="transfer")
+                return
+        caps, fcaps = estimate_plan(self, ex.cap0, sample_size=sample_size,
+                                    safety_factor=safety_factor,
+                                    seed=plan_seed)
+        ex.adopt_plan(caps, fcaps, source="estimated")
 
     # -- vertex-induced paths ----------------------------------------------
 
@@ -493,9 +551,10 @@ class Miner:
         return pipe.result(stats)
 
     def _run_vertex_full(self, src, dst, m, collect_stats, checkpoint_cb,
-                         cache) -> MineResult:
+                         cache, seeding=None) -> MineResult:
         cap0 = bucket_pow2(m)
         ex = self.executor(cap0, cache)
+        self._seed_plan(ex, seeding)
         if collect_stats or checkpoint_cb is not None or not ex.has_plan:
             return self._host_run(_VertexPipeline(self.ops, src, dst, m),
                                   ex, collect_stats, checkpoint_cb)
@@ -506,13 +565,16 @@ class Miner:
                           p_map=p_map if self._p_map_meaningful() else None)
 
     def _run_vertex_blocked(self, src, dst, m, block_size, collect_stats,
-                            checkpoint_cb, cache) -> MineResult:
+                            checkpoint_cb, cache, seeding=None
+                            ) -> MineResult:
         # Edge blocking (§5.2): process level-0 chunks sequentially,
         # bounding peak memory; pattern maps / counts accumulate.  One
         # executor compile serves every block; only the first block of a
-        # cold miner runs the host inspection pass (doubling as planner).
+        # cold miner runs the host inspection pass (doubling as planner)
+        # — unless an estimated/transferred plan lets it skip even that.
         cap0 = bucket_pow2(block_size)
         ex = self.executor(cap0, cache)
+        self._seed_plan(ex, seeding)
         total = 0
         p_map = None
         stats: list[LevelStats] = []
@@ -540,10 +602,12 @@ class Miner:
 
     # -- edge-induced (FSM) path -------------------------------------------
 
-    def _run_edge(self, collect_stats, checkpoint_cb, cache) -> MineResult:
+    def _run_edge(self, collect_stats, checkpoint_cb, cache,
+                  seeding=None) -> MineResult:
         m = self.ctx.n_uedges
         cap0 = bucket_pow2(m)
         ex = self.executor(cap0, cache)
+        self._seed_plan(ex, seeding)
         if collect_stats or checkpoint_cb is not None or not ex.has_plan:
             return self._host_run(_EdgePipeline(self.ops), ex,
                                   collect_stats, checkpoint_cb)

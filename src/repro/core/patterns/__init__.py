@@ -5,8 +5,9 @@ from repro.core.patterns.spec import (MAX_PATTERN_SIZE, PATTERN_LIBRARY,
                                       motif_patterns, n_connected_patterns,
                                       named_pattern_set, pattern_names,
                                       pattern_set_names)
-from repro.core.patterns.compile import (MAX_SET_BRANCHES, LevelPlan,
-                                         MatchingPlan, PatternSetPlan,
-                                         SetBranch, compile_pattern,
-                                         compile_pattern_set,
+from repro.core.patterns.compile import (MAX_SET_BRANCHES, GraphStats,
+                                         LevelPlan, MatchingPlan,
+                                         PatternSetPlan, SetBranch,
+                                         compile_pattern,
+                                         compile_pattern_set, graph_stats,
                                          matching_order, symmetry_break)

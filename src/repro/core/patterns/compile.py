@@ -42,8 +42,9 @@ import numpy as np
 from repro.core.patterns.spec import Pattern
 
 __all__ = ["LevelPlan", "MatchingPlan", "SetBranch", "PatternSetPlan",
-           "compile_pattern", "compile_pattern_set", "matching_order",
-           "symmetry_break", "MAX_SET_BRANCHES"]
+           "GraphStats", "graph_stats", "compile_pattern",
+           "compile_pattern_set", "matching_order", "symmetry_break",
+           "MAX_SET_BRANCHES"]
 
 # The multi-pattern executor threads a per-embedding branch bitmap in the
 # i32 memo-state column, so a trie level holds at most 32 branches (one
@@ -97,27 +98,142 @@ class MatchingPlan:
 
     @property
     def plan_key(self) -> str:
-        """Plan-cache identity: isomorphism hash + matching semantics."""
-        return f"{self.pattern.hash_hex()}:{'i' if self.induced else 'h'}"
+        """Plan-cache identity: isomorphism hash + matching semantics
+        + a digest of the per-level rules.  The digest matters because
+        the same pattern admits several matching orders (the cost model
+        picks by graph statistics): capacity plans recorded for one
+        order must not replay for another whose per-level frontiers
+        differ."""
+        levels_sig = hashlib.sha1(
+            repr(tuple((lp.required, lp.smaller)
+                       for lp in self.levels)).encode()).hexdigest()[:8]
+        return (f"{self.pattern.hash_hex()}:"
+                f"{'i' if self.induced else 'h'}:{levels_sig}")
 
 
-def matching_order(pattern: Pattern) -> tuple[int, ...]:
-    """Connectivity-first order over the pattern's original vertex ids."""
+# ---------------------------------------------------------------------------
+# Degree/frequency-aware order cost model
+#
+# Pangolin expects the user to hand-derive matching orders; the PR-5
+# compiler picks them connectivity-first with degree tie-breaks —
+# structure only, blind to the input graph.  G2Miner's "input-aware"
+# axis: the best order depends on the graph's degree profile (a sparse
+# graph rewards early symmetry breaking, a dense one rewards early
+# connectivity constraints).  GraphStats summarizes the input in four
+# scalars + label frequencies, and _order_cost turns a candidate order's
+# per-level (required, smaller) keys into an expected frontier-size
+# trajectory under an independent-edge model: candidates per frontier
+# row scale with the degree-biased mean degree (the extension anchor is
+# reached by an edge, so it is degree-biased), each extra required
+# adjacency survives with probability avg_degree/n, each order
+# constraint halves survivors, and a label equality scales by that
+# label's frequency.  The absolute numbers are crude; only the ranking
+# between orders of the SAME pattern matters, and there the dominant
+# factors (how early constraints bind) are exactly what the model sees.
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    """Cheap input-graph summary driving cost-model order selection.
+
+    ``biased_degree`` is E[d^2]/E[d] — the expected degree of the vertex
+    an edge points at (size-biased), which is what extension fan-out
+    actually follows; ``label_freq[l]`` is the fraction of vertices
+    labeled ``l`` (empty mapping for unlabeled graphs)."""
+
+    n_vertices: int
+    n_edges: int
+    avg_degree: float
+    biased_degree: float
+    label_freq: tuple[tuple[int, float], ...] = ()
+
+    def freq(self, label: int) -> float:
+        return dict(self.label_freq).get(int(label), 1.0)
+
+
+def graph_stats(g) -> GraphStats:
+    """Host-side degree/label statistics of a CSR graph (numpy, O(n))."""
+    deg = np.asarray(g.degrees(), dtype=np.float64) if g.n_vertices \
+        else np.zeros(0)
+    total = float(deg.sum())
+    avg = total / g.n_vertices if g.n_vertices else 0.0
+    biased = float((deg ** 2).sum()) / total if total else 0.0
+    label_freq: tuple[tuple[int, float], ...] = ()
+    if getattr(g, "labels", None) is not None and g.n_vertices:
+        lab = np.asarray(g.labels)
+        vals, counts = np.unique(lab, return_counts=True)
+        label_freq = tuple((int(v), float(c) / g.n_vertices)
+                           for v, c in zip(vals, counts))
+    return GraphStats(n_vertices=int(g.n_vertices),
+                      n_edges=int(g.n_edges), avg_degree=avg,
+                      biased_degree=biased, label_freq=label_freq)
+
+
+def _order_cost(keys, stats: GraphStats,
+                level_labels: Optional[tuple[int, ...]] = None,
+                first_pair_symmetric: bool = True) -> float:
+    """Expected total work (candidates + survivors, all levels) of one
+    candidate matching order, given per-level (required, smaller) keys."""
+    n = max(stats.n_vertices, 1)
+    p_edge = min(stats.avg_degree / n, 1.0)
+    # level-0 frontier: one row per undirected edge when the first pair
+    # is exchangeable (structural src < dst), both orientations otherwise
+    f = stats.n_edges / 2.0 if first_pair_symmetric else float(stats.n_edges)
+    cost = f
+    for i, (required, smaller) in enumerate(keys):
+        cand = f * stats.biased_degree
+        surv = (cand * p_edge ** max(len(required) - 1, 0)
+                * 0.5 ** len(smaller))
+        if level_labels is not None:
+            surv *= stats.freq(level_labels[i])
+        cost += cand + surv
+        f = surv
+    return cost
+
+
+def matching_order(pattern: Pattern,
+                   stats: Optional[GraphStats] = None) -> tuple[int, ...]:
+    """Matching order over the pattern's original vertex ids.
+
+    Without ``stats``: the structural connectivity-first heuristic (start
+    at a max-degree vertex, append the vertex with the most edges into
+    the prefix; ties by degree then lower id).  With ``stats``: every
+    legal order is scored by :func:`_order_cost` under that graph's
+    degree/label statistics and the cheapest wins (ties broken
+    deterministically by the order's rule keys, then the order itself).
+    """
+    if stats is None:
+        adj = pattern.adjacency()
+        deg = adj.sum(axis=1)
+        first = int(max(range(pattern.k), key=lambda v: (deg[v], -v)))
+        order = [first]
+        remaining = set(range(pattern.k)) - {first}
+        while remaining:
+            nxt = max(remaining,
+                      key=lambda v: (int(adj[v, order].sum()),
+                                     int(deg[v]), -v))
+            if not adj[nxt, order].any():
+                # cannot happen for a connected pattern, but fail loudly
+                raise ValueError(f"pattern {pattern.name!r}: vertex {nxt} "
+                                 "has no edge into the ordered prefix")
+            order.append(int(nxt))
+            remaining.discard(nxt)
+        return tuple(order)
+
     adj = pattern.adjacency()
-    deg = adj.sum(axis=1)
-    first = int(max(range(pattern.k), key=lambda v: (deg[v], -v)))
-    order = [first]
-    remaining = set(range(pattern.k)) - {first}
-    while remaining:
-        nxt = max(remaining,
-                  key=lambda v: (int(adj[v, order].sum()), int(deg[v]), -v))
-        if not adj[nxt, order].any():
-            # cannot happen for a connected pattern, but fail loudly
-            raise ValueError(f"pattern {pattern.name!r}: vertex {nxt} has "
-                             "no edge into the ordered prefix")
-        order.append(int(nxt))
-        remaining.discard(nxt)
-    return tuple(order)
+    auts = pattern.automorphisms()
+    best = None
+    for order in _valid_orders(pattern):
+        keys, fp = _order_keys(adj, auts, order)
+        level_labels = None
+        if pattern.labels is not None:
+            level_labels = tuple(int(pattern.labels[order[i]])
+                                 for i in range(2, pattern.k))
+        rank = (_order_cost(keys, stats, level_labels,
+                            first_pair_symmetric=fp), tuple(keys), order)
+        if best is None or rank < best:
+            best = rank
+    return best[2]
 
 
 def symmetry_break(pattern: Pattern) -> tuple[tuple[tuple[int, int], ...],
@@ -152,7 +268,8 @@ def _stabilizer_constraints(k: int, auts: list[tuple[int, ...]]
     return tuple(constraints), len(auts)
 
 
-def compile_pattern(pattern: Pattern, induced: bool = True) -> MatchingPlan:
+def compile_pattern(pattern: Pattern, induced: bool = True,
+                    stats: Optional[GraphStats] = None) -> MatchingPlan:
     """Compile ``pattern`` into a :class:`MatchingPlan`.
 
     ``induced=True`` (default) matches vertex-induced subgraphs — the
@@ -160,10 +277,14 @@ def compile_pattern(pattern: Pattern, induced: bool = True) -> MatchingPlan:
     required earlier positions and to none of the others, so counts line
     up with motif-census semantics.  ``induced=False`` drops the
     forbidden masks and counts subgraph occurrences (every edge of the
-    pattern present, extra edges allowed).
+    pattern present, extra edges allowed).  ``stats``
+    (:func:`graph_stats` of the target graph) switches matching-order
+    selection to the input-aware cost model; counts are identical either
+    way (every legal order counts each match once), only per-level
+    frontier sizes — and therefore capacities and work — change.
     """
     pattern.validate()
-    order = matching_order(pattern)
+    order = matching_order(pattern, stats=stats)
     reordered = pattern.relabel(order)
     adj = reordered.adjacency()
     if not adj[0, 1]:
@@ -243,16 +364,22 @@ class PatternSetPlan:
     leaves: tuple[int, ...]
     n_nodes: int
     dedup_slot: tuple[int, ...] = ()
+    cost_model: bool = False
 
     @property
     def plan_key(self) -> str:
         """Plan-cache identity: the set's isomorphism hashes + semantics.
 
         Order-insensitive (capacity plans depend on the branch union, not
-        on pattern indices), so permuted sets share cached plans."""
+        on pattern indices), so permuted sets share cached plans.  The
+        ``cost_model`` flag separates tries whose order *tie-breaks* were
+        picked by graph statistics from structurally-picked ones — their
+        branch sets (and so per-level frontiers) can differ."""
         ident = (self.k, self.induced,
                  tuple(sorted(p.hash_hex() for p in self.patterns)))
-        return "set:" + hashlib.sha1(repr(ident).encode()).hexdigest()[:16]
+        suffix = ":c" if self.cost_model else ""
+        return ("set:" + hashlib.sha1(repr(ident).encode()).hexdigest()[:16]
+                + suffix)
 
 
 def _valid_orders(pattern: Pattern) -> list[tuple[int, ...]]:
@@ -291,7 +418,9 @@ def _order_keys(adj: np.ndarray, auts: list, order: tuple[int, ...]):
 
 
 def compile_pattern_set(patterns: Sequence[Pattern],
-                        induced: bool = True) -> PatternSetPlan:
+                        induced: bool = True,
+                        stats: Optional[GraphStats] = None
+                        ) -> PatternSetPlan:
     """Compile a set of same-size unlabeled patterns into one shared trie.
 
     Per pattern, every legal matching order is considered (connected
@@ -300,7 +429,11 @@ def compile_pattern_set(patterns: Sequence[Pattern],
     individual matching orders where legal".  Each order's
     symmetry-breaking constraints come from the stabilizer chain of its
     *conjugated* automorphism group, so any choice counts each match
-    exactly once; sharing therefore never trades correctness.
+    exactly once; sharing therefore never trades correctness.  With
+    ``stats``, ties between equally-sharing orders break by the
+    input-aware cost model (:func:`_order_cost`) instead of
+    lexicographically — sharing stays primary (the trie's whole point),
+    cost picks among the equally-shared.
 
     The level-0 worklist stays undirected (``src < dst``) whenever every
     pattern admits an order whose first two positions are automorphism-
@@ -387,7 +520,14 @@ def compile_pattern_set(patterns: Sequence[Pattern],
     leaves_by_node: dict[int, int] = {}
     for pid, cands in enumerate(per_pattern):
         scored = [full_keys(keys, fp) for keys, fp in cands]
-        best = min(scored, key=lambda fk: (-prefix_len(fk), fk))
+        if stats is None:
+            best = min(scored, key=lambda fk: (-prefix_len(fk), fk))
+        else:
+            best = min(scored, key=lambda fk: (
+                -prefix_len(fk),
+                _order_cost([(r, s) for r, s, _pc in fk], stats,
+                            first_pair_symmetric=not directed),
+                fk))
         parent = 0
         for i, key in enumerate(best):
             node = nodes[i].get((parent, key))
@@ -419,4 +559,4 @@ def compile_pattern_set(patterns: Sequence[Pattern],
         patterns=tuple(deduped), k=k, induced=induced, directed=directed,
         levels=tuple(tuple(b) for b in branches), leaves=leaves,
         n_nodes=sum(len(b) for b in branches),
-        dedup_slot=tuple(dedup_slot))
+        dedup_slot=tuple(dedup_slot), cost_model=stats is not None)

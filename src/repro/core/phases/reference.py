@@ -141,6 +141,19 @@ def apply_state_kernel(ctx: GraphCtx, upd, emb: jnp.ndarray,
     return upd(emb_cols, u, src_slot, st, conn).astype(jnp.int32)
 
 
+def _pad_empty_frontier(emb: jnp.ndarray, state: Optional[jnp.ndarray]):
+    """Zero-row frontier (zero-edge graph): pad to one dead row.
+
+    Gathers from zero-length arrays are invalid in XLA; ``n_valid`` is 0
+    for such frontiers, so every downstream live mask drops the pad row.
+    """
+    if emb.shape[0]:
+        return emb, state
+    emb = jnp.full((1, emb.shape[1]), -1, emb.dtype)
+    state = None if state is None else jnp.zeros((1,), state.dtype)
+    return emb, state
+
+
 def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
                        n_valid: jnp.ndarray, state: Optional[jnp.ndarray],
                        cand_cap: int):
@@ -150,6 +163,7 @@ def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
              src_slot i32[cand_cap], add_mask bool[cand_cap],
              n_candidates i32[]).
     """
+    emb, state = _pad_empty_frontier(emb, state)
     cap, k = emb.shape
     deg = vertex_ext_degrees(ctx, app, emb, n_valid, state)
     slot_parent, rank, total = expand_ragged(deg.reshape(-1), cand_cap)
@@ -159,7 +173,9 @@ def _vertex_candidates(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
     row_c = jnp.clip(row, 0, cap - 1)
     v = emb[row_c, jnp.clip(col, 0, k - 1)]
     ptr = ctx.row_ptr[jnp.clip(v, 0, ctx.n_vertices - 1)] + rank
-    u = ctx.col_idx[jnp.clip(ptr, 0, ctx.n_edges - 1)]
+    # zero-edge graphs: col_idx is empty and a gather from it is invalid
+    col_idx = ctx.col_idx if ctx.n_edges else jnp.zeros(1, ctx.col_idx.dtype)
+    u = col_idx[jnp.clip(ptr, 0, max(ctx.n_edges - 1, 0))]
     u = jnp.where(live, u, -1)
     src_slot = jnp.clip(col, 0, k - 1).astype(jnp.int32)
     pred = resolve_kernel_predicate(app, k)
@@ -679,12 +695,14 @@ class ReferenceBackend(PhaseBackend):
 
     def extend_vertex(self, ctx, app, emb, n_valid, state, cand_cap,
                       out_cap, fuse_filter=True):
+        emb, state = _pad_empty_frontier(emb, state)
         row, u, _, add, _ = self._vertex_candidates(ctx, app, emb, n_valid,
                                                     state, cand_cap)
         return finish_extend_vertex(emb, row, u, add, out_cap, fuse_filter)
 
     def extend_pruned(self, ctx, app, emb, n_valid, state, cand_cap,
                       out_cap, fuse_filter=True):
+        emb, state = _pad_empty_frontier(emb, state)
         row, u, src_slot, add, total = self._vertex_candidates(
             ctx, app, emb, n_valid, state, cand_cap)
         upd = resolve_state_kernel(app, emb.shape[1])

@@ -69,7 +69,7 @@ def bucket_cap(n: int, quantum: int = 128, minimum: int = 128) -> int:
     return -(-n // quantum) * quantum
 
 
-PLAN_SCHEMA = 2
+PLAN_SCHEMA = 3
 
 
 class StalePlanError(ValueError):
@@ -89,6 +89,16 @@ class MiningPlan:
     capacities of the FSM support-filter compactions in invocation order
     (the pre-loop filter first, then one per level).  ``cap0`` is the
     level-0 worklist capacity the plan assumes (the padded block size).
+
+    Plan transfer (schema 3): ``app_key`` identifies the app/backend
+    semantics *without* the graph, and ``profile``/``n_edges`` are the
+    planned graph's degree-profile sketch
+    (:func:`repro.graph.csr.degree_profile`), so :meth:`PlanCache.nearest`
+    can seed a plan for a *new* graph from the cached plan whose profile
+    is closest.  ``source`` records provenance: ``inspect`` (exact host
+    inspection pass), ``estimated`` (sampled estimator), ``transfer``
+    (profile-nearest cached plan, rescaled), ``cache`` (exact cache hit),
+    ``grown`` (overflow backstop), ``manual``.
     """
 
     kind: str                                  # "vertex" | "edge"
@@ -96,7 +106,10 @@ class MiningPlan:
     filter_caps: tuple[int, ...] = ()
     cap0: int = 0
     signature: str = ""
-    source: str = "manual"                     # inspect | cache | grown
+    source: str = "manual"
+    app_key: str = ""
+    profile: tuple[float, ...] = ()
+    n_edges: int = 0
 
     def grown(self, factor: int = 2) -> "MiningPlan":
         """Overflow response: scale every capacity (stays a power of two)."""
@@ -111,7 +124,9 @@ class MiningPlan:
             "schema": PLAN_SCHEMA, "kind": self.kind, "cap0": self.cap0,
             "caps": [list(c) for c in self.caps],
             "filter_caps": list(self.filter_caps),
-            "signature": self.signature, "source": self.source})
+            "signature": self.signature, "source": self.source,
+            "app_key": self.app_key, "profile": list(self.profile),
+            "n_edges": self.n_edges})
 
     @classmethod
     def from_json(cls, text: str) -> "MiningPlan":
@@ -127,17 +142,32 @@ class MiningPlan:
                    caps=tuple((int(c), int(o)) for c, o in d["caps"]),
                    filter_caps=tuple(int(f) for f in d["filter_caps"]),
                    signature=d.get("signature", ""),
-                   source=d.get("source", "cache"))
+                   source=d.get("source", "cache"),
+                   app_key=d.get("app_key", ""),
+                   profile=tuple(float(x) for x in d.get("profile", ())),
+                   n_edges=int(d.get("n_edges", 0)))
+
+
+def plan_app_key(app, backend_name: str, fuse_filter: bool = True) -> str:
+    """App/backend identity *without* the graph — the transfer axis.
+
+    Everything capacity-relevant about the app (including
+    ``min_support`` and the compiled ``plan_key``) but no graph digest
+    and no cap0: plans recorded under the same ``app_key`` on different
+    graphs are capacity schedules for the *same* computation, so their
+    per-level shapes are comparable once rescaled by worklist size."""
+    fields = (app.name, app.kind, app.max_size, app.use_dag,
+              app.needs_reduce, app.needs_filter, app.support_mode,
+              app.max_patterns, app.min_support, app.plan_key,
+              app.directed_worklist, backend_name, bool(fuse_filter))
+    return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
 
 
 def plan_signature(graph_digest: str, app, backend_name: str, cap0: int,
                    fuse_filter: bool = True) -> str:
     """Stable identity of (graph, app knobs, backend, block capacity)."""
-    fields = (graph_digest, app.name, app.kind, app.max_size, app.use_dag,
-              app.needs_reduce, app.needs_filter, app.support_mode,
-              app.max_patterns, app.min_support, app.plan_key,
-              app.directed_worklist, backend_name, int(cap0),
-              bool(fuse_filter))
+    fields = (graph_digest,
+              plan_app_key(app, backend_name, fuse_filter), int(cap0))
     return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
 
 
@@ -192,6 +222,43 @@ class PlanCache:
             pass
         return dataclasses.replace(plan, source="cache")
 
+    def nearest(self, app_key: str, kind: str, profile: tuple[float, ...],
+                n_edges: int, exclude: tuple[str, ...] = ()
+                ) -> Optional[MiningPlan]:
+        """The cached plan for ``app_key`` with the closest degree profile.
+
+        Plan transfer: an exact signature miss (new graph) scans the
+        cache for plans of the *same app/backend semantics* recorded on
+        other graphs and returns the one whose degree-profile sketch is
+        nearest (log-space quantile distance + edge-count term).  The
+        caller rescales its capacities (:func:`transfer_caps`) — the
+        match seeds the plan, the overflow backstop guarantees exactness.
+        Stale/corrupt entries are skipped (not deleted: only an exact
+        ``get`` proves an entry unusable for its own signature).
+        """
+        try:
+            names = [n for n in os.listdir(self.directory)
+                     if n.endswith(".json")]
+        except OSError:
+            return None
+        best, best_d = None, None
+        for name in sorted(names):
+            try:
+                with open(os.path.join(self.directory, name)) as f:
+                    plan = MiningPlan.from_json(f.read())
+            except (OSError, StalePlanError, ValueError, KeyError):
+                continue
+            if (plan.app_key != app_key or plan.kind != kind
+                    or plan.signature in exclude or not plan.caps):
+                continue
+            d = profile_distance(profile, n_edges, plan.profile,
+                                 plan.n_edges)
+            if d is None:
+                continue
+            if best_d is None or d < best_d:
+                best, best_d = plan, d
+        return best
+
     def put(self, plan: MiningPlan) -> str:
         os.makedirs(self.directory, exist_ok=True)
         path = self._path(plan.signature)
@@ -223,6 +290,41 @@ class PlanCache:
                 os.remove(os.path.join(self.directory, name))
             except OSError:
                 pass
+
+
+def profile_distance(profile_a: tuple[float, ...], m_a: int,
+                     profile_b: tuple[float, ...], m_b: int
+                     ) -> Optional[float]:
+    """Log-space distance between two degree-profile sketches.
+
+    Quantiles compare in ``log1p`` space (a 10 -> 20 median shift matters
+    as much at scale 10 as 100 -> 200 does at scale 100) plus a log
+    edge-count term, so "similar shape, similar size" wins.  ``None``
+    when the sketches are incomparable (different quantile grids)."""
+    if not profile_a or len(profile_a) != len(profile_b):
+        return None
+    a = np.log1p(np.asarray(profile_a, np.float64))
+    b = np.log1p(np.asarray(profile_b, np.float64))
+    size_term = np.log((m_a + 1.0) / (m_b + 1.0)) ** 2
+    return float(np.mean((a - b) ** 2) + size_term)
+
+
+def transfer_caps(plan: MiningPlan, cap0: int, safety_factor: float = 2.0
+                  ) -> tuple[tuple[tuple[int, int], ...],
+                             tuple[int, ...]]:
+    """Rescale a transferred plan's capacities to a new worklist size.
+
+    Per-level counts scale roughly linearly with the level-0 worklist
+    for graphs of similar degree profile, so every capacity is scaled by
+    ``cap0_new / cap0_old`` (times the safety factor) and re-bucketed.
+    The result is a *seed*, not a guarantee — overflow grows it."""
+    ratio = (int(cap0) / max(plan.cap0, 1)) * float(safety_factor)
+    caps = tuple((bucket_pow2(int(np.ceil(c * ratio))),
+                  bucket_cap(int(np.ceil(o * ratio))))
+                 for c, o in plan.caps)
+    filter_caps = tuple(bucket_cap(int(np.ceil(f * ratio)))
+                        for f in plan.filter_caps)
+    return caps, filter_caps
 
 
 # ---------------------------------------------------------------------------
@@ -319,6 +421,179 @@ class PlanCapPolicy:
 
 
 # ---------------------------------------------------------------------------
+# Sampled capacity estimation — zero-cold-start planning
+#
+# The inspection pass is exact but pays per-level jit compiles and host
+# syncs over the FULL worklist before the executor ever runs.  The
+# estimator instead mines a small *sample* of the level-0 worklist in ONE
+# jitted probe with fixed sample-scale capacities: the probe runs the
+# same pipeline adapters and app hooks (to_extend / to_add[_bits|_kernel]
+# / reduce / filter, reference backend) as the real run and reports the
+# true per-level candidate/survivor/keep counts the fused ops already
+# compute.  The host then scales those counts by the sampling fraction
+# (correcting for any probe-capacity truncation, which the true counts
+# make observable) times a safety factor and buckets them — an estimated
+# plan after one small compile instead of four per level.  Semantics are
+# exact by construction; only the *scale* is statistical, and the
+# executor's grow-and-retry backstop turns an under-estimate into one
+# extra compile instead of a wrong answer.
+
+# Fixed probe capacities: every level of the sampled run gets the same
+# static buffers, so the probe is one XLA program regardless of how the
+# sample frontier grows.  Overflowing them only *truncates the sample*
+# (the reported true counts let the host correct the scale); it never
+# affects the real run.
+SAMPLE_CAND_CAP = 1 << 15
+SAMPLE_OUT_CAP = 4096
+
+
+class _ProbePolicy(PlanCapPolicy):
+    """Replay fixed probe capacities; collect the true traced counts."""
+
+    def __init__(self, plan: MiningPlan):
+        super().__init__(plan)
+        self.n_cand: list = []
+        self.n_surv: list = []
+        self.n_keep: list = []
+
+    def note_extend(self, n_cand, n_surv, cand_cap: int,
+                    out_cap: int) -> None:
+        self.n_cand.append(n_cand)
+        self.n_surv.append(n_surv)
+        super().note_extend(n_cand, n_surv, cand_cap, out_cap)
+
+    def filter_cap(self, n_keep) -> int:
+        self.n_keep.append(n_keep)
+        return super().filter_cap(n_keep)
+
+
+def _minimal_plan(app) -> tuple[tuple[tuple[int, int], ...],
+                                tuple[int, ...]]:
+    """Floor-capacity plan for degenerate inputs (empty worklist)."""
+    n_levels = max(app.max_size - 2, 0)
+    caps = ((bucket_pow2(0), bucket_cap(0)),) * n_levels
+    filter_caps = ((bucket_cap(0),) * (n_levels + 1)
+                   if app.kind == "edge" and app.needs_filter else ())
+    return caps, filter_caps
+
+
+def estimate_plan(miner, cap0: int, sample_size: int = 256,
+                  safety_factor: float = 2.0, seed: int = 0
+                  ) -> tuple[tuple[tuple[int, int], ...],
+                             tuple[int, ...]]:
+    """Estimate a capacity plan from a sampled worklist (no inspection).
+
+    Draws ``sample_size`` level-0 embeddings, probes them through the
+    app's real pipeline (one jit, fixed sample-scale capacities,
+    reference backend) and returns ``(caps, filter_caps)`` — the probe's
+    true per-level counts scaled by the sampling fraction times
+    ``safety_factor``, bucketed like the exact planner's.
+
+    FSM support filtering runs on the sample with ``min_support``
+    rescaled by the sampling fraction — sample MNI supports are roughly
+    proportional to the fraction of the worklist seen, so the rescaled
+    threshold prunes the sample frontier about as hard as the real
+    threshold prunes the real one.
+
+    Exactness is NOT this function's contract: the estimate seeds a
+    :class:`MiningPlan` (``source="estimated"``) and the executor's
+    overflow-grow-and-retry loop guarantees correct results even when
+    every level is under-estimated.
+    """
+    from repro.core import engine as E
+    from repro.core.phases import get_backend
+    from repro.graph.sampler import sample_worklist
+
+    app, ctx = miner.app, miner.ctx
+    rng = np.random.default_rng(seed)
+    if app.kind == "edge":
+        m = int(ctx.n_uedges)
+    else:
+        src, dst = miner.init_edges()
+        m = int(src.shape[0])
+    if m == 0 or app.max_size <= 2:
+        return _minimal_plan(app)
+
+    # sorted sample: FSM's canonical edge-growth test compares edge uids,
+    # and a sorted subset preserves every uid comparison the full
+    # worklist would make
+    idx = sample_worklist(m, sample_size, rng, sort=(app.kind == "edge"))
+    n_sample = len(idx)
+    samp_app = app
+    if app.kind == "edge" and app.needs_filter and n_sample < m:
+        samp_app = dataclasses.replace(
+            app, min_support=max(1, int(round(app.min_support
+                                              * n_sample / m))))
+    n_levels = app.max_size - 2
+    needs_filter = app.kind == "edge" and app.needs_filter
+    probe_plan = MiningPlan(
+        kind=app.kind,
+        caps=((SAMPLE_CAND_CAP, SAMPLE_OUT_CAP),) * n_levels,
+        filter_caps=((SAMPLE_OUT_CAP,) * (n_levels + 1)
+                     if needs_filter else ()))
+    ops = E._PhaseOps(ctx, samp_app, get_backend("reference"),
+                      fuse_filter=miner.fuse_filter,
+                      materialize_fn=miner._materialize)
+
+    if app.kind == "edge":
+        def probe(s, d, e, n):
+            pipe = E._EdgePipeline(ops, src=s, dst=d, eid=e, n=n)
+            policy = _ProbePolicy(probe_plan)
+            E.run_level_loop(pipe, policy)
+            return (tuple(policy.n_cand), tuple(policy.n_surv),
+                    tuple(policy.n_keep))
+        args = (ctx.usrc[jnp.asarray(idx)], ctx.udst[jnp.asarray(idx)],
+                jnp.asarray(idx, jnp.int32), jnp.int32(n_sample))
+    else:
+        def probe(s, d, n):
+            pipe = E._VertexPipeline(ops, s, d, n)
+            policy = _ProbePolicy(probe_plan)
+            E.run_level_loop(pipe, policy)
+            return (tuple(policy.n_cand), tuple(policy.n_surv),
+                    tuple(policy.n_keep))
+        args = (jnp.asarray(np.asarray(src)[idx]),
+                jnp.asarray(np.asarray(dst)[idx]), jnp.int32(n_sample))
+    n_cand, n_surv, n_keep = jax.jit(probe)(*args)
+    n_cand = [int(x) for x in n_cand]
+    n_surv = [int(x) for x in n_surv]
+    n_keep = [int(x) for x in n_keep]
+
+    # Host-side scale arithmetic.  scale = (estimated true frontier) /
+    # (sample frontier); probe truncation shrinks the sample frontier but
+    # the true counts are reported pre-truncation, so every truncation
+    # folds into the scale instead of biasing the estimate downward.
+    caps: list[tuple[int, int]] = []
+    fcaps: list[int] = []
+    scale = min(m, int(cap0)) / n_sample
+
+    def est(n: float) -> int:
+        return int(np.ceil(n * scale * safety_factor))
+
+    ki = 0
+    if needs_filter:                    # pre-loop filter ("level 1")
+        k = n_keep[ki]
+        ki += 1
+        fcaps.append(bucket_cap(est(k)))
+        kept = min(k, SAMPLE_OUT_CAP)
+        scale = (k * scale) / kept if kept else scale
+    for li in range(n_levels):
+        c, s = n_cand[li], n_surv[li]
+        c_seen = min(c, SAMPLE_CAND_CAP)
+        # survivors were counted among the first c_seen candidates only
+        s_corr = s * (c / c_seen) if c_seen else 0.0
+        caps.append((bucket_pow2(est(c)), bucket_cap(est(s_corr))))
+        kept = min(s, SAMPLE_OUT_CAP)
+        scale = (s_corr * scale) / kept if kept else scale
+        if needs_filter:
+            k = n_keep[ki]
+            ki += 1
+            fcaps.append(bucket_cap(est(k)))
+            kkept = min(k, SAMPLE_OUT_CAP)
+            scale = (k * scale) / kkept if kkept else scale
+    return tuple(caps), tuple(fcaps)
+
+
+# ---------------------------------------------------------------------------
 # The executor
 
 
@@ -343,6 +618,8 @@ class MiningExecutor:
         self.signature = plan_signature(miner.graph_digest(), miner.app,
                                         miner.backend.name, self.cap0,
                                         miner.fuse_filter)
+        self.app_key = plan_app_key(miner.app, miner.backend.name,
+                                    miner.fuse_filter)
         self._plan = plan
         if self._plan is None and cache is not None:
             self._plan = cache.get(self.signature)
@@ -373,21 +650,29 @@ class MiningExecutor:
 
     def adopt_plan(self, caps, filter_caps=(), source: str = "inspect"
                    ) -> None:
-        """Install a freshly recorded plan (first host run = planning pass).
+        """Install a freshly recorded plan (inspection pass, sampled
+        estimate, or profile transfer — ``source`` records which).
 
         A plan already in place wins — plan once, execute many.
         """
         if self._plan is not None:
             return
+        profile, n_edges = self.miner.profile_sketch()
         self._plan = MiningPlan(kind=self.kind, caps=tuple(caps),
                                 filter_caps=tuple(filter_caps),
                                 cap0=self.cap0, signature=self.signature,
-                                source=source)
+                                source=source, app_key=self.app_key,
+                                profile=profile, n_edges=n_edges)
         if self.cache is not None:
             self.cache.put(self._plan)
 
     def _grow(self) -> None:
         self.n_replans += 1
+        # the superseded capacities never run again: dropping their jit
+        # entry releases the compiled executable (otherwise every grow
+        # pins another whole-pipeline XLA program for the process
+        # lifetime)
+        self._fns.pop((self._plan.caps, self._plan.filter_caps), None)
         self._plan = self._plan.grown()
         if self.cache is not None:
             self.cache.put(self._plan)

@@ -195,6 +195,28 @@ def from_edge_list(edges, n_vertices: Optional[int] = None,
     return build_csr(n_vertices, uu, vv, labels=labels)
 
 
+# Quantile grid of the degree-profile sketch carried by MiningPlan for
+# plan transfer: coarse enough to be a few floats per plan, fine enough
+# that an ER graph and a power-law graph of equal edge count land far
+# apart (the tail quantiles separate them).
+DEGREE_QUANTILES = (0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
+
+
+def degree_profile(g: CSRGraph) -> tuple[float, ...]:
+    """Compact degree-distribution sketch: quantiles of the degree vector.
+
+    Together with the edge count this is the plan-transfer identity —
+    two graphs with close profiles produce close per-level frontier
+    sizes for the same app, so a cached plan from the nearest profile is
+    a good capacity seed (scaled by worklist size; exactness comes from
+    the executor's grow-and-retry backstop, not from the match).
+    """
+    if g.n_vertices == 0:
+        return (0.0,) * len(DEGREE_QUANTILES)
+    deg = np.asarray(g.degrees(), dtype=np.float64)
+    return tuple(float(x) for x in np.quantile(deg, DEGREE_QUANTILES))
+
+
 def neighbors_np(g: CSRGraph, v: int) -> np.ndarray:
     rp = np.asarray(g.row_ptr)
     ci = np.asarray(g.col_idx)

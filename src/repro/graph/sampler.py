@@ -1,8 +1,15 @@
-"""Fanout neighbor sampler (GraphSAGE minibatch training).
+"""Host-side numpy samplers: GraphSAGE fanout + mining-plan estimation.
 
-Host-side numpy sampling (the standard place for samplers — the TPU step
-consumes fixed-shape [B * prod(fanout)] blocks).  Sampling with
-replacement from each vertex's CSR segment; isolated vertices self-loop.
+Two consumers share these primitives:
+
+* :func:`sample_fanout` — GraphSAGE minibatch frontiers (the TPU step
+  consumes fixed-shape [B * prod(fanout)] blocks).  Sampling with
+  replacement from each vertex's CSR segment; isolated vertices
+  self-loop.
+* The sampled capacity estimator (:func:`repro.core.plan.estimate_plan`)
+  — :func:`sample_worklist` draws the level-0 embedding sample the
+  estimator probes through the real mining pipeline (scaling observed
+  counts by the sampling fraction).
 """
 from __future__ import annotations
 
@@ -23,12 +30,34 @@ def sample_fanout(g: CSRGraph, seeds: np.ndarray,
     cur = frontiers[0]
     for fan in fanouts:
         deg = rp[cur + 1] - rp[cur]
-        # sample with replacement; degree-0 vertices self-loop
-        r = rng.integers(0, np.maximum(deg, 1)[:, None],
-                         size=(len(cur), fan))
-        idx = rp[cur][:, None] + r
-        nbrs = np.where(deg[:, None] > 0, ci[np.minimum(idx, len(ci) - 1)],
-                        cur[:, None])
+        if ci.size == 0:
+            # zero-edge graph: every vertex is isolated -> all self-loops.
+            # (Without the guard the gather below indexes ci[-1] of an
+            # empty array; the estimator samples arbitrary blocks, so
+            # empty CSR segments are a reachable input, not a bug.)
+            nbrs = np.broadcast_to(cur[:, None], (len(cur), fan))
+        else:
+            # sample with replacement; degree-0 vertices self-loop
+            r = rng.integers(0, np.maximum(deg, 1)[:, None],
+                             size=(len(cur), fan))
+            idx = rp[cur][:, None] + r
+            nbrs = np.where(deg[:, None] > 0,
+                            ci[np.minimum(idx, len(ci) - 1)],
+                            cur[:, None])
         cur = nbrs.reshape(-1).astype(np.int32)
         frontiers.append(cur)
     return frontiers
+
+
+def sample_worklist(m: int, sample_size: int, rng: np.random.Generator,
+                    sort: bool = True) -> np.ndarray:
+    """Sample (without replacement) of level-0 worklist indices.
+
+    ``sort=True`` keeps sampled indices in worklist order — FSM edge
+    uids keep their relative order, so the canonical edge-growth test
+    makes every comparison the full worklist would.  ``sort=False``
+    shuffles, so a probe that truncates its frontier keeps a uniform
+    subsample rather than a low-id prefix."""
+    size = min(int(sample_size), int(m))
+    idx = rng.choice(m, size=size, replace=False).astype(np.int64)
+    return np.sort(idx) if sort else idx

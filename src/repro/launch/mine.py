@@ -27,10 +27,11 @@ import time
 
 import numpy as np
 
-from repro.core import (Miner, Pattern, make_cf_app, make_fsm_app,
-                        make_mc_app, make_tc_app, named_pattern_set,
-                        pattern_app, pattern_names, pattern_set_app,
-                        pattern_set_names, triangle_count_fused)
+from repro.core import (Miner, Pattern, graph_stats, make_cf_app,
+                        make_fsm_app, make_mc_app, make_tc_app,
+                        named_pattern_set, pattern_app, pattern_names,
+                        pattern_set_app, pattern_set_names,
+                        triangle_count_fused)
 from repro.graph import generators as G
 
 
@@ -98,6 +99,24 @@ def main(argv=None):
     ap.add_argument("--plan-cache-max", type=int, default=None, metavar="N",
                     help="cap the plan-cache directory at N entries "
                          "(LRU-by-mtime eviction)")
+    ap.add_argument("--plan", default="inspect",
+                    choices=("inspect", "estimate", "cache"),
+                    help="cold-run planning: exact per-level inspection "
+                         "(paper), sampled cardinality estimation, or "
+                         "cache = profile-nearest cached plan with "
+                         "estimation fallback")
+    ap.add_argument("--safety-factor", type=float, default=2.0,
+                    help="multiply estimated/transferred capacities by "
+                         "this (higher = fewer overflow retries, more "
+                         "memory)")
+    ap.add_argument("--sample-size", type=int, default=256,
+                    help="level-0 worklist sample drawn by --plan "
+                         "estimate")
+    ap.add_argument("--cost-model", action="store_true",
+                    help="compiled patterns/sets: pick matching orders by "
+                         "the input-aware cost model (degree/label "
+                         "statistics of --graph) instead of structure "
+                         "alone")
     ap.add_argument("--repeat", type=int, default=1,
                     help="run the mining N times (later runs reuse the "
                          "compiled plan executor)")
@@ -125,12 +144,14 @@ def main(argv=None):
         print(f"[mine] fused TC: {n} triangles in {time.time()-t0:.3f}s")
         return
     set_names = None
+    stats = graph_stats(g) if args.cost_model else None
     if args.patterns is not None or args.pattern_set is not None:
         pats = (named_pattern_set(args.pattern_set)
                 if args.pattern_set is not None else
                 tuple(Pattern.named(n) for n in args.patterns.split(",")
                       if n.strip()))
-        app = pattern_set_app(pats, induced=not args.non_induced)
+        app = pattern_set_app(pats, induced=not args.non_induced,
+                              stats=stats)
         set_names = [p.name for p in pats]
         print(f"[mine] compiled pattern set ({len(pats)} patterns, "
               f"k={pats[0].k}, "
@@ -139,7 +160,7 @@ def main(argv=None):
     elif args.pattern is not None or args.pattern_edges is not None:
         pat = (Pattern.named(args.pattern) if args.pattern is not None
                else Pattern.from_string(args.pattern_edges))
-        app = pattern_app(pat, induced=not args.non_induced)
+        app = pattern_app(pat, induced=not args.non_induced, stats=stats)
         print(f"[mine] compiled pattern {pat.name!r}: k={pat.k}, "
               f"{pat.n_edges} edges, "
               f"{'induced' if not args.non_induced else 'non-induced'}")
@@ -165,7 +186,9 @@ def main(argv=None):
     for i in range(max(args.repeat, 1)):
         t0 = time.time()
         r = miner.run(block_size=block_size, collect_stats=args.stats,
-                      plan_cache=plan_cache)
+                      plan_cache=plan_cache, plan_source=args.plan,
+                      safety_factor=args.safety_factor,
+                      sample_size=args.sample_size)
         dt = time.time() - t0
         if args.repeat > 1:
             print(f"[mine] run {i}: {dt:.3f}s")

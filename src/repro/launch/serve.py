@@ -3,6 +3,14 @@
 ``python -m repro.launch.serve --arch qwen3-0.6b --smoke --tokens 32``
 runs prompt prefill then autoregressive decode, reporting tokens/s; the
 recsys path scores batched requests (serve_p99 shape).
+
+Mining-as-a-service: ``python -m repro.launch.serve --mine --graph
+rmat:10 --queries tc,diamond,3-mc`` answers each query on the resident
+graph, timing the first (cold) response and a warm repeat.  ``--plan
+estimate`` (default for this mode) kills the first-query penalty: the
+sampled estimator plans capacities in one small probe instead of the
+per-level inspection pass, and ``--plan cache`` additionally seeds new
+graphs from the profile-nearest cached plan (plan transfer).
 """
 from __future__ import annotations
 
@@ -59,15 +67,73 @@ def serve_recsys(arch, smoke: bool, batch: int, seed: int):
     return scores
 
 
+def serve_mine(args):
+    from repro.core import Miner, Pattern, graph_stats, pattern_app
+    from repro.launch.mine import load_graph, make_app
+
+    g = load_graph(args.graph, labels=args.labels)
+    stats = graph_stats(g)
+    print(f"[serve] mining graph {args.graph}: {g.n_vertices} vertices, "
+          f"{g.n_edges // 2} edges, plan={args.plan}")
+    results = []
+    for query in [q.strip() for q in args.queries.split(",") if q.strip()]:
+        try:
+            app = make_app(query, args.minsup)
+        except SystemExit:
+            # not a built-in app name: compile it as a pattern query,
+            # matching order picked by the resident graph's statistics
+            app = pattern_app(Pattern.named(query), stats=stats)
+        miner = Miner(g, app)
+        t0 = time.time()
+        r = miner.run(plan_source=args.plan, plan_cache=args.plan_cache,
+                      safety_factor=args.safety_factor)
+        cold_ms = (time.time() - t0) * 1e3
+        t0 = time.time()
+        miner.run(plan_source=args.plan, plan_cache=args.plan_cache,
+                  safety_factor=args.safety_factor)
+        warm_ms = (time.time() - t0) * 1e3
+        rep = miner.plan_reports()
+        source = rep[0]["source"] if rep else "?"
+        replans = sum(x["replans"] for x in rep)
+        print(f"[serve] query {query!r}: count={r.count} "
+              f"first={cold_ms:.0f}ms warm={warm_ms:.1f}ms "
+              f"plan={source} replans={replans}")
+        results.append((query, r))
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="model arch to serve (required unless --mine)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mine", action="store_true",
+                    help="serve mining queries on a resident graph "
+                         "instead of a model")
+    ap.add_argument("--graph", default="rmat:10",
+                    help="mining mode: resident graph spec")
+    ap.add_argument("--queries", default="tc",
+                    help="mining mode: comma-separated app or pattern "
+                         "names (tc, 3-mc, 4-cf, k-fsm, diamond, ...)")
+    ap.add_argument("--plan", default="estimate",
+                    choices=("inspect", "estimate", "cache"),
+                    help="mining mode: cold-query planning strategy")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="mining mode: persistent plan cache (enables "
+                         "plan transfer across graphs with --plan cache)")
+    ap.add_argument("--safety-factor", type=float, default=2.0)
+    ap.add_argument("--minsup", type=int, default=100)
+    ap.add_argument("--labels", type=int, default=None)
     args = ap.parse_args(argv)
+    if args.mine:
+        serve_mine(args)
+        return
+    if args.arch is None:
+        raise SystemExit("--arch is required (or pass --mine)")
     arch = get_arch(args.arch)
     if arch.family == "lm":
         serve_lm(arch, args.smoke, args.batch, args.prompt_len,

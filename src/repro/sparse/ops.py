@@ -92,6 +92,8 @@ def expand_ragged(counts: jnp.ndarray, capacity: int
     parent = jnp.searchsorted(offsets, slots, side="right").astype(jnp.int32)
     valid = slots < total
     parent = jnp.where(valid, parent, -1)
+    # empty-frontier guard: gathering from a zero-length starts is invalid
+    starts = starts if counts.shape[0] else jnp.zeros(1, jnp.int32)
     rank = jnp.where(valid, slots - starts[jnp.clip(parent, 0, None)], 0)
     return parent, rank.astype(jnp.int32), total.astype(jnp.int32)
 

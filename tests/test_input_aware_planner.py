@@ -1,0 +1,355 @@
+"""Input-aware planner: sampled capacity estimation, plan transfer,
+cost-model matching orders, and the overflow-grow-retry backstop that
+makes estimated plans exact.
+
+The acceptance property: a run planned by the sampled estimator
+(``plan_source="estimate"``) returns bitwise-identical results
+(count / p_map / codes / supports) to the inspection-planned run, for
+random graphs, across apps and backends — correctness must come from
+the pipeline + backstop, never from the quality of the estimate.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+from oracles import motif_counts, triangle_count
+from repro.core import (Miner, PlanCache, graph_stats, make_fsm_app,
+                        make_mc_app, make_tc_app, pattern_app,
+                        pattern_set_app, Pattern, named_pattern_set)
+from repro.core.patterns import compile_pattern, compile_pattern_set
+from repro.core.patterns.compile import _order_cost, matching_order
+from repro.core.plan import (bucket_cap, bucket_pow2, estimate_plan,
+                             profile_distance, transfer_caps)
+from repro.graph import generators as G
+from repro.graph.csr import build_csr, degree_profile, to_networkx
+from repro.graph.sampler import sample_fanout, sample_worklist
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+def result_key(r):
+    """Bitwise identity of a MineResult (order-insensitive FSM table)."""
+    fsm = None
+    if r.codes is not None:
+        fsm = sorted((int(c), int(s))
+                     for c, s in zip(np.asarray(r.codes),
+                                     np.asarray(r.supports))
+                     if c != INT_MAX)
+    return (int(r.count),
+            None if r.p_map is None else [int(x) for x in r.p_map],
+            fsm)
+
+
+# -- satellite: sample_fanout on degenerate graphs ---------------------------
+
+def test_sample_fanout_zero_edge_graph():
+    g = build_csr(5, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    frontiers = sample_fanout(g, np.array([0, 3], np.int32), (4, 2))
+    assert [f.shape for f in frontiers] == [(2,), (8,), (16,)]
+    # isolated vertices self-loop: every hop repeats its seed
+    assert set(frontiers[1][:4]) == {0} and set(frontiers[1][4:]) == {3}
+
+
+def test_sample_fanout_isolated_vertices_in_nonempty_graph():
+    g = build_csr(4, np.array([0, 1]), np.array([1, 0]))  # 2,3 isolated
+    frontiers = sample_fanout(g, np.array([2, 3], np.int32), (3,))
+    assert set(frontiers[1][:3]) == {2} and set(frontiers[1][3:]) == {3}
+
+
+def test_sample_worklist_bounds_and_order():
+    rng = np.random.default_rng(0)
+    idx = sample_worklist(1000, 64, rng)
+    assert len(idx) == 64 == len(set(idx.tolist()))
+    assert (np.diff(idx) > 0).all()          # sorted, unique
+    assert sample_worklist(10, 64, rng).shape == (10,)
+    shuffled = sample_worklist(1000, 64, rng, sort=False)
+    assert not (np.diff(shuffled) > 0).all()
+
+
+# -- satellite: _grow() drops the superseded compiled executable -------------
+
+def test_grow_evicts_stale_jit_entry(er_graph, er_nx):
+    m = Miner(er_graph, make_tc_app())
+    ex = m.executor(bucket_pow2(int(m.init_edges()[0].shape[0])))
+    ex.adopt_plan(((8, 4),), source="manual")        # guaranteed overflow
+    r = m.run()
+    assert r.count == triangle_count(er_nx)
+    assert ex.n_replans >= 1
+    # only the surviving plan's executable stays cached: every grow
+    # evicted the capacities it superseded
+    assert len(ex._fns) == 1
+    assert set(ex._fns) == {(ex.plan.caps, ex.plan.filter_caps)}
+
+
+# -- satellite: backstop correctness under deliberate under-estimates --------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_backstop_vertex_pipeline_tiny_caps(er_graph, er_nx, backend):
+    m = Miner(er_graph, make_mc_app(3), backend=backend)
+    exact = result_key(m.run())
+    m2 = Miner(er_graph, make_mc_app(3), backend=backend)
+    ex = m2.executor(bucket_pow2(int(m2.init_edges()[0].shape[0])))
+    ex.adopt_plan(((128, 128),), source="manual")    # ~10x under
+    assert result_key(m2.run()) == exact
+    assert ex.n_replans >= 1
+    assert ex.plan.source == "grown"
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_backstop_edge_pipeline_tiny_filter_caps(labeled_graph, backend):
+    app = make_fsm_app(3, min_support=2, max_patterns=64)
+    m = Miner(labeled_graph, app, backend=backend)
+    exact = result_key(m.run())
+    m2 = Miner(labeled_graph,
+               make_fsm_app(3, min_support=2, max_patterns=64),
+               backend=backend)
+    cap0 = bucket_pow2(int(m2.ctx.n_uedges))
+    ex = m2.executor(cap0)
+    # under-size both the extension caps and the FSM filter caps: the
+    # overflow flag must catch truncation in either compaction
+    ex.adopt_plan(((128, 128),), filter_caps=(128, 128), source="manual")
+    assert result_key(m2.run()) == exact
+    assert ex.n_replans >= 1
+
+
+# -- the estimator -----------------------------------------------------------
+
+def test_estimate_plan_empty_graph_minimal():
+    g = build_csr(6, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    m = Miner(g, make_mc_app(4))
+    caps, fcaps = estimate_plan(m, cap0=128)
+    assert caps == ((128, 128), (128, 128)) and fcaps == ()
+    assert m.run(plan_source="estimate").count == 0
+
+
+def test_estimate_plan_shapes_and_buckets(er_graph):
+    m = Miner(er_graph, make_mc_app(4))
+    caps, fcaps = estimate_plan(m, cap0=1024)
+    assert len(caps) == 2 and fcaps == ()
+    for cand, out in caps:
+        assert cand == bucket_pow2(cand) and out == bucket_cap(out)
+
+
+def test_estimate_full_sample_covers_exact_counts(er_graph):
+    """Sampling the ENTIRE worklist -> scale 1: estimated caps (with the
+    safety factor) must dominate the exact plan's, so replay never
+    overflows."""
+    m = Miner(er_graph, make_tc_app())
+    src, _ = m.init_edges()
+    m_count = int(src.shape[0])
+    cap0 = bucket_pow2(m_count)
+    est_caps, _ = estimate_plan(m, cap0, sample_size=m_count,
+                                safety_factor=1.0)
+    m.run()                               # inspection records exact plan
+    exact = m.executor(cap0).plan
+    assert exact.source == "inspect"
+    for (ec, eo), (xc, xo) in zip(est_caps, exact.caps):
+        assert ec >= xc and eo >= xo
+    m2 = Miner(er_graph, make_tc_app())
+    m2.run(plan_source="estimate", sample_size=m_count, safety_factor=1.0)
+    ex2 = m2.executor(cap0)
+    assert ex2.plan.source == "estimated" and ex2.n_replans == 0
+
+
+def test_estimated_run_records_provenance(er_graph, er_nx):
+    m = Miner(er_graph, make_tc_app())
+    r = m.run(plan_source="estimate")
+    assert r.count == triangle_count(er_nx)
+    rep = m.plan_reports()
+    assert rep and rep[0]["source"] in ("estimated", "grown")
+
+
+def test_run_rejects_unknown_plan_source(er_graph):
+    with pytest.raises(ValueError, match="plan_source"):
+        Miner(er_graph, make_tc_app()).run(plan_source="guess")
+
+
+# -- acceptance property: estimator == inspection, bitwise -------------------
+
+APPS = {"tc": make_tc_app, "3-mc": lambda: make_mc_app(3),
+        "psm-diamond": lambda: pattern_app(Pattern.named("diamond"))}
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(12, 40), p=st.floats(0.1, 0.45),
+       seed=st.integers(0, 10_000), app_name=st.sampled_from(sorted(APPS)),
+       backend=st.sampled_from(["reference", "pallas"]),
+       sample_size=st.integers(8, 64))
+def test_estimate_matches_inspect_property(n, p, seed, app_name, backend,
+                                           sample_size):
+    g = G.erdos_renyi(n, p, seed=seed)
+    exact = result_key(Miner(g, APPS[app_name](), backend=backend).run())
+    m = Miner(g, APPS[app_name](), backend=backend)
+    r = m.run(plan_source="estimate", sample_size=sample_size)
+    assert result_key(r) == exact
+    assert m.plan_reports()[0]["source"] in ("estimated", "grown")
+
+
+@settings(max_examples=3, deadline=None)
+@given(n=st.integers(10, 24), p=st.floats(0.15, 0.4),
+       seed=st.integers(0, 1000), minsup=st.integers(1, 4),
+       sample_size=st.integers(8, 48))
+def test_estimate_matches_inspect_fsm_property(n, p, seed, minsup,
+                                               sample_size):
+    g = G.erdos_renyi(n, p, seed=seed, labels=3)
+    app = make_fsm_app(3, min_support=minsup, max_patterns=64)
+    exact = result_key(Miner(g, app).run())
+    m = Miner(g, make_fsm_app(3, min_support=minsup, max_patterns=64))
+    r = m.run(plan_source="estimate", sample_size=sample_size)
+    assert result_key(r) == exact
+
+
+# -- plan transfer -----------------------------------------------------------
+
+def test_degree_profile_and_distance():
+    a = G.erdos_renyi(60, 0.2, seed=1)
+    b = G.erdos_renyi(66, 0.2, seed=2)       # similar shape + size
+    c = G.clique(30)                          # very different profile
+    pa, pb, pc = (degree_profile(x) for x in (a, b, c))
+    d_ab = profile_distance(pa, a.n_edges, pb, b.n_edges)
+    d_ac = profile_distance(pa, a.n_edges, pc, c.n_edges)
+    assert d_ab < d_ac
+    assert profile_distance(pa, a.n_edges, pa, a.n_edges) == 0.0
+    assert profile_distance((), 0, pb, b.n_edges) is None
+
+
+def test_transfer_caps_rescale():
+    from repro.core import MiningPlan
+    plan = MiningPlan(kind="vertex", caps=((1024, 512),),
+                      filter_caps=(256,), cap0=1024)
+    caps, fcaps = transfer_caps(plan, cap0=2048, safety_factor=1.0)
+    assert caps == ((2048, 1024),) and fcaps == (512,)
+
+
+def test_plan_transfer_seeds_from_nearest_profile(tmp_path, er_graph):
+    cache = PlanCache(str(tmp_path))
+    donor = G.erdos_renyi(36, 0.25, seed=9)   # near er_graph(30, 0.25)
+    m0 = Miner(donor, make_tc_app())
+    m0.run(plan_cache=cache)                  # inspect + persist
+    assert m0.plan_reports()[0]["source"] == "inspect"
+    # new graph, no exact signature hit -> transfer from donor's plan
+    m1 = Miner(er_graph, make_tc_app())
+    r = m1.run(plan_source="cache", plan_cache=cache)
+    rep = m1.plan_reports()[0]
+    assert rep["source"] in ("transfer", "grown")
+    assert r.count == triangle_count(to_networkx(er_graph))
+
+
+def test_plan_cache_mode_falls_back_to_estimator(tmp_path, er_graph, er_nx):
+    cache = PlanCache(str(tmp_path))          # empty: nothing to transfer
+    m = Miner(er_graph, make_tc_app())
+    r = m.run(plan_source="cache", plan_cache=cache)
+    assert m.plan_reports()[0]["source"] in ("estimated", "grown")
+    assert r.count == triangle_count(er_nx)
+
+
+def test_nearest_ignores_other_app_keys(tmp_path, er_graph):
+    cache = PlanCache(str(tmp_path))
+    Miner(er_graph, make_mc_app(3)).run(plan_cache=cache)
+    m = Miner(G.erdos_renyi(40, 0.2, seed=4), make_tc_app())
+    ex = m.executor(128)
+    profile, n_edges = m.profile_sketch()
+    assert cache.nearest(ex.app_key, "vertex", profile, n_edges) is None
+
+
+def test_exact_cache_hit_beats_transfer(tmp_path, er_graph):
+    cache = PlanCache(str(tmp_path))
+    Miner(er_graph, make_tc_app()).run(plan_cache=cache)
+    m = Miner(er_graph, make_tc_app())        # same graph: exact signature
+    m.run(plan_source="cache", plan_cache=cache)
+    assert m.plan_reports()[0]["source"] == "cache"
+
+
+# -- cost-model matching orders ----------------------------------------------
+
+def test_graph_stats_values():
+    # path 0-1-2: degrees (1, 2, 1) -> E[d]=4/3, E[d^2]/E[d]=6/4
+    g = build_csr(3, np.array([0, 1, 1, 2]), np.array([1, 0, 2, 1]))
+    s = graph_stats(g)
+    assert s.n_vertices == 3 and s.n_edges == 4
+    assert s.avg_degree == pytest.approx(4 / 3)
+    assert s.biased_degree == pytest.approx(6 / 4)
+    assert s.label_freq == ()
+
+
+def test_graph_stats_label_freq():
+    g = G.erdos_renyi(20, 0.3, seed=1, labels=2)
+    s = graph_stats(g)
+    assert sum(f for _, f in s.label_freq) == pytest.approx(1.0)
+    assert s.freq(999) == 1.0                 # unseen label: no scaling
+
+
+def test_order_cost_prefers_constrained_levels_early():
+    stats = graph_stats(G.erdos_renyi(100, 0.05, seed=1))
+    # two fake 4-vertex orders: constraints early vs late
+    early = [((0, 1), (0,)), ((0, 1, 2), ())]
+    late = [((0,), ()), ((0, 1, 2, 3)[:3], (0,))]
+    assert _order_cost(early, stats) < _order_cost(late, stats)
+
+
+def test_matching_order_stats_none_unchanged():
+    for name in ("diamond", "4-cycle", "tailed-triangle"):
+        p = Pattern.named(name)
+        assert matching_order(p) == matching_order(p, stats=None)
+
+
+@pytest.mark.parametrize("name", ["diamond", "4-cycle", "4-path",
+                                  "tailed-triangle"])
+def test_cost_model_orders_count_identically(er_graph, name):
+    stats = graph_stats(er_graph)
+    base = Miner(er_graph, pattern_app(Pattern.named(name))).run().count
+    tuned = Miner(er_graph,
+                  pattern_app(Pattern.named(name), stats=stats)).run().count
+    assert tuned == base
+
+
+def test_cost_model_plan_keys_isolate():
+    p = Pattern.named("4-path")               # several legal orders
+    stats = graph_stats(G.clique(20))         # dense: different ranking
+    a = compile_pattern(p)
+    b = compile_pattern(p, stats=stats)
+    # same pattern, possibly different order: keys must collide only
+    # when the per-level rules match
+    if tuple((lp.required, lp.smaller) for lp in a.levels) == \
+            tuple((lp.required, lp.smaller) for lp in b.levels):
+        assert a.plan_key == b.plan_key
+    else:
+        assert a.plan_key != b.plan_key
+
+
+def test_cost_model_set_counts_identically(er_graph, er_nx):
+    pats = named_pattern_set("motifs4")
+    stats = graph_stats(er_graph)
+    plan = compile_pattern_set(pats, stats=stats)
+    assert plan.cost_model and plan.plan_key.endswith(":c")
+    assert compile_pattern_set(pats).plan_key + ":c" == plan.plan_key
+    base = Miner(er_graph, pattern_set_app(pats)).run()
+    tuned = Miner(er_graph, pattern_set_app(pats, stats=stats)).run()
+    assert [int(x) for x in tuned.p_map] == [int(x) for x in base.p_map]
+    assert sum(int(x) for x in base.p_map) == sum(motif_counts(er_nx,
+                                                              4).values())
+
+
+# -- CLI smoke ---------------------------------------------------------------
+
+def test_mine_cli_estimate_smoke(capsys):
+    from repro.launch.mine import main
+    main(["--app", "tc", "--graph", "er:30,0.2", "--plan", "estimate",
+          "--sample-size", "64"])
+    out = capsys.readouterr().out
+    assert "source=estimated" in out or "source=grown" in out
+
+
+def test_mine_cli_cost_model_smoke(capsys):
+    from repro.launch.mine import main
+    main(["--pattern", "diamond", "--graph", "er:24,0.25",
+          "--cost-model", "--plan", "estimate"])
+    assert "count = " in capsys.readouterr().out
+
+
+def test_serve_cli_mine_smoke(capsys, tmp_path):
+    from repro.launch.serve import main
+    main(["--mine", "--graph", "er:24,0.25", "--queries", "tc,diamond",
+          "--plan", "estimate", "--plan-cache", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert out.count("query") == 2 and "plan=" in out

@@ -349,7 +349,7 @@ def test_bench_guard_noise_floor_and_uniform_scope():
     import pathlib
     data = json.loads((pathlib.Path(__file__).parent.parent /
                        "BENCH_backends.json").read_text())
-    assert data["schema"] == 5
+    assert data["schema"] == 6
     keys = {(r["graph"], r["app"], r["backend"]) for r in data["records"]}
     for g in ("er100", "er200"):
         for a in ("tc", "4-cf", "3-mc", "psm-diamond", "psm-5-clique",
