@@ -36,7 +36,14 @@ default mc(4) path) and ``mc4-reduce`` (the old canonical-labeling
 ``jnp.unique`` reduce, kept as the baseline the trie must beat);
 schema 6 adds the estimated-planner columns (``est_plan_s``,
 ``n_replans``, ``est_cap_ratio``) with bitwise parity asserted between
-the estimated-plan and inspection-plan results.
+the estimated-plan and inspection-plan results; schema 7 adds the
+``pallas-mp`` backend (two-pass scan compaction on a concurrent-tile
+grid — same fused pipeline, no sequential-grid dependence), the
+``compaction_passes`` column, the edge-pipeline workloads (``3-fsm``
+and a labeled chain pattern on labeled graphs, which ride the fused
+in-kernel edge enumeration on the pallas backends), and per-row
+``extend_pruned``/``extend_edge`` capability strings so the JSON
+records which rows actually ran fused rather than leaving it implied.
 
 ``--check`` is the CI perf guard: before overwriting, the committed
 baseline is loaded and any (graph, app, backend) row whose warm_plan_s
@@ -65,17 +72,17 @@ import statistics
 import time
 
 from benchmarks.common import emit
-from repro.core import (Miner, Pattern, make_cf_app, make_mc_app,
-                        make_tc_app, pattern_app)
+from repro.core import (Miner, Pattern, make_cf_app, make_fsm_app,
+                        make_mc_app, make_tc_app, pattern_app)
 from repro.graph import generators as G
 
-BACKENDS = ("reference", "pallas")
+BACKENDS = ("reference", "pallas", "pallas-mp")
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_backends.json"
 REGRESSION_FACTOR = 2.0
 ABS_SLACK_S = 0.005          # noise floor: ratio alone flags <5ms jitter
 WARM_SAMPLES = 5
-SCHEMA = 6
+SCHEMA = 7
 MAX_EST_REPLANS = 1          # --check: estimate may grow-retry at most once
 
 
@@ -86,6 +93,14 @@ def graphs(small: bool):
     return {"er200": G.erdos_renyi(200, 0.05, seed=1),
             "er500": G.erdos_renyi(500, 0.03, seed=1),
             "rmat10": G.rmat(10, edge_factor=4, seed=1)}
+
+
+def labeled_graphs(small: bool):
+    """Labeled twins for the edge-pipeline / labeled-predicate workloads."""
+    if small:
+        return {"er100l3": G.erdos_renyi(100, 0.08, seed=1, labels=3)}
+    return {"er200l3": G.erdos_renyi(200, 0.05, seed=1, labels=3),
+            "er500l3": G.erdos_renyi(500, 0.03, seed=1, labels=3)}
 
 
 def apps():
@@ -102,7 +117,31 @@ def apps():
             ("mc4-reduce", lambda: make_mc_app(4, mode="generic"))]
 
 
+def labeled_apps():
+    return [
+        # edge pipeline: FSM's per-vertex eager prune keeps enumeration
+        # fusible (in-kernel on the pallas backends)
+        ("3-fsm", lambda: make_fsm_app(3, min_support=2, max_patterns=64)),
+        # labeled pattern: in-kernel label-gather predicates (no batch
+        # to_add fallback since schema 7)
+        ("psm-lchain", lambda: pattern_app(
+            Pattern.from_edges([(0, 1), (1, 2)], labels=[0, 1, 2],
+                               name="lchain")))]
+
+
+def workloads(small: bool):
+    for gname, g in graphs(small).items():
+        for aname, make_app in apps():
+            yield gname, g, aname, make_app
+    for gname, g in labeled_graphs(small).items():
+        for aname, make_app in labeled_apps():
+            yield gname, g, aname, make_app
+
+
 def _result_key(r):
+    if r.supports is not None:                       # FSM: (code, support)
+        return sorted(zip((int(c) for c in r.codes),
+                          (int(s) for s in r.supports)))
     return (int(r.count) if r.p_map is None else [int(x) for x in r.p_map])
 
 
@@ -143,65 +182,68 @@ def run(small: bool = True, check: bool = False) -> list[str]:
                          f"{OUT_PATH}")
     out = []
     records = []
-    for gname, g in graphs(small).items():
-        for aname, make_app in apps():
-            baseline_result = None
-            for backend in BACKENDS:
-                m = Miner(g, make_app(), backend=backend)
-                # cold: first-ever run (compiles + inspects + executes)
+    for gname, g, aname, make_app in workloads(small):
+        baseline_result = None
+        for backend in BACKENDS:
+            m = Miner(g, make_app(), backend=backend)
+            # cold: first-ever run (compiles + inspects + executes)
+            t0 = time.perf_counter()
+            r_cold = m.run()
+            cold = time.perf_counter() - t0
+            # host path, jits warm: the per-level sync being replaced
+            t0 = time.perf_counter()
+            m.run(collect_stats=True)    # collect_stats forces host
+            host = time.perf_counter() - t0
+            m.run()                      # compiles the plan executor
+            # steady state: one jit call per run.  Median of N — the
+            # de-flaked statistic both sides of the --check guard use.
+            samples = []
+            for _ in range(WARM_SAMPLES):
                 t0 = time.perf_counter()
-                r_cold = m.run()
-                cold = time.perf_counter() - t0
-                # host path, jits warm: the per-level sync being replaced
-                t0 = time.perf_counter()
-                m.run(collect_stats=True)    # collect_stats forces host
-                host = time.perf_counter() - t0
-                m.run()                      # compiles the plan executor
-                # steady state: one jit call per run.  Median of N — the
-                # de-flaked statistic both sides of the --check guard use.
-                samples = []
-                for _ in range(WARM_SAMPLES):
-                    t0 = time.perf_counter()
-                    r = m.run()
-                    samples.append(time.perf_counter() - t0)
-                warm = statistics.median(samples)
-                result = _result_key(r)
-                assert result == _result_key(r_cold), \
-                    f"plan executor diverged from host run: {aname}/{gname}"
-                if baseline_result is None:
-                    baseline_result = result
-                match = result == baseline_result
-                out_cap_total = sum(rep["out_cap_total"]
-                                    for rep in m.plan_reports())
-                # zero-cold-start path: a FRESH miner planned by the
-                # sampled estimator (no inspection pass at all)
-                m_est = Miner(g, make_app(), backend=backend)
-                t0 = time.perf_counter()
-                r_est = m_est.run(plan_source="estimate")
-                est = time.perf_counter() - t0
-                assert _result_key(r_est) == result, \
-                    f"estimated plan diverged: {aname}/{gname}/{backend}"
-                est_reps = m_est.plan_reports()
-                n_replans = sum(rep["replans"] for rep in est_reps)
-                est_cap_total = sum(rep["out_cap_total"]
-                                    for rep in est_reps)
-                est_cap_ratio = est_cap_total / max(out_cap_total, 1)
-                derived = (f"match={match};"
-                           f"host={host * 1e6:.0f}us;"
-                           f"cold={cold * 1e6:.0f}us;"
-                           f"est={est * 1e6:.0f}us")
-                out.append(emit(f"backends/{aname}/{gname}/{backend}", warm,
-                                derived))
-                records.append({"graph": gname, "app": aname,
-                                "backend": backend, "seconds": warm,
-                                "cold_plan_s": cold, "host_run_s": host,
-                                "warm_plan_s": warm, "est_plan_s": est,
-                                "n_replans": n_replans,
-                                "est_cap_ratio": est_cap_ratio,
-                                "out_cap_total": out_cap_total,
-                                "n_vertices": g.n_vertices,
-                                "n_edges": g.n_edges // 2,
-                                "matches_reference": match})
+                r = m.run()
+                samples.append(time.perf_counter() - t0)
+            warm = statistics.median(samples)
+            result = _result_key(r)
+            assert result == _result_key(r_cold), \
+                f"plan executor diverged from host run: {aname}/{gname}"
+            if baseline_result is None:
+                baseline_result = result
+            match = result == baseline_result
+            out_cap_total = sum(rep["out_cap_total"]
+                                for rep in m.plan_reports())
+            # zero-cold-start path: a FRESH miner planned by the
+            # sampled estimator (no inspection pass at all)
+            m_est = Miner(g, make_app(), backend=backend)
+            t0 = time.perf_counter()
+            r_est = m_est.run(plan_source="estimate")
+            est = time.perf_counter() - t0
+            assert _result_key(r_est) == result, \
+                f"estimated plan diverged: {aname}/{gname}/{backend}"
+            est_reps = m_est.plan_reports()
+            n_replans = sum(rep["replans"] for rep in est_reps)
+            est_cap_total = sum(rep["out_cap_total"]
+                                for rep in est_reps)
+            est_cap_ratio = est_cap_total / max(out_cap_total, 1)
+            caps = m.backend.capabilities(m.app)
+            derived = (f"match={match};"
+                       f"host={host * 1e6:.0f}us;"
+                       f"cold={cold * 1e6:.0f}us;"
+                       f"est={est * 1e6:.0f}us")
+            out.append(emit(f"backends/{aname}/{gname}/{backend}", warm,
+                            derived))
+            records.append({"graph": gname, "app": aname,
+                            "backend": backend, "seconds": warm,
+                            "cold_plan_s": cold, "host_run_s": host,
+                            "warm_plan_s": warm, "est_plan_s": est,
+                            "n_replans": n_replans,
+                            "est_cap_ratio": est_cap_ratio,
+                            "out_cap_total": out_cap_total,
+                            "compaction_passes": caps["compaction_passes"],
+                            "extend_pruned": caps["extend_pruned"],
+                            "extend_edge": caps["extend_edge"],
+                            "n_vertices": g.n_vertices,
+                            "n_edges": g.n_edges // 2,
+                            "matches_reference": match})
     OUT_PATH.write_text(json.dumps({"schema": SCHEMA, "records": records},
                                    indent=2))
     print(f"# wrote {OUT_PATH}")

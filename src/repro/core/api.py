@@ -376,7 +376,18 @@ class MiningApp:
     to_extend_state: Optional[Callable] = None
     to_add: Optional[Callable] = None
     to_add_bits: Optional[Callable] = None  # fused-backend toAdd variant
-    # in-kernel elementwise toAdd: one callable, or a per-level sequence
+    # per-candidate-vertex eager toAdd: (ctx) -> bool[n_vertices].  The
+    # strongest edge-pipeline form: when the app's toAdd depends only on
+    # the candidate vertex u (e.g. FSM's label-frequency prune), backends
+    # gather this mask per candidate — the reference pipeline in XLA, the
+    # fused edge kernel in-VMEM, so pruned candidates are never
+    # materialized.  Takes precedence over ``to_add`` in the edge pipeline.
+    to_add_vertex_mask: Optional[Callable] = None
+    # in-kernel elementwise toAdd: one callable, or a per-level sequence.
+    # A predicate with attribute ``needs_labels = True`` receives two
+    # extra arguments ``(lab_cols, lab_u)`` — the parent-slot and
+    # candidate vertex labels, gathered by the backend (in-kernel for the
+    # fused backends) — the labeled-pattern form.
     to_add_kernel: Optional[Callable | tuple] = None
     # in-kernel elementwise state update (same form as to_add_kernel)
     update_state_kernel: Optional[Callable | tuple] = None

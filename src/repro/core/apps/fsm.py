@@ -5,14 +5,16 @@ Edge-induced exploration over a labeled graph; MNI (domain) support
 threshold — the anti-monotonic property of MNI makes this sound (§2.1
 footnote 2).  k-FSM mines frequent patterns with k-1 edges (§6.1).
 
-Eager pruning (``toAdd``): a candidate vertex whose *label* occurs fewer
-than ``min_support`` times in the whole graph can never appear in a
-frequent embedding — MNI domains are label-homogeneous, so the domain
-holding that vertex is capped by the label's global frequency.  Dropping
-such candidates inside the extend phase is exact for every frequent
-pattern (it only sheds embeddings of provably-infrequent ones) and
-shrinks the search tree before materialization — the FSM analogue of the
-paper's §4 eager search-space pruning.
+Eager pruning (``to_add_vertex_mask``): a candidate vertex whose *label*
+occurs fewer than ``min_support`` times in the whole graph can never
+appear in a frequent embedding — MNI domains are label-homogeneous, so
+the domain holding that vertex is capped by the label's global
+frequency.  The prune depends only on the candidate vertex, so it is
+expressed as a per-vertex mask that the fused edge kernel gathers
+in-VMEM (and the reference pipeline gathers in XLA): such candidates are
+dropped inside the extend phase, before materialization, exactly for
+every frequent pattern (it only sheds embeddings of provably-infrequent
+ones) — the FSM analogue of the paper's §4 eager search-space pruning.
 
 The engine wires the edge-induced default canonical test
 (:func:`repro.core.api.is_auto_canonical_edge`) and the domain-support
@@ -30,21 +32,23 @@ from repro.core.api import GraphCtx, MiningApp
 
 def make_fsm_app(k: int, min_support: int,
                  max_patterns: int = 64) -> MiningApp:
-    def to_add(ctx: GraphCtx, emb: jnp.ndarray, u: jnp.ndarray, state):
+    def to_add_vertex_mask(ctx: GraphCtx) -> jnp.ndarray:
         if ctx.labels is None or min_support <= 0:
-            return jnp.ones(u.shape, bool)
+            return jnp.ones((ctx.n_vertices,), bool)
         # host-side histogram over the concrete label array: runs once at
         # trace time and bakes into the executable as a constant — only
-        # the per-candidate gather below is on the compiled hot path
+        # the per-candidate mask gather (done by the backend: in XLA on
+        # the reference path, inside the fused edge kernel on the Pallas
+        # paths) is on the compiled hot path
         freq_np = np.bincount(
             np.clip(np.asarray(ctx.labels), 0, ctx.n_labels),
             minlength=ctx.n_labels + 1).astype(np.int32)
         label_freq = jnp.asarray(freq_np)
-        lab_u = ctx.labels[jnp.clip(u, 0, ctx.n_vertices - 1)]
-        freq = label_freq[jnp.clip(lab_u, 0, ctx.n_labels)]
-        return (freq >= min_support) & (u >= 0)
+        freq = label_freq[jnp.clip(ctx.labels, 0, ctx.n_labels)]
+        return freq >= min_support
 
     return MiningApp(name=f"{k}-fsm", kind="edge", max_size=k,
                      needs_reduce=True, needs_filter=True,
                      support_mode="domain", min_support=min_support,
-                     to_add=to_add, max_patterns=max_patterns)
+                     to_add_vertex_mask=to_add_vertex_mask,
+                     max_patterns=max_patterns)

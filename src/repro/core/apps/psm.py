@@ -16,10 +16,13 @@ compiled :class:`~repro.core.patterns.compile.MatchingPlan`:
   exact because the compiler's constraints admit one embedding per
   automorphism class.
 
-Labeled patterns need a ``ctx.labels`` gather per candidate, which the
-elementwise kernel form cannot express — they compile to the batch
-``to_add`` hook instead (enumerate-then-filter path, still no
-isomorphism tests).
+Labeled patterns compile to the same per-level kernel form via the
+``needs_labels`` extension: the backend gathers the candidate's and the
+parent slots' labels (in-kernel for the fused backends — one extra
+gather stage, the same shape as the adjacency-bitmap word gather) and
+passes them as two extra predicate arguments, so labeled apps get eager
+in-kernel pruning too instead of falling back to the batch ``to_add``
+hook.
 
 The hand-written clique app (:mod:`repro.core.apps.cf`) survives as the
 parity oracle for this compiler: ``pattern_app(Pattern.clique(k))`` must
@@ -37,7 +40,8 @@ from repro.core.patterns import (GraphStats, LevelPlan, MatchingPlan,
                                  compile_pattern_set)
 
 __all__ = ["pattern_app", "pattern_set_app",
-           "make_level_kernel_predicate", "make_set_branch_bits"]
+           "make_level_kernel_predicate",
+           "make_labeled_level_kernel_predicate", "make_set_branch_bits"]
 
 
 def make_level_kernel_predicate(lp: LevelPlan):
@@ -80,38 +84,40 @@ def _make_to_extend(plan: MatchingPlan):
     return to_extend
 
 
-def _make_labeled_to_add(plan: MatchingPlan):
-    """Batch ``toAdd`` for labeled patterns (needs a ctx.labels gather)."""
-    labels = plan.pattern.labels
-    by_pos = {lp.position: lp for lp in plan.levels}
+def make_labeled_level_kernel_predicate(lp: LevelPlan, labels):
+    """Labeled variant of :func:`make_level_kernel_predicate`.
 
-    def to_add(ctx: GraphCtx, emb: jnp.ndarray, u: jnp.ndarray,
-               src_slot, state):
-        kk = emb.shape[1]
-        lp = by_pos[kk]
-        lab = (ctx.labels if ctx.labels is not None
-               else jnp.zeros((ctx.n_vertices,), jnp.int32))
+    Same structural constraints, plus the pattern's label equations: the
+    candidate's label must match the pattern position's label, and the
+    first extension (position 2) folds in the level-0 label filter — bad
+    (v0, v1) labelings produce no survivors and die on entry.  The
+    ``needs_labels = True`` attribute makes backends gather and pass
+    ``(lab_cols, lab_u)``; the body stays pure elementwise, so it traces
+    inside the fused Pallas kernel and on flat jnp batches identically.
+    """
+    target = int(labels[lp.position])
+    lab0, lab1 = int(labels[0]), int(labels[1])
+    first = lp.position == 2
+    required, forbidden = lp.required, lp.forbidden
+    distinct, smaller = lp.distinct, lp.smaller
 
-        def label_of(v):
-            return lab[jnp.clip(v, 0, ctx.n_vertices - 1)]
-
-        ok = (u >= 0) & (label_of(u) == labels[kk])
-        if kk == 2:
-            # first extension doubles as the level-0 label filter: bad
-            # (v0, v1) labelings produce no survivors and die here
-            ok = ok & (label_of(emb[:, 0]) == labels[0])
-            ok = ok & (label_of(emb[:, 1]) == labels[1])
-        for j in lp.required:
-            ok = ok & ctx.is_connected(emb[:, j], u)
-        for j in lp.forbidden:
-            ok = ok & ~ctx.is_connected(emb[:, j], u)
-        for j in lp.distinct:
-            ok = ok & (u != emb[:, j])
-        for j in lp.smaller:
-            ok = ok & (u > emb[:, j])
+    def pred(emb_cols, u, src_slot, state, conn, lab_cols, lab_u):
+        ok = (u >= 0) & (lab_u == target)
+        if first:
+            # first extension doubles as the level-0 label filter
+            ok = ok & (lab_cols[0] == lab0) & (lab_cols[1] == lab1)
+        for j in required:           # adjacency also implies u != emb_j
+            ok = ok & conn[j]
+        for j in forbidden:
+            ok = ok & ~conn[j]
+        for j in distinct:
+            ok = ok & (u != emb_cols[j])
+        for j in smaller:
+            ok = ok & (u > emb_cols[j])
         return ok
 
-    return to_add
+    pred.needs_labels = True
+    return pred
 
 
 def pattern_app(pattern: Pattern, induced: bool = True,
@@ -139,8 +145,10 @@ def pattern_app(pattern: Pattern, induced: bool = True,
     if p.labels is None:
         kernels = tuple(make_level_kernel_predicate(lp)
                         for lp in plan.levels)
-        return MiningApp(to_add_kernel=kernels, **common)
-    return MiningApp(to_add=_make_labeled_to_add(plan), **common)
+    else:
+        kernels = tuple(make_labeled_level_kernel_predicate(lp, p.labels)
+                        for lp in plan.levels)
+    return MiningApp(to_add_kernel=kernels, **common)
 
 
 # ---------------------------------------------------------------------------

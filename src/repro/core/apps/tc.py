@@ -24,7 +24,7 @@ def make_tc_app(use_dag: bool = True, eager_prune: bool = True) -> MiningApp:
 
 
 def triangle_count_fused(g: CSRGraph, use_kernel: bool = False,
-                         interpret: bool = True) -> int:
+                         interpret: bool | None = None) -> int:
     """DAG + per-edge sorted-intersection count (no embedding lists)."""
     import math
 

@@ -447,7 +447,14 @@ class Miner:
         return ex
 
     def plan_reports(self) -> list[dict]:
-        """Public view of the plan/executor state (for CLIs, logging)."""
+        """Public view of the plan/executor state (for CLIs, logging).
+
+        Each report carries the backend's per-app capability dict
+        (``PhaseBackend.capabilities``) so users can see which ops
+        actually ran fused — and which silently fell back to the
+        reference XLA path — instead of inferring it from timings.
+        """
+        caps_report = self.backend.capabilities(self.app)
         out = []
         for cap0, ex in sorted(self._executors.items()):
             if ex.plan is not None:
@@ -459,7 +466,8 @@ class Miner:
                                 + sum(ex.plan.filter_caps),
                             "compiles": ex.n_compiles,
                             "executions": ex.n_executions,
-                            "replans": ex.n_replans})
+                            "replans": ex.n_replans,
+                            "capabilities": dict(caps_report)})
         return out
 
     def _p_map_meaningful(self) -> bool:

@@ -8,8 +8,10 @@ fallback), override the ops you accelerate, and ``register_backend``.
 Built-ins:
 
   * ``"reference"`` — pure-XLA jnp implementation of every phase.
-  * ``"pallas"``    — fused Pallas vertex-EXTEND kernel (interpret mode on
-    CPU), reference everything else.
+  * ``"pallas"``    — fused Pallas EXTEND kernels (interpret mode on CPU)
+    with sequential-grid SMEM compaction, reference everything else.
+  * ``"pallas-mp"`` — same kernels under the concurrent-grid contract:
+    two-pass tile-count scan compaction, zero cross-tile communication.
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ from typing import Callable, Optional, Union
 from repro.core.phases.base import PhaseBackend
 from repro.core.phases.reference import ReferenceBackend
 from repro.core.phases.pallas import PallasExtendBackend
+from repro.core.phases.pallas_mp import PallasMPBackend
 
 _REGISTRY: dict[str, Callable[[], PhaseBackend]] = {}
 _INSTANCES: dict[str, PhaseBackend] = {}
@@ -52,3 +55,4 @@ def get_backend(spec: BackendSpec = None) -> PhaseBackend:
 
 register_backend("reference", ReferenceBackend)
 register_backend("pallas", PallasExtendBackend)
+register_backend("pallas-mp", PallasMPBackend)

@@ -43,6 +43,48 @@ class PhaseBackend:
 
     name: str = "abstract"
 
+    # -- capability metadata ----------------------------------------------
+    # How the backend's extend_pruned resolves cross-tile survivor offsets,
+    # and what grid-execution order that strategy assumes.  Part of the
+    # plan identity (repro.core.plan.plan_app_key): plans captured under
+    # one compaction contract must not replay under another.
+    #
+    #   compaction          "xla-scan"        host-side prefix-sum compact
+    #                       "sequential-smem" in-kernel SMEM running offset
+    #                                         carried tile-to-tile (legal
+    #                                         only on a sequential grid)
+    #                       "two-pass-scan"   per-tile counts -> host
+    #                                         exclusive scan -> masked
+    #                                         scatter at final offsets
+    #                                         (zero cross-tile state; legal
+    #                                         on concurrent grids)
+    #   compaction_passes   kernel passes over the candidate range (0 for
+    #                       pure-XLA backends)
+    #   grid_contract       "any" | "sequential" | "concurrent" — the
+    #                       weakest grid-ordering guarantee the backend's
+    #                       kernels still work under
+    compaction: str = "xla-scan"
+    compaction_passes: int = 0
+    grid_contract: str = "any"
+
+    def capabilities(self, app: Optional[MiningApp] = None) -> dict:
+        """Which ops actually run fused under this backend.
+
+        With ``app`` given the report is per-app (a backend may fall back
+        to XLA for hooks its kernels cannot express); without, it reports
+        the backend's mechanisms.  Surfaced to users through
+        ``MiningExecutor.plan_reports()``.
+        """
+        return {
+            "backend": self.name,
+            "compaction": self.compaction,
+            "compaction_passes": self.compaction_passes,
+            "grid_contract": self.grid_contract,
+            "extend_vertex": "xla",
+            "extend_pruned": "xla",
+            "extend_edge": "xla",
+        }
+
     # -- shared ragged primitives -----------------------------------------
 
     def expand_ragged(self, counts: jnp.ndarray, capacity: int):

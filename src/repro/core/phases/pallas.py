@@ -38,30 +38,71 @@ Notes:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.api import (GraphCtx, MiningApp, resolve_kernel_predicate,
                             resolve_state_kernel)
 from repro.core.embedding_list import EmbeddingLevel
-from repro.core.phases.reference import (ReferenceBackend, vertex_add_mask,
+from repro.core.phases.reference import (ReferenceBackend, edge_vertex_slots,
+                                         vertex_add_mask,
                                          vertex_ext_degrees)
-from repro.kernels.extend_fused import fused_extend, fused_extend_pruned
+from repro.kernels.extend_fused import (fused_extend, fused_extend_edge,
+                                        fused_extend_pruned)
+from repro.kernels.runtime import resolve_interpret
 
 
 class PallasExtendBackend(ReferenceBackend):
     """Reference pipeline with the vertex EXTEND enumeration fused."""
 
     name = "pallas"
+    compaction = "sequential-smem"
+    compaction_passes = 1
+    grid_contract = "sequential"
+
+    # the extend_pruned entry point (bound so the MP subclass swaps only
+    # this, keeping every line of input prep shared)
+    _pruned_kernel = staticmethod(fused_extend_pruned)
 
     def __init__(self, interpret: bool | None = None, block_c: int = 512):
         self.interpret = interpret
         self.block_c = block_c
 
     def _use_interpret(self) -> bool:
-        if self.interpret is None:
-            return jax.default_backend() != "tpu"
-        return self.interpret
+        return resolve_interpret(self.interpret)
+
+    # -- capability report -------------------------------------------------
+
+    @staticmethod
+    def _edge_fusible(ctx: GraphCtx | None, app: MiningApp) -> bool:
+        """The fused edge kernel handles canonical test + per-vertex eager
+        mask; a general batch ``to_add`` hook forces the XLA fallback."""
+        app_ok = app.to_add is None or app.to_add_vertex_mask is not None
+        if ctx is None:
+            return app_ok
+        return app_ok and ctx.edge_uid is not None and ctx.usrc is not None
+
+    def capabilities(self, app: MiningApp | None = None) -> dict:
+        caps = super().capabilities(app)
+        caps["extend_vertex"] = "fused-kernel"
+        if app is None:
+            caps["extend_pruned"] = "fused-kernel"
+            caps["extend_edge"] = "fused-kernel"
+            return caps
+        if app.kind == "vertex":
+            caps["extend_edge"] = "n/a"
+            ks = range(2, max(app.max_size, 3))
+            if all(resolve_kernel_predicate(app, k) is not None for k in ks):
+                caps["extend_pruned"] = "fused-kernel"
+            else:
+                caps["extend_pruned"] = "xla-fallback:no-kernel-predicate"
+        else:
+            caps["extend_pruned"] = "n/a"
+            caps["extend_vertex"] = "n/a"
+            if self._edge_fusible(None, app):
+                caps["extend_edge"] = "fused-kernel"
+            else:
+                caps["extend_edge"] = "xla-fallback:batch-to-add"
+        return caps
 
     @staticmethod
     def _kernel_inputs(ctx: GraphCtx, app: MiningApp, emb: jnp.ndarray,
@@ -99,8 +140,19 @@ class PallasExtendBackend(ReferenceBackend):
             parent = emb[row_c]
             st = (jnp.zeros(u.shape, jnp.int32) if state is None
                   else state[row_c])
-            add = pred(tuple(parent[:, j] for j in range(k)), u, src_slot,
-                       st, tuple(conn_b[:, j] for j in range(k))) & live
+            emb_cols = tuple(parent[:, j] for j in range(k))
+            conn_cols = tuple(conn_b[:, j] for j in range(k))
+            if getattr(pred, "needs_labels", False):
+                labels = (ctx.labels if ctx.labels is not None
+                          else jnp.zeros((1,), jnp.int32))
+                nv = labels.shape[0]
+                lab_cols = tuple(labels[jnp.clip(c, 0, nv - 1)]
+                                 for c in emb_cols)
+                lab_u = labels[jnp.clip(u, 0, nv - 1)]
+                add = pred(emb_cols, u, src_slot, st, conn_cols, lab_cols,
+                           lab_u) & live
+            else:
+                add = pred(emb_cols, u, src_slot, st, conn_cols) & live
         else:
             add = vertex_add_mask(ctx, app, emb, row_c, u, src_slot, state,
                                   live, conn=conn_b)
@@ -141,10 +193,10 @@ class PallasExtendBackend(ReferenceBackend):
             row_slot = jnp.zeros((1,), jnp.int32)
         n_words = pg.n_words if pg is not None else 1
         upd = resolve_state_kernel(app, k)
-        *out, n_surv = fused_extend_pruned(
+        *out, n_surv = self._pruned_kernel(
             ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi, st,
-            bits, row_slot, k=k, cand_cap=cand_cap, out_cap=out_cap,
-            n_steps=ctx.n_steps, n_vertices=ctx.n_vertices,
+            bits, row_slot, ctx.labels, k=k, cand_cap=cand_cap,
+            out_cap=out_cap, n_steps=ctx.n_steps, n_vertices=ctx.n_vertices,
             n_words=n_words, n_rows=n_rows, pred=pred, state_upd=upd,
             conn_mode=conn_mode, block_c=self.block_c,
             interpret=self._use_interpret())
@@ -157,3 +209,44 @@ class PallasExtendBackend(ReferenceBackend):
         level = EmbeddingLevel(vid=vid, idx=idx, n=n_surv, state=st_out)
         new_emb = jnp.concatenate([emb[idx], vid[:, None]], axis=1)
         return level, new_emb, total
+
+    def _edge_candidates(self, ctx: GraphCtx, app: MiningApp, v0, vid, his,
+                         eid, n_valid: jnp.ndarray, cand_cap: int):
+        """Edge-induced enumeration, fused (paper §5.2 for the FSM path).
+
+        The inspection-scale work (slot freshness, toExtend mask, degree
+        prefix sum — all [cap, E+1]) stays in XLA; the candidate-scale
+        work (ragged expand, CSR/uid gathers, canonical-edge test, eager
+        per-vertex toAdd mask) runs in one tile-independent kernel, so
+        dead candidates cost one VMEM lane instead of five HBM columns.
+        Apps with a general batch ``to_add`` (not expressible as a
+        per-vertex mask) fall back to the reference enumeration.
+        """
+        if not self._edge_fusible(ctx, app) or ctx.n_edges == 0 \
+                or vid.shape[0] == 0:
+            return super()._edge_candidates(ctx, app, v0, vid, his, eid,
+                                            n_valid, cand_cap)
+        cap, E = vid.shape
+        n_slots = E + 1
+        slots, fresh = edge_vertex_slots(v0, vid, his)
+        valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+        ext = fresh & valid[:, None]
+        if app.to_extend is not None:
+            ext = ext & app.to_extend(ctx, slots)
+        deg = jnp.where(ext, ctx.degree(slots), 0)
+        counts = deg.reshape(-1).astype(jnp.int32)
+        offsets = jnp.cumsum(counts)                  # inclusive prefix sum
+        starts = offsets - counts
+        total = offsets[-1].astype(jnp.int32)
+        slots_c = jnp.clip(slots, 0, ctx.n_vertices - 1).reshape(-1)
+        vlo = ctx.row_ptr[slots_c]
+        vmask = None
+        if app.to_add_vertex_mask is not None:
+            vmask = app.to_add_vertex_mask(ctx).astype(jnp.int32)
+        row, s, u, new_eid, add = fused_extend_edge(
+            ctx.col_idx, ctx.edge_uid, offsets, starts, slots_c, vlo,
+            eid.reshape(-1), ctx.usrc, ctx.udst, vmask,
+            n_slots=n_slots, cand_cap=cand_cap, n_uedges=ctx.n_uedges,
+            n_vertices=ctx.n_vertices, block_c=self.block_c,
+            interpret=self._use_interpret())
+        return row, s, u, new_eid, add.astype(bool), total

@@ -109,7 +109,11 @@ def apply_kernel_predicate(ctx: GraphCtx, pred, emb: jnp.ndarray,
 
     Connectivity bits are probed here (O(1) against the packed bitmap);
     the Pallas backend traces the *same* ``pred`` inside the extend kernel
-    on its in-VMEM bits, so the two backends stay bitwise equal.
+    on its in-VMEM bits, so the two backends stay bitwise equal.  Labeled
+    predicates (``pred.needs_labels``) additionally receive the parent
+    and candidate labels, gathered with the same clipping as the kernel's
+    label stage (zeros when the graph is unlabeled) — again bitwise
+    equal by construction.
     """
     k = emb.shape[1]
     parent = emb[row_c]
@@ -117,6 +121,13 @@ def apply_kernel_predicate(ctx: GraphCtx, pred, emb: jnp.ndarray,
     conn = tuple(ctx.is_connected(parent[:, j], u) for j in range(k))
     st = (jnp.zeros(u.shape, jnp.int32) if state is None
           else state[row_c])
+    if getattr(pred, "needs_labels", False):
+        labels = (ctx.labels if ctx.labels is not None
+                  else jnp.zeros((1,), jnp.int32))
+        nv = labels.shape[0]
+        lab_cols = tuple(labels[jnp.clip(c, 0, nv - 1)] for c in emb_cols)
+        lab_u = labels[jnp.clip(u, 0, nv - 1)]
+        return pred(emb_cols, u, src_slot, st, conn, lab_cols, lab_u) & live
     return pred(emb_cols, u, src_slot, st, conn) & live
 
 
@@ -296,7 +307,12 @@ def _edge_candidates(ctx: GraphCtx, app: MiningApp,
     e_src = ctx.usrc[e_uid]
     e_dst = ctx.udst[e_uid]
     add = is_auto_canonical_edge(ctx, eids_row, new_eid, w, u, e_src, e_dst)
-    if app.to_add is not None:
+    if app.to_add_vertex_mask is not None:
+        # per-candidate-vertex eager mask (e.g. FSM's label-frequency
+        # prune) — the form the fused edge kernel applies in-VMEM
+        vm = app.to_add_vertex_mask(ctx)
+        add = add & vm[jnp.clip(u, 0, ctx.n_vertices - 1)]
+    elif app.to_add is not None:
         add = add & app.to_add(ctx, slots[row], u, None)
     add = add & live
     return row, s, u, new_eid, add, total
@@ -316,6 +332,19 @@ def candidate_bound_edge(ctx, app, v0, vid, his, n_valid):
     return jnp.sum(deg)
 
 
+def finish_extend_edge(row, s, u, new_eid, add, out_cap: int):
+    """Compact surviving edge candidates into the next SoA level."""
+    gather, n_new = compact_mask(add, out_cap)
+    live_out = jnp.arange(out_cap) < n_new
+    return EmbeddingLevel(
+        vid=jnp.where(live_out, u[gather], -1).astype(jnp.int32),
+        idx=jnp.where(live_out, row[gather], 0).astype(jnp.int32),
+        n=n_new,
+        his=jnp.where(live_out, s[gather], 0).astype(jnp.int32),
+        eid=jnp.where(live_out, new_eid[gather], -1).astype(jnp.int32),
+    )
+
+
 def extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap, out_cap):
     """Produce the next edge-induced SoA level (vid, his, idx, eid).
 
@@ -324,16 +353,7 @@ def extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap, out_cap):
     """
     row, s, u, new_eid, add, total = _edge_candidates(
         ctx, app, v0, vid, his, eid, n_valid, cand_cap)
-    gather, n_new = compact_mask(add, out_cap)
-    live_out = jnp.arange(out_cap) < n_new
-    level = EmbeddingLevel(
-        vid=jnp.where(live_out, u[gather], -1).astype(jnp.int32),
-        idx=jnp.where(live_out, row[gather], 0).astype(jnp.int32),
-        n=n_new,
-        his=jnp.where(live_out, s[gather], 0).astype(jnp.int32),
-        eid=jnp.where(live_out, new_eid[gather], -1).astype(jnp.int32),
-    )
-    return level, total
+    return finish_extend_edge(row, s, u, new_eid, add, out_cap), total
 
 
 # ---------------------------------------------------------------------------
@@ -714,17 +734,26 @@ class ReferenceBackend(PhaseBackend):
                                               new_state=new_st)
         return level, new_emb, total
 
-    # -- edge EXTEND
+    # -- edge EXTEND (enumeration is the backend-swappable step, like
+    #    _vertex_candidates)
+    def _edge_candidates(self, ctx, app, v0, vid, his, eid, n_valid,
+                         cand_cap):
+        return _edge_candidates(ctx, app, v0, vid, his, eid, n_valid,
+                                cand_cap)
+
     def candidate_bound_edge(self, ctx, app, v0, vid, his, n_valid):
         return candidate_bound_edge(ctx, app, v0, vid, his, n_valid)
 
     def inspect_edge(self, ctx, app, v0, vid, his, eid, n_valid, cand_cap):
-        return inspect_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap)
+        _, _, _, _, add, total = self._edge_candidates(
+            ctx, app, v0, vid, his, eid, n_valid, cand_cap)
+        return total, jnp.sum(add.astype(jnp.int32))
 
     def extend_edge(self, ctx, app, v0, vid, his, eid, n_valid, cand_cap,
                     out_cap):
-        return extend_edge(ctx, app, v0, vid, his, eid, n_valid, cand_cap,
-                           out_cap)
+        row, s, u, new_eid, add, total = self._edge_candidates(
+            ctx, app, v0, vid, his, eid, n_valid, cand_cap)
+        return finish_extend_edge(row, s, u, new_eid, add, out_cap), total
 
     # -- REDUCE / FILTER
     def reduce_count(self, ctx, app, emb, n_valid, state):

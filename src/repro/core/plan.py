@@ -148,26 +148,36 @@ class MiningPlan:
                    n_edges=int(d.get("n_edges", 0)))
 
 
-def plan_app_key(app, backend_name: str, fuse_filter: bool = True) -> str:
+def plan_app_key(app, backend_name: str, fuse_filter: bool = True,
+                 compaction: str = "xla-scan") -> str:
     """App/backend identity *without* the graph — the transfer axis.
 
     Everything capacity-relevant about the app (including
     ``min_support`` and the compiled ``plan_key``) but no graph digest
     and no cap0: plans recorded under the same ``app_key`` on different
     graphs are capacity schedules for the *same* computation, so their
-    per-level shapes are comparable once rescaled by worklist size."""
+    per-level shapes are comparable once rescaled by worklist size.
+
+    ``compaction`` is the backend's survivor-offset strategy
+    (``PhaseBackend.compaction``): it sizes auxiliary buffers (the
+    two-pass backend's tile-count vector scales with ``cand_cap``), so a
+    plan captured under one compaction contract must not replay under
+    another even when the backend name is reused in a custom registry."""
     fields = (app.name, app.kind, app.max_size, app.use_dag,
               app.needs_reduce, app.needs_filter, app.support_mode,
               app.max_patterns, app.min_support, app.plan_key,
-              app.directed_worklist, backend_name, bool(fuse_filter))
+              app.directed_worklist, backend_name, bool(fuse_filter),
+              str(compaction))
     return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
 
 
 def plan_signature(graph_digest: str, app, backend_name: str, cap0: int,
-                   fuse_filter: bool = True) -> str:
+                   fuse_filter: bool = True,
+                   compaction: str = "xla-scan") -> str:
     """Stable identity of (graph, app knobs, backend, block capacity)."""
     fields = (graph_digest,
-              plan_app_key(app, backend_name, fuse_filter), int(cap0))
+              plan_app_key(app, backend_name, fuse_filter, compaction),
+              int(cap0))
     return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
 
 
@@ -615,11 +625,12 @@ class MiningExecutor:
         self.cache = cache
         self.max_retries = max_retries
         self.kind = miner.app.kind
+        compaction = getattr(miner.backend, "compaction", "xla-scan")
         self.signature = plan_signature(miner.graph_digest(), miner.app,
                                         miner.backend.name, self.cap0,
-                                        miner.fuse_filter)
+                                        miner.fuse_filter, compaction)
         self.app_key = plan_app_key(miner.app, miner.backend.name,
-                                    miner.fuse_filter)
+                                    miner.fuse_filter, compaction)
         self._plan = plan
         if self._plan is None and cache is not None:
             self._plan = cache.get(self.signature)

@@ -1,4 +1,8 @@
 from repro.kernels.extend_fused.ops import (fused_extend,
-                                            fused_extend_pruned)
-from repro.kernels.extend_fused.ref import (fused_extend_pruned_ref,
+                                            fused_extend_edge,
+                                            fused_extend_pruned,
+                                            fused_extend_pruned_mp)
+from repro.kernels.extend_fused.ref import (fused_extend_edge_ref,
+                                            fused_extend_pruned_mp_ref,
+                                            fused_extend_pruned_ref,
                                             fused_extend_ref)

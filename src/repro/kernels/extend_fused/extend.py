@@ -21,6 +21,20 @@ grid tiles the candidate slots.  Every probe step is one vectorized
 gather + compare + select over a (1, block_c) lane tile — the same
 VPU-bound shape as ``kernels/intersect``.  Runs under ``interpret=True``
 on CPU.
+
+Two compaction contracts exist for the eager-pruning variant:
+
+  * :func:`fused_extend_pruned_pallas` — **sequential-grid** compaction:
+    the running survivor offset lives in SMEM scratch and is carried
+    tile-to-tile, which is only legal when grid tiles execute in order
+    (TPU / interpret mode).
+  * :func:`fused_extend_pruned_mp_pallas` — **concurrent-grid** two-pass
+    compaction: pass 1 writes only a per-tile survivor count, the host
+    exclusive-scans tile counts into per-tile bases, pass 2 re-runs the
+    (deterministic) predicate and masked-scatters survivors at their
+    final offsets.  Zero cross-tile communication; every tile touches
+    disjoint output lanes, so the kernels are legal on architectures
+    that launch grid tiles concurrently (GPU-style).
 """
 from __future__ import annotations
 
@@ -42,6 +56,10 @@ def _take_tile(tile, idx2d):
     """Gather a computed [1, block] tile at a [1, block] index tile."""
     return jnp.take(tile.reshape(-1), idx2d.reshape(-1),
                     axis=0).reshape(idx2d.shape)
+
+
+def _rup(x, q):
+    return -(-x // q) * q
 
 
 def _fused_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
@@ -119,7 +137,7 @@ def fused_extend_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     """
     n_parents = offsets.shape[0]
     m = col_idx.shape[0]
-    p_pad = -(-n_parents // 128) * 128
+    p_pad = _rup(n_parents, 128)
 
     def pad_p(x):
         return jnp.pad(x, (0, p_pad - n_parents))
@@ -128,9 +146,9 @@ def fused_extend_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
         pad_p, (offsets.astype(jnp.int32), starts.astype(jnp.int32),
                 emb_flat.astype(jnp.int32), vlo.astype(jnp.int32),
                 vhi.astype(jnp.int32)))
-    m_pad = -(-m // 128) * 128
+    m_pad = _rup(m, 128)
     col = jnp.pad(col_idx, (0, m_pad - m), constant_values=2**31 - 1)
-    c_pad = -(-cand_cap // block_c) * block_c
+    c_pad = _rup(cand_cap, block_c)
     n_steps_p = max(1, math.ceil(math.log2(n_parents + 1)))
 
     full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
@@ -153,37 +171,25 @@ def fused_extend_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
 # Eager in-kernel pruning: predicate + stream compaction fused into EXTEND
 
 
-def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
-                          col_ref, state_ref, bits_ref, slot_ref,
-                          *refs, k: int, m: int, n_parents: int,
-                          n_steps: int, n_steps_p: int, block_c: int,
-                          cand_cap: int, out_len: int, n_tiles: int,
-                          n_vertices: int, n_words: int, n_rows: int,
-                          conn_mode: str, pred, state_upd):
-    # the compacted-state output exists only for state-updating apps —
-    # stateless ones (state_upd None, the common case) skip the extra
-    # buffer, gather, and write entirely (static specialization)
-    if state_upd is not None:
-        row_ref, u_ref, st_ref, cnt_ref, base_ref = refs
-    else:
-        row_ref, u_ref, cnt_ref, base_ref = refs
-        st_ref = None
-    offsets = offsets_ref[...]
-    starts = starts_ref[...]
-    emb_flat = emb_ref[...]
-    vlo = vlo_ref[...]
-    vhi = vhi_ref[...]
-    col = col_ref[...]
-    state = state_ref[...]
-    bits = bits_ref[...]
-    row_slot = slot_ref[...]
+def _tile_enumerate(i, offsets, starts, emb_flat, vlo, vhi, col, state,
+                    bits, row_slot, labels, *, k: int, m: int,
+                    n_parents: int, n_steps: int, n_steps_p: int,
+                    block_c: int, cand_cap: int, n_vertices: int,
+                    n_words: int, n_rows: int, conn_mode: str, pred,
+                    state_upd, needs_labels: bool):
+    """Stages 1-4 of the pruned extend, for grid tile ``i``.
 
-    i = pl.program_id(0)
+    Enumerate one (1, block_c) candidate tile (parent search + CSR
+    gather), probe k-way connectivity, evaluate the app's elementwise
+    predicate (and optional state update).  Entirely tile-local — no
+    refs, no scratch, no cross-tile state — so the sequential kernel and
+    both passes of the concurrent-grid two-pass kernel share it
+    verbatim, which is what makes pass 2's predicate replay bitwise
+    equal to pass 1's counts.
 
-    @pl.when(i == 0)
-    def _init():
-        base_ref[0] = 0
-
+    Returns ``(row, u, mask, new_st)`` as (1, block_c) tiles (``new_st``
+    is None for stateless apps).
+    """
     slot = (i * block_c
             + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1))
 
@@ -217,7 +223,7 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
     #   "search" — no pack: CSR binary search only.
     base_p = row * k
     u_c = jnp.clip(u, 0, n_vertices - 1)
-    emb_cols, conn_cols = [], []
+    emb_cols, conn_cols, lab_cols = [], [], []
 
     def csr_probe(pj):
         lo_b = _take(vlo, pj)
@@ -253,22 +259,42 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
         found = found & (ev >= 0) & (u >= 0)
         emb_cols.append(ev)
         conn_cols.append(found)
+        if needs_labels:
+            lab_cols.append(_take(labels, ev_c))
 
     # stage 4 — the app's eager toAdd / symmetry-break predicate (and the
     # optional state update — e.g. the multi-pattern branch bitmap),
     # traced directly into the kernel on the (1, block_c) lane tiles.
     # Shared subexpressions between pred and state_upd (the typical case:
-    # the bitmap IS the predicate) are CSE'd by the compiler.
+    # the bitmap IS the predicate) are CSE'd by the compiler.  Labeled
+    # predicates (``pred.needs_labels``) get one extra gather stage —
+    # candidate/parent labels, the same word-gather shape as the
+    # adjacency bitmap probe.
     st = _take(state, jnp.clip(row, 0, n_parents // k - 1))
-    mask = pred(tuple(emb_cols), u, src_slot, st, tuple(conn_cols)) & live
+    if needs_labels:
+        lab_u = _take(labels, u_c)
+        mask = pred(tuple(emb_cols), u, src_slot, st, tuple(conn_cols),
+                    tuple(lab_cols), lab_u) & live
+    else:
+        mask = pred(tuple(emb_cols), u, src_slot, st,
+                    tuple(conn_cols)) & live
+    new_st = None
     if state_upd is not None:
         new_st = state_upd(tuple(emb_cols), u, src_slot, st,
                            tuple(conn_cols)).astype(jnp.int32)
+    return row, u, mask, new_st
 
-    # stage 5 — in-tile exclusive-scan stream compaction.  incl[j] is the
-    # 1-based output rank of slot j among this tile's survivors; the
-    # stable compaction gather sel[t] = "first j with incl[j] >= t+1" is
-    # the same branchless binary search as stage 1, over the tile.
+
+def _tile_compact(mask, block_c: int):
+    """Stage 5 — in-tile exclusive-scan stream compaction (tile-local).
+
+    ``incl[j]`` is the 1-based output rank of slot j among this tile's
+    survivors; the stable compaction gather sel[t] = "first j with
+    incl[j] >= t+1" is the same branchless binary search as stage 1,
+    over the tile.  Returns ``(cnt, sel, t)``: survivor count, stable
+    gather indices, and the 1-based lane rank (``t <= cnt`` is the
+    live-lane mask).
+    """
     mi = mask.astype(jnp.int32)
     incl = jnp.cumsum(mi, axis=1)
     cnt = incl[0, block_c - 1]
@@ -282,6 +308,33 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
         lo_t = jnp.where(go_right, mid + 1, lo_t)
         hi_t = jnp.where(go_right, hi_t, mid - 1)
     sel = jnp.clip(lo_t, 0, block_c - 1)
+    return cnt, sel, t
+
+
+def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
+                          col_ref, state_ref, bits_ref, slot_ref, lab_ref,
+                          *refs, out_len: int, block_c: int,
+                          state_upd, **statics):
+    # the compacted-state output exists only for state-updating apps —
+    # stateless ones (state_upd None, the common case) skip the extra
+    # buffer, gather, and write entirely (static specialization)
+    if state_upd is not None:
+        row_ref, u_ref, st_ref, cnt_ref, base_ref = refs
+    else:
+        row_ref, u_ref, cnt_ref, base_ref = refs
+        st_ref = None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        base_ref[0] = 0
+
+    row, u, mask, new_st = _tile_enumerate(
+        i, offsets_ref[...], starts_ref[...], emb_ref[...], vlo_ref[...],
+        vhi_ref[...], col_ref[...], state_ref[...], bits_ref[...],
+        slot_ref[...], lab_ref[...], block_c=block_c, state_upd=state_upd,
+        **statics)
+    cnt, sel, t = _tile_compact(mask, block_c)
     lane_live = t <= cnt
     comp_row = jnp.where(lane_live, _take_tile(row, sel), 0)
     comp_u = jnp.where(lane_live, _take_tile(u, sel), -1)
@@ -302,11 +355,59 @@ def _pruned_extend_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
     cnt_ref[0] = base + cnt
 
 
+def _prep_pruned_inputs(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
+                        bits, row_slot, labels, *, k: int, cand_cap: int,
+                        out_cap: int, block_c: int):
+    """Shared input padding for the pruned-extend kernel family.
+
+    Returns ``(inputs, specs, dims)``: the padded VMEM-ready operand
+    tuple, the matching ``full``-BlockSpec list, and the static shape
+    dictionary both the sequential and the two-pass wrappers consume.
+    """
+    n_parents = offsets.shape[0]
+    m = col_idx.shape[0]
+    cap = n_parents // k
+    p_pad = _rup(n_parents, 128)
+
+    def pad_to(x, size, fill=0):
+        return jnp.pad(x, (0, size - x.shape[0]), constant_values=fill)
+
+    offsets_p = pad_to(offsets.astype(jnp.int32), p_pad)
+    starts_p = pad_to(starts.astype(jnp.int32), p_pad)
+    emb_p = pad_to(emb_flat.astype(jnp.int32), p_pad)
+    vlo_p = pad_to(vlo.astype(jnp.int32), p_pad)
+    vhi_p = pad_to(vhi.astype(jnp.int32), p_pad)
+    m_pad = _rup(m, 128)
+    col = pad_to(col_idx, m_pad, fill=2**31 - 1)
+    cap_pad = _rup(max(cap, 1), 128)
+    state_p = pad_to(state.astype(jnp.int32), cap_pad)
+    b_pad = _rup(max(int(bits.shape[0]), 1), 128)
+    bits_p = pad_to(bits.astype(jnp.uint32), b_pad)
+    s_pad = _rup(max(int(row_slot.shape[0]), 1), 128)
+    slot_p = pad_to(row_slot.astype(jnp.int32), s_pad, fill=-1)
+    if labels is None:
+        labels = jnp.zeros((1,), jnp.int32)
+    l_pad = _rup(max(int(labels.shape[0]), 1), 128)
+    lab_p = pad_to(labels.astype(jnp.int32), l_pad)
+    c_pad = _rup(cand_cap, block_c)
+    dims = dict(
+        n_parents=n_parents, m=m, c_pad=c_pad, n_tiles=c_pad // block_c,
+        out_len=_rup(out_cap, block_c) + block_c,
+        n_steps_p=max(1, math.ceil(math.log2(n_parents + 1))))
+    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    specs = ([full(p_pad)] * 5
+             + [full(m_pad), full(cap_pad), full(b_pad), full(s_pad),
+                full(l_pad)])
+    inputs = (offsets_p, starts_p, emb_p, vlo_p, vhi_p, col, state_p,
+              bits_p, slot_p, lab_p)
+    return inputs, specs, dims
+
+
 def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                                starts: jnp.ndarray, emb_flat: jnp.ndarray,
                                vlo: jnp.ndarray, vhi: jnp.ndarray,
                                state: jnp.ndarray, bits: jnp.ndarray,
-                               row_slot: jnp.ndarray, *,
+                               row_slot: jnp.ndarray, labels=None, *,
                                k: int, cand_cap: int, out_cap: int,
                                n_steps: int, n_vertices: int, n_words: int,
                                n_rows: int, pred, state_upd=None,
@@ -338,61 +439,41 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     back to the CSR binary search), or ``"search"`` (CSR only; ``bits`` /
     ``row_slot`` may be dummies).
 
+    ``labels`` (i32[n_vertices], optional) feeds labeled predicates:
+    when ``pred.needs_labels`` is set, the kernel gathers the candidate's
+    and every parent slot's label and passes them as two extra predicate
+    arguments ``(lab_cols, lab_u)``.
+
     The cross-tile output offset lives in SMEM scratch and relies on the
     sequential TPU grid (interpret mode is likewise sequential); this
-    kernel is not safe on architectures with concurrent grid tiles.
+    kernel is not safe on architectures with concurrent grid tiles — use
+    :func:`fused_extend_pruned_mp_pallas` there.
     """
-    n_parents = offsets.shape[0]
-    m = col_idx.shape[0]
-    cap = n_parents // k
-
-    def rup(x, q):
-        return -(-x // q) * q
-
-    p_pad = rup(n_parents, 128)
-
-    def pad_to(x, size, fill=0):
-        return jnp.pad(x, (0, size - x.shape[0]), constant_values=fill)
-
-    offsets_p = pad_to(offsets.astype(jnp.int32), p_pad)
-    starts_p = pad_to(starts.astype(jnp.int32), p_pad)
-    emb_p = pad_to(emb_flat.astype(jnp.int32), p_pad)
-    vlo_p = pad_to(vlo.astype(jnp.int32), p_pad)
-    vhi_p = pad_to(vhi.astype(jnp.int32), p_pad)
-    m_pad = rup(m, 128)
-    col = pad_to(col_idx, m_pad, fill=2**31 - 1)
-    cap_pad = rup(max(cap, 1), 128)
-    state_p = pad_to(state.astype(jnp.int32), cap_pad)
-    b_pad = rup(max(int(bits.shape[0]), 1), 128)
-    bits_p = pad_to(bits.astype(jnp.uint32), b_pad)
-    s_pad = rup(max(int(row_slot.shape[0]), 1), 128)
-    slot_p = pad_to(row_slot.astype(jnp.int32), s_pad, fill=-1)
-    c_pad = rup(cand_cap, block_c)
-    n_tiles = c_pad // block_c
-    out_len = rup(out_cap, block_c) + block_c
-    n_steps_p = max(1, math.ceil(math.log2(n_parents + 1)))
-
+    needs_labels = bool(getattr(pred, "needs_labels", False))
+    inputs, specs, dims = _prep_pruned_inputs(
+        col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
+        row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
+        block_c=block_c)
+    out_len = dims["out_len"]
     full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
     buf = jax.ShapeDtypeStruct((out_len,), jnp.int32)
     n_bufs = 3 if state_upd is not None else 2
     outs = pl.pallas_call(
-        functools.partial(_pruned_extend_kernel, k=k, m=m,
-                          n_parents=n_parents, n_steps=n_steps,
-                          n_steps_p=n_steps_p, block_c=block_c,
+        functools.partial(_pruned_extend_kernel, k=k, m=dims["m"],
+                          n_parents=dims["n_parents"], n_steps=n_steps,
+                          n_steps_p=dims["n_steps_p"], block_c=block_c,
                           cand_cap=cand_cap, out_len=out_len,
-                          n_tiles=n_tiles, n_vertices=n_vertices,
+                          n_vertices=n_vertices,
                           n_words=n_words, n_rows=n_rows,
                           conn_mode=conn_mode, pred=pred,
-                          state_upd=state_upd),
-        grid=(n_tiles,),
-        in_specs=[full(p_pad)] * 5 + [full(m_pad), full(cap_pad),
-                                      full(b_pad), full(s_pad)],
+                          state_upd=state_upd, needs_labels=needs_labels),
+        grid=(dims["n_tiles"],),
+        in_specs=specs,
         out_specs=[full(out_len)] * n_bufs + [full(1)],
         out_shape=[buf] * n_bufs + [jax.ShapeDtypeStruct((1,), jnp.int32)],
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
-    )(offsets_p, starts_p, emb_p, vlo_p, vhi_p, col, state_p, bits_p,
-      slot_p)
+    )(*inputs)
     *bufs, cnt = outs
     n_surv = cnt[0]
     live = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
@@ -402,3 +483,312 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     if state_upd is not None:
         out = out + (jnp.where(live, bufs[2][:out_cap], 0),)
     return out + (n_surv,)
+
+
+# ---------------------------------------------------------------------------
+# Concurrent-grid (massively-parallel) two-pass scan compaction
+
+
+def _mp_count_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
+                     col_ref, state_ref, bits_ref, slot_ref, lab_ref,
+                     cnt_ref, *, block_c: int, **statics):
+    """Pass 1: per-tile survivor count.  No scratch, no cross-tile state —
+    every tile writes exactly its own one-element output block, so the
+    grid may execute tiles in any order or all at once."""
+    i = pl.program_id(0)
+    _, _, mask, _ = _tile_enumerate(
+        i, offsets_ref[...], starts_ref[...], emb_ref[...], vlo_ref[...],
+        vhi_ref[...], col_ref[...], state_ref[...], bits_ref[...],
+        slot_ref[...], lab_ref[...], block_c=block_c, **statics)
+    cnt_ref[0] = jnp.sum(mask.astype(jnp.int32))
+
+
+def _mp_scatter_kernel(offsets_ref, starts_ref, emb_ref, vlo_ref, vhi_ref,
+                       col_ref, state_ref, bits_ref, slot_ref, lab_ref,
+                       bases_ref, *refs, out_len: int, block_c: int,
+                       state_upd, **statics):
+    """Pass 2: re-run the (deterministic) predicate, compact in-tile, and
+    masked-scatter this tile's survivors at their final offsets.
+
+    ``bases_ref[i]`` is the exclusive scan of pass-1 tile counts, so the
+    write windows ``[base_i, base_i + cnt_i)`` of distinct tiles are
+    disjoint by construction; each lane past ``cnt_i`` is masked out of
+    the store entirely (no read-modify-write), which keeps the kernel
+    race-free on a concurrent grid.  Tiles whose base lands past the
+    output clamp into the tail headroom (indices >= out_cap — discarded
+    by the caller, and the true survivor total flags the overflow).
+    """
+    if state_upd is not None:
+        row_ref, u_ref, st_ref = refs
+    else:
+        row_ref, u_ref = refs
+        st_ref = None
+    i = pl.program_id(0)
+    row, u, mask, new_st = _tile_enumerate(
+        i, offsets_ref[...], starts_ref[...], emb_ref[...], vlo_ref[...],
+        vhi_ref[...], col_ref[...], state_ref[...], bits_ref[...],
+        slot_ref[...], lab_ref[...], block_c=block_c, state_upd=state_upd,
+        **statics)
+    cnt, sel, t = _tile_compact(mask, block_c)
+    lane_live = (t <= cnt).reshape(block_c)
+    comp_row = _take_tile(row, sel).reshape(block_c)
+    comp_u = _take_tile(u, sel).reshape(block_c)
+    base = bases_ref[i]
+    bw = jnp.minimum(base, out_len - block_c)
+    idx = (pl.dslice(bw, block_c),)
+    pl.store(row_ref, idx, comp_row, mask=lane_live)
+    pl.store(u_ref, idx, comp_u, mask=lane_live)
+    if st_ref is not None:
+        comp_st = _take_tile(new_st, sel).reshape(block_c)
+        pl.store(st_ref, idx, comp_st, mask=lane_live)
+
+
+def fused_extend_pruned_mp_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
+                                  starts: jnp.ndarray, emb_flat: jnp.ndarray,
+                                  vlo: jnp.ndarray, vhi: jnp.ndarray,
+                                  state: jnp.ndarray, bits: jnp.ndarray,
+                                  row_slot: jnp.ndarray, labels=None, *,
+                                  k: int, cand_cap: int, out_cap: int,
+                                  n_steps: int, n_vertices: int,
+                                  n_words: int, n_rows: int, pred,
+                                  state_upd=None,
+                                  conn_mode: str = "search",
+                                  block_c: int = 512,
+                                  interpret: bool = False):
+    """Concurrent-grid fused EXTEND: two-pass tile-count scan compaction.
+
+    Same contract (arguments, returns, bitwise results) as
+    :func:`fused_extend_pruned_pallas`, but with the cross-tile exclusive
+    scan lifted out of the kernel so no tile ever communicates with
+    another — the compaction contract of a massively-parallel (GPU-style)
+    grid where tiles run concurrently:
+
+      pass 1   every tile independently enumerates + filters its
+               candidates and writes ONE number: its survivor count
+               (``i32[n_tiles]`` — the tile-count buffer, sized by the
+               planner's ``cand_cap``).
+      scan     the host/XLA layer exclusive-scans the tile counts into
+               per-tile base offsets; the scan total is the true global
+               survivor count, from which the caller's overflow flag
+               (``n_surv > out_cap``) is computed — grow-and-retry works
+               unchanged.
+      pass 2   every tile re-runs the (cheap, deterministic) predicate,
+               compacts in-tile, and masked-scatters its survivors —
+               including the compacted ``state`` column — at final
+               offsets ``[base_i, base_i + cnt_i)``.  Windows are
+               disjoint by construction of the scan, so there is zero
+               cross-tile communication and no store ordering
+               requirement.
+
+    The sequential kernel's SMEM running offset (tile-to-tile carry)
+    does not exist anywhere in this pair of kernels.
+    """
+    needs_labels = bool(getattr(pred, "needs_labels", False))
+    inputs, specs, dims = _prep_pruned_inputs(
+        col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
+        row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
+        block_c=block_c)
+    n_tiles, out_len = dims["n_tiles"], dims["out_len"]
+    statics = dict(k=k, m=dims["m"], n_parents=dims["n_parents"],
+                   n_steps=n_steps, n_steps_p=dims["n_steps_p"],
+                   block_c=block_c, cand_cap=cand_cap,
+                   n_vertices=n_vertices, n_words=n_words, n_rows=n_rows,
+                   conn_mode=conn_mode, pred=pred,
+                   needs_labels=needs_labels)
+    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+
+    # pass 1 — per-tile survivor counts (each tile owns one output block)
+    counts = pl.pallas_call(
+        functools.partial(_mp_count_kernel, state_upd=None, **statics),
+        grid=(n_tiles,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+        interpret=interpret,
+    )(*inputs)
+
+    # host/XLA exclusive scan: per-tile bases + the global survivor total
+    incl = jnp.cumsum(counts)
+    n_surv = incl[n_tiles - 1]
+    bases = incl - counts
+    t_pad = _rup(n_tiles, 128)
+    bases_p = jnp.pad(bases, (0, t_pad - n_tiles))
+
+    # pass 2 — masked scatter at final offsets (disjoint windows)
+    buf = jax.ShapeDtypeStruct((out_len,), jnp.int32)
+    n_bufs = 3 if state_upd is not None else 2
+    bufs = pl.pallas_call(
+        functools.partial(_mp_scatter_kernel, out_len=out_len,
+                          state_upd=state_upd, **statics),
+        grid=(n_tiles,),
+        in_specs=specs + [full(t_pad)],
+        out_specs=[full(out_len)] * n_bufs,
+        out_shape=[buf] * n_bufs,
+        interpret=interpret,
+    )(*inputs, bases_p)
+
+    live = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
+    out = (jnp.where(live, bufs[0][:out_cap], 0),
+           jnp.where(live, bufs[1][:out_cap], -1))
+    if state_upd is not None:
+        out = out + (jnp.where(live, bufs[2][:out_cap], 0),)
+    return out + (n_surv,)
+
+
+# ---------------------------------------------------------------------------
+# Edge-induced pipeline: fused candidate enumeration + canonical test
+
+
+def _edge_extend_kernel(offsets_ref, starts_ref, slots_ref, vlo_ref,
+                        col_ref, uid_ref, eids_ref, esrc_ref, edst_ref,
+                        vmask_ref, row_ref, s_ref, u_ref, eid_ref, add_ref,
+                        *, n_slots: int, m: int, n_parents: int,
+                        n_uedges: int, n_steps_p: int, block_c: int,
+                        cand_cap: int, n_vertices: int, has_vmask: bool):
+    offsets = offsets_ref[...]
+    starts = starts_ref[...]
+    slots_flat = slots_ref[...]
+    vlo = vlo_ref[...]
+    col = col_ref[...]
+    uid = uid_ref[...]
+    eids = eids_ref[...]
+    esrc = esrc_ref[...]
+    edst = edst_ref[...]
+
+    i = pl.program_id(0)
+    slot = (i * block_c
+            + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1))
+
+    # stage 1 — parent search over the [cap * (E+1)] slot-parent table
+    low = jnp.zeros_like(slot)
+    high = jnp.full_like(slot, n_parents - 1)
+    for _ in range(n_steps_p):
+        mid = (low + high) >> 1
+        val = _take(offsets, jnp.clip(mid, 0, n_parents - 1))
+        go_right = val <= slot
+        low = jnp.where(go_right, mid + 1, low)
+        high = jnp.where(go_right, high, mid - 1)
+    p = jnp.clip(low, 0, n_parents - 1)
+    row = p // n_slots
+    s = p % n_slots
+
+    # stage 2 — candidate + new-edge-uid gather from the CSR chunk
+    rank = slot - _take(starts, p)
+    ptr = jnp.clip(_take(vlo, p) + rank, 0, m - 1)
+    total = offsets[n_parents - 1]
+    live = (slot < total) & (slot < cand_cap)
+    u = jnp.where(live, _take(col, ptr), -1)
+    new_eid = jnp.where(live, _take(uid, ptr), -1)
+    w = _take(slots_flat, p)                    # source vertex
+
+    # stage 3 — edge-canonical test against the row's E existing edges:
+    # gather each edge's uid and endpoints, "neighbour" = shares an
+    # endpoint with the candidate edge (w, u).  Same total-order rule as
+    # is_auto_canonical_edge, evaluated branchlessly per lane.
+    E = n_slots - 1
+    e_rows = n_parents // n_slots * E
+    eid0 = _take(eids, jnp.clip(row * E, 0, e_rows - 1))
+    ok = new_eid > eid0
+    found = jnp.zeros(ok.shape, bool)
+    for j in range(E):
+        eidj = _take(eids, jnp.clip(row * E + j, 0, e_rows - 1))
+        ec = jnp.clip(eidj, 0, max(n_uedges - 1, 0))
+        es = _take(esrc, ec)
+        ed = _take(edst, ec)
+        shares = ((w == es) | (w == ed) | (u == es) | (u == ed))
+        ok = ok & ~(found & (new_eid < eidj))
+        found = found | shares
+        ok = ok & (new_eid != eidj)
+    add = ok & found
+
+    # stage 4 — the app's eager per-vertex toAdd mask (e.g. FSM's
+    # label-frequency pruning), one gather — same shape as the bitmap
+    # word gather of the vertex kernel
+    if has_vmask:
+        vm = vmask_ref[...]
+        add = add & (_take(vm, jnp.clip(u, 0, n_vertices - 1)) != 0)
+    add = add & live
+
+    row_ref[...] = row.reshape(block_c)
+    s_ref[...] = s.reshape(block_c)
+    u_ref[...] = u.reshape(block_c)
+    eid_ref[...] = new_eid.reshape(block_c)
+    add_ref[...] = add.astype(jnp.int32).reshape(block_c)
+
+
+def fused_extend_edge_pallas(col_idx: jnp.ndarray, edge_uid: jnp.ndarray,
+                             offsets: jnp.ndarray, starts: jnp.ndarray,
+                             slots_flat: jnp.ndarray, vlo: jnp.ndarray,
+                             eids_flat: jnp.ndarray, usrc: jnp.ndarray,
+                             udst: jnp.ndarray, vmask=None, *,
+                             n_slots: int, cand_cap: int, n_uedges: int,
+                             n_vertices: int, block_c: int = 512,
+                             interpret: bool = False):
+    """Fused edge-induced candidate enumeration (one kernel).
+
+    Replaces the reference pipeline's XLA enumeration chain
+    (``expand_ragged`` + CSR/uid/endpoint gathers + canonical-edge test)
+    with one VMEM-tiled kernel.  Parent tables are per *slot-parent*
+    (``[cap * n_slots]`` flattened, ``n_slots = E + 1`` vertex slots per
+    embedding): ``offsets``/``starts`` the inclusive prefix sum of
+    per-slot candidate degrees, ``slots_flat`` the slot's vertex,
+    ``vlo`` its CSR row start.  ``eids_flat`` is the ``[cap * E]`` table
+    of existing edge uids; ``usrc``/``udst`` the per-uid endpoints.
+
+    ``vmask`` (i32[n_vertices], optional) is the app's eager per-vertex
+    ``to_add`` mask (``MiningApp.to_add_vertex_mask``), applied in-kernel
+    so pruned candidates never survive to the XLA compaction.
+
+    Returns (row, s, u, new_eid, add) each i32[cand_cap]; lanes past the
+    true candidate total are dead (``add`` 0, ``u``/``new_eid`` -1; the
+    parent coordinates of dead lanes are unspecified, as with
+    ``expand_ragged``).  Tiles are independent — no scratch, no carry —
+    so the kernel is legal on sequential and concurrent grids alike.
+    """
+    n_parents = offsets.shape[0]
+    m = col_idx.shape[0]
+    E = n_slots - 1
+    p_pad = _rup(n_parents, 128)
+
+    def pad_to(x, size, fill=0):
+        return jnp.pad(x, (0, size - x.shape[0]), constant_values=fill)
+
+    offsets_p = pad_to(offsets.astype(jnp.int32), p_pad)
+    starts_p = pad_to(starts.astype(jnp.int32), p_pad)
+    slots_p = pad_to(slots_flat.astype(jnp.int32), p_pad)
+    vlo_p = pad_to(vlo.astype(jnp.int32), p_pad)
+    m_pad = _rup(m, 128)
+    col = pad_to(col_idx, m_pad, fill=2**31 - 1)
+    uid = pad_to(edge_uid.astype(jnp.int32), m_pad, fill=-1)
+    e_pad = _rup(max(int(eids_flat.shape[0]), 1), 128)
+    eids_p = pad_to(eids_flat.astype(jnp.int32), e_pad, fill=-1)
+    ue_pad = _rup(max(n_uedges, 1), 128)
+    usrc_p = pad_to(usrc.astype(jnp.int32), ue_pad, fill=-1)
+    udst_p = pad_to(udst.astype(jnp.int32), ue_pad, fill=-1)
+    has_vmask = vmask is not None
+    if vmask is None:
+        vmask = jnp.zeros((1,), jnp.int32)
+    v_pad = _rup(max(int(vmask.shape[0]), 1), 128)
+    vmask_p = pad_to(vmask.astype(jnp.int32), v_pad)
+    c_pad = _rup(cand_cap, block_c)
+    n_steps_p = max(1, math.ceil(math.log2(n_parents + 1)))
+
+    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    tile = pl.BlockSpec((block_c,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((c_pad,), jnp.int32)
+    row, s, u, new_eid, add = pl.pallas_call(
+        functools.partial(_edge_extend_kernel, n_slots=n_slots, m=m,
+                          n_parents=n_parents, n_uedges=n_uedges,
+                          n_steps_p=n_steps_p, block_c=block_c,
+                          cand_cap=cand_cap, n_vertices=n_vertices,
+                          has_vmask=has_vmask),
+        grid=(c_pad // block_c,),
+        in_specs=[full(p_pad)] * 4 + [full(m_pad)] * 2
+                 + [full(e_pad), full(ue_pad), full(ue_pad), full(v_pad)],
+        out_specs=[tile] * 5,
+        out_shape=[out] * 5,
+        interpret=interpret,
+    )(offsets_p, starts_p, slots_p, vlo_p, col, uid, eids_p, usrc_p,
+      udst_p, vmask_p)
+    return (row[:cand_cap], s[:cand_cap], u[:cand_cap],
+            new_eid[:cand_cap], add[:cand_cap])

@@ -1,54 +1,142 @@
-"""Jitted public wrappers for the fused extend kernels."""
+"""Jitted public wrappers for the fused extend kernels.
+
+Every wrapper takes ``interpret=None`` and resolves it through
+:func:`repro.kernels.runtime.resolve_interpret` *outside* the jit cache
+(env override > explicit argument > off-TPU autodetect), so flipping
+``REPRO_PALLAS_INTERPRET`` between calls is honoured instead of being
+frozen into a stale trace.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.extend_fused.extend import (fused_extend_pallas,
+from repro.kernels.extend_fused.extend import (fused_extend_edge_pallas,
+                                               fused_extend_pallas,
+                                               fused_extend_pruned_mp_pallas,
                                                fused_extend_pruned_pallas)
+from repro.kernels.runtime import resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("k", "cand_cap", "n_steps", "block_c",
                                    "interpret"))
-def fused_extend(col_idx, offsets, starts, emb_flat, vlo, vhi, *, k: int,
-                 cand_cap: int, n_steps: int, block_c: int = 512,
-                 interpret: bool = False):
-    """Fused ragged-expand + CSR gather + k-way adjacency probe.
-
-    Returns (row, u, src_slot, conn_bits) each i32[cand_cap]; see
-    :func:`repro.kernels.extend_fused.extend.fused_extend_pallas`.
-    """
+def _fused_extend_jit(col_idx, offsets, starts, emb_flat, vlo, vhi, *,
+                      k, cand_cap, n_steps, block_c, interpret):
     return fused_extend_pallas(col_idx, offsets, starts, emb_flat, vlo, vhi,
                                k=k, cand_cap=cand_cap, n_steps=n_steps,
                                block_c=block_c, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("k", "cand_cap", "out_cap", "n_steps",
-                                   "n_vertices", "n_words", "n_rows",
-                                   "pred", "state_upd", "conn_mode",
-                                   "block_c", "interpret"))
+def fused_extend(col_idx, offsets, starts, emb_flat, vlo, vhi, *, k: int,
+                 cand_cap: int, n_steps: int, block_c: int = 512,
+                 interpret: bool | None = None):
+    """Fused ragged-expand + CSR gather + k-way adjacency probe.
+
+    Returns (row, u, src_slot, conn_bits) each i32[cand_cap]; see
+    :func:`repro.kernels.extend_fused.extend.fused_extend_pallas`.
+    """
+    return _fused_extend_jit(col_idx, offsets, starts, emb_flat, vlo, vhi,
+                             k=k, cand_cap=cand_cap, n_steps=n_steps,
+                             block_c=block_c,
+                             interpret=resolve_interpret(interpret))
+
+
+_PRUNED_STATICS = ("k", "cand_cap", "out_cap", "n_steps", "n_vertices",
+                   "n_words", "n_rows", "pred", "state_upd", "conn_mode",
+                   "block_c", "interpret")
+
+
+@partial(jax.jit, static_argnames=_PRUNED_STATICS)
+def _fused_extend_pruned_jit(col_idx, offsets, starts, emb_flat, vlo, vhi,
+                             state, bits, row_slot, labels, **kw):
+    return fused_extend_pruned_pallas(col_idx, offsets, starts, emb_flat,
+                                      vlo, vhi, state, bits, row_slot,
+                                      labels, **kw)
+
+
 def fused_extend_pruned(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
-                        bits, row_slot, *, k: int, cand_cap: int,
-                        out_cap: int, n_steps: int, n_vertices: int,
-                        n_words: int, n_rows: int, pred, state_upd=None,
-                        conn_mode: str = "search", block_c: int = 512,
-                        interpret: bool = False):
+                        bits, row_slot, labels=None, *, k: int,
+                        cand_cap: int, out_cap: int, n_steps: int,
+                        n_vertices: int, n_words: int, n_rows: int, pred,
+                        state_upd=None, conn_mode: str = "search",
+                        block_c: int = 512,
+                        interpret: bool | None = None):
     """Eager-pruning fused extend: enumerate + in-kernel ``pred`` filter +
-    stream compaction.  ``conn_mode`` selects the connectivity probe:
-    full bit-packed bitmap, mixed bitmap/CSR (partial packs, via
-    ``row_slot``), or CSR binary search.  ``pred`` is a static
-    elementwise callable (the app's ``to_add_kernel``); ``state_upd``
-    (optional, same form, i32 result — the app's ``update_state_kernel``)
-    computes each survivor's new memo state in the same pass.  Returns
+    stream compaction (sequential-grid SMEM running offset).
+    ``conn_mode`` selects the connectivity probe: full bit-packed bitmap,
+    mixed bitmap/CSR (partial packs, via ``row_slot``), or CSR binary
+    search.  ``pred`` is a static elementwise callable (the app's
+    ``to_add_kernel``); ``state_upd`` (optional, same form, i32 result —
+    the app's ``update_state_kernel``) computes each survivor's new memo
+    state in the same pass.  ``labels`` feeds labeled predicates (those
+    with ``pred.needs_labels``) via an in-kernel label gather.  Returns
     (row, u) compacted to ``out_cap`` plus the true survivor count —
     with ``state_upd``, (row, u, st, n_surv); stateless calls compile
     with no state buffer at all.  See
     :func:`repro.kernels.extend_fused.extend.fused_extend_pruned_pallas`.
     """
-    return fused_extend_pruned_pallas(
+    return _fused_extend_pruned_jit(
         col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
-        row_slot, k=k, cand_cap=cand_cap, out_cap=out_cap, n_steps=n_steps,
-        n_vertices=n_vertices, n_words=n_words, n_rows=n_rows, pred=pred,
-        state_upd=state_upd, conn_mode=conn_mode, block_c=block_c,
-        interpret=interpret)
+        row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
+        n_steps=n_steps, n_vertices=n_vertices, n_words=n_words,
+        n_rows=n_rows, pred=pred, state_upd=state_upd, conn_mode=conn_mode,
+        block_c=block_c, interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=_PRUNED_STATICS)
+def _fused_extend_pruned_mp_jit(col_idx, offsets, starts, emb_flat, vlo,
+                                vhi, state, bits, row_slot, labels, **kw):
+    return fused_extend_pruned_mp_pallas(col_idx, offsets, starts, emb_flat,
+                                         vlo, vhi, state, bits, row_slot,
+                                         labels, **kw)
+
+
+def fused_extend_pruned_mp(col_idx, offsets, starts, emb_flat, vlo, vhi,
+                           state, bits, row_slot, labels=None, *, k: int,
+                           cand_cap: int, out_cap: int, n_steps: int,
+                           n_vertices: int, n_words: int, n_rows: int,
+                           pred, state_upd=None, conn_mode: str = "search",
+                           block_c: int = 512,
+                           interpret: bool | None = None):
+    """Concurrent-grid eager-pruning fused extend (two-pass tile-count
+    scan compaction).  Identical argument/return contract — and bitwise
+    identical results — to :func:`fused_extend_pruned`, but with no
+    cross-tile state anywhere: pass 1 emits per-tile survivor counts,
+    XLA exclusive-scans them into tile bases, pass 2 re-runs the
+    predicate and masked-scatters survivors at final offsets.  See
+    :func:`repro.kernels.extend_fused.extend.fused_extend_pruned_mp_pallas`.
+    """
+    return _fused_extend_pruned_mp_jit(
+        col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
+        row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
+        n_steps=n_steps, n_vertices=n_vertices, n_words=n_words,
+        n_rows=n_rows, pred=pred, state_upd=state_upd, conn_mode=conn_mode,
+        block_c=block_c, interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("n_slots", "cand_cap", "n_uedges",
+                                   "n_vertices", "block_c", "interpret"))
+def _fused_extend_edge_jit(col_idx, edge_uid, offsets, starts, slots_flat,
+                           vlo, eids_flat, usrc, udst, vmask, **kw):
+    return fused_extend_edge_pallas(col_idx, edge_uid, offsets, starts,
+                                    slots_flat, vlo, eids_flat, usrc, udst,
+                                    vmask, **kw)
+
+
+def fused_extend_edge(col_idx, edge_uid, offsets, starts, slots_flat, vlo,
+                      eids_flat, usrc, udst, vmask=None, *, n_slots: int,
+                      cand_cap: int, n_uedges: int, n_vertices: int,
+                      block_c: int = 512, interpret: bool | None = None):
+    """Fused edge-induced candidate enumeration: ragged expand + CSR/uid
+    gathers + canonical-edge test + optional per-vertex eager ``to_add``
+    mask, in one tile-independent kernel (legal on sequential and
+    concurrent grids).  Returns (row, s, u, new_eid, add) each
+    i32[cand_cap].  See
+    :func:`repro.kernels.extend_fused.extend.fused_extend_edge_pallas`.
+    """
+    return _fused_extend_edge_jit(
+        col_idx, edge_uid, offsets, starts, slots_flat, vlo, eids_flat,
+        usrc, udst, vmask, n_slots=n_slots, cand_cap=cand_cap,
+        n_uedges=n_uedges, n_vertices=n_vertices, block_c=block_c,
+        interpret=resolve_interpret(interpret))

@@ -28,15 +28,14 @@ def fused_extend_ref(col_idx, offsets, starts, emb_flat, vlo, vhi, *,
     return row, u, src_slot, conn
 
 
-def fused_extend_pruned_ref(col_idx, offsets, starts, emb_flat, vlo, vhi,
-                            state, *, k: int, cand_cap: int, out_cap: int,
-                            n_steps: int, pred, state_upd=None):
-    """Oracle for the eager-pruning kernel: enumerate, evaluate ``pred``
-    (and the optional ``state_upd``), prefix-sum compact — composed from
-    the reference XLA ops.  Returns (row i32[out_cap], u i32[out_cap],
-    n_surv i32[]) — with ``state_upd``, (row, u, st i32[out_cap],
-    n_surv) — the same contract as
-    :func:`fused_extend_pruned_pallas`."""
+def _pruned_mask_ref(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
+                     labels, *, k, cand_cap, n_steps, pred, state_upd):
+    """Shared enumerate+predicate stage of the pruned oracles.
+
+    Returns ``(row_c, u, mask, new_st)`` over the full candidate range —
+    the pre-compaction state both the sequential and the two-pass oracle
+    compact (they differ only in *how* survivors reach their offsets,
+    which is invisible in XLA)."""
     n_parents = offsets.shape[0]
     row, u, src_slot, conn = fused_extend_ref(
         col_idx, offsets, starts, emb_flat, vlo, vhi, k=k,
@@ -48,13 +47,127 @@ def fused_extend_pruned_ref(col_idx, offsets, starts, emb_flat, vlo, vhi,
     emb_cols = tuple(emb_flat[row_c * k + j] for j in range(k))
     conn_cols = tuple(((conn >> j) & 1).astype(bool) for j in range(k))
     st = state[row_c]
-    mask = pred(emb_cols, u, src_slot, st, conn_cols) & live
+    if getattr(pred, "needs_labels", False):
+        if labels is None:
+            labels = jnp.zeros((1,), jnp.int32)
+        nv = labels.shape[0]
+        lab_cols = tuple(labels[jnp.clip(ev, 0, nv - 1)] for ev in emb_cols)
+        lab_u = labels[jnp.clip(u, 0, nv - 1)]
+        mask = pred(emb_cols, u, src_slot, st, conn_cols, lab_cols,
+                    lab_u) & live
+    else:
+        mask = pred(emb_cols, u, src_slot, st, conn_cols) & live
+    new_st = None
+    if state_upd is not None:
+        new_st = state_upd(emb_cols, u, src_slot, st,
+                           conn_cols).astype(jnp.int32)
+    return row_c, u, mask, new_st
+
+
+def fused_extend_pruned_ref(col_idx, offsets, starts, emb_flat, vlo, vhi,
+                            state, labels=None, *, k: int, cand_cap: int,
+                            out_cap: int, n_steps: int, pred,
+                            state_upd=None):
+    """Oracle for the eager-pruning kernel: enumerate, evaluate ``pred``
+    (and the optional ``state_upd``), prefix-sum compact — composed from
+    the reference XLA ops.  Returns (row i32[out_cap], u i32[out_cap],
+    n_surv i32[]) — with ``state_upd``, (row, u, st i32[out_cap],
+    n_surv) — the same contract as
+    :func:`fused_extend_pruned_pallas`."""
+    row_c, u, mask, new_st = _pruned_mask_ref(
+        col_idx, offsets, starts, emb_flat, vlo, vhi, state, labels,
+        k=k, cand_cap=cand_cap, n_steps=n_steps, pred=pred,
+        state_upd=state_upd)
     gather, n_surv = compact_mask(mask, out_cap)
     live_out = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
     out = (jnp.where(live_out, row_c[gather], 0),
            jnp.where(live_out, u[gather], -1))
     if state_upd is not None:
-        new_st = state_upd(emb_cols, u, src_slot, st,
-                           conn_cols).astype(jnp.int32)
         out = out + (jnp.where(live_out, new_st[gather], 0),)
     return out + (n_surv,)
+
+
+def fused_extend_pruned_mp_ref(col_idx, offsets, starts, emb_flat, vlo, vhi,
+                               state, labels=None, *, k: int, cand_cap: int,
+                               out_cap: int, n_steps: int, pred,
+                               state_upd=None, block_c: int = 512):
+    """Oracle mirroring the *two-pass* compaction structure in jnp.
+
+    Computes per-tile survivor counts, exclusive-scans them into tile
+    bases, and places each tile's survivors at ``base + in-tile rank`` —
+    the exact offset arithmetic of the concurrent-grid kernel pair.  The
+    results are bitwise-identical to :func:`fused_extend_pruned_ref`
+    (the two-pass split only changes *who* computes the offsets), which
+    is the property the backend parity tests pin down.  Also returns the
+    pass-1 tile-count vector for tests that check the scan itself:
+    ``(row, u, [st,] n_surv, tile_counts)``.
+    """
+    row_c, u, mask, new_st = _pruned_mask_ref(
+        col_idx, offsets, starts, emb_flat, vlo, vhi, state, labels,
+        k=k, cand_cap=cand_cap, n_steps=n_steps, pred=pred,
+        state_upd=state_upd)
+    c_pad = -(-cand_cap // block_c) * block_c
+    mi = jnp.pad(mask.astype(jnp.int32), (0, c_pad - cand_cap))
+    tiles = mi.reshape(c_pad // block_c, block_c)
+    tile_counts = tiles.sum(axis=1)
+    incl = jnp.cumsum(tile_counts)
+    n_surv = incl[-1]
+    bases = incl - tile_counts
+    # final offset = tile base + (1-based in-tile rank - 1)
+    rank_in_tile = jnp.cumsum(tiles, axis=1).reshape(-1)[:cand_cap]
+    dest = bases.repeat(block_c)[:cand_cap] + rank_in_tile - 1
+    dest = jnp.where(mask, dest, out_cap)  # dead lanes scatter off the end
+
+    def scatter(vals, fill):
+        out = jnp.full((out_cap,), fill, jnp.int32)
+        return out.at[dest].set(vals.astype(jnp.int32), mode="drop")
+
+    live_out = jnp.arange(out_cap, dtype=jnp.int32) < n_surv
+    out = (jnp.where(live_out, scatter(row_c, 0), 0),
+           jnp.where(live_out, scatter(u, -1), -1))
+    if state_upd is not None:
+        out = out + (jnp.where(live_out, scatter(new_st, 0), 0),)
+    return out + (n_surv, tile_counts)
+
+
+def fused_extend_edge_ref(col_idx, edge_uid, offsets, starts, slots_flat,
+                          vlo, eids_flat, usrc, udst, vmask=None, *,
+                          n_slots: int, cand_cap: int, n_uedges: int,
+                          n_vertices: int):
+    """Oracle for the fused edge-enumeration kernel — same formulas
+    (searchsorted parent lookup, CSR/uid gathers, canonical-edge loop,
+    optional per-vertex mask) in plain XLA.  Bitwise-equal to
+    :func:`fused_extend_edge_pallas` on every lane."""
+    n_parents = offsets.shape[0]
+    m = col_idx.shape[0]
+    E = n_slots - 1
+    e_rows = n_parents // n_slots * E
+    slots = jnp.arange(cand_cap, dtype=jnp.int32)
+    p = jnp.searchsorted(offsets, slots, side="right").astype(jnp.int32)
+    p = jnp.clip(p, 0, n_parents - 1)
+    row = p // n_slots
+    s = p % n_slots
+    rank = slots - starts[p]
+    ptr = jnp.clip(vlo[p] + rank, 0, m - 1)
+    total = offsets[-1]
+    live = slots < jnp.minimum(total, cand_cap)
+    u = jnp.where(live, col_idx[ptr], -1)
+    new_eid = jnp.where(live, edge_uid[ptr], -1)
+    w = slots_flat[p]
+    eid0 = eids_flat[jnp.clip(row * E, 0, e_rows - 1)]
+    ok = new_eid > eid0
+    found = jnp.zeros(ok.shape, bool)
+    for j in range(E):
+        eidj = eids_flat[jnp.clip(row * E + j, 0, e_rows - 1)]
+        ec = jnp.clip(eidj, 0, max(n_uedges - 1, 0))
+        es = usrc[ec]
+        ed = udst[ec]
+        shares = (w == es) | (w == ed) | (u == es) | (u == ed)
+        ok = ok & ~(found & (new_eid < eidj))
+        found = found | shares
+        ok = ok & (new_eid != eidj)
+    add = ok & found
+    if vmask is not None:
+        add = add & (vmask[jnp.clip(u, 0, n_vertices - 1)] != 0)
+    add = add & live
+    return row, s, u, new_eid, add.astype(jnp.int32)

@@ -8,19 +8,13 @@ import jax
 from repro.kernels.flash_attention.flash import flash_attention_pallas
 from repro.kernels.flash_attention.ref import (attention_flash_jnp,
                                                attention_ref)
+from repro.kernels.runtime import resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("causal", "sm_scale", "impl", "block_q",
                                    "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    sm_scale: float | None = None, impl: str = "flash_jnp",
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False):
-    """Attention with GQA support. q: [B,Hq,Lq,D]; k,v: [B,Hkv,Lk,D].
-
-    impl: "pallas" (TPU kernel), "flash_jnp" (blockwise scan, any backend),
-    "naive" (full score matrix — the roofline baseline).
-    """
+def _flash_attention_jit(q, k, v, *, causal, sm_scale, impl, block_q,
+                         block_k, interpret):
     if impl == "pallas":
         return flash_attention_pallas(q, k, v, causal=causal,
                                       sm_scale=sm_scale, block_q=block_q,
@@ -31,3 +25,20 @@ def flash_attention(q, k, v, *, causal: bool = True,
     if impl == "naive":
         return attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
     raise ValueError(impl)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None, impl: str = "flash_jnp",
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Attention with GQA support. q: [B,Hq,Lq,D]; k,v: [B,Hkv,Lk,D].
+
+    impl: "pallas" (TPU kernel), "flash_jnp" (blockwise scan, any backend),
+    "naive" (full score matrix — the roofline baseline).  For the pallas
+    impl, ``interpret=None`` resolves through the shared kernel-runtime
+    switch (``REPRO_PALLAS_INTERPRET`` env > explicit arg > off-TPU
+    autodetect).
+    """
+    return _flash_attention_jit(q, k, v, causal=causal, sm_scale=sm_scale,
+                                impl=impl, block_q=block_q, block_k=block_k,
+                                interpret=resolve_interpret(interpret))

@@ -6,14 +6,27 @@ from functools import partial
 import jax
 
 from repro.kernels.intersect.intersect import intersect_count_pallas
+from repro.kernels.runtime import resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("max_deg", "n_steps", "block_n",
                                    "interpret"))
-def intersect_count(col_idx, lo_a, hi_a, lo_b, hi_b, *, max_deg: int,
-                    n_steps: int, block_n: int = 512,
-                    interpret: bool = False):
-    """|N(a) ∩ N(b)| per pair over a sorted CSR chunk (Pallas TPU kernel)."""
+def _intersect_count_jit(col_idx, lo_a, hi_a, lo_b, hi_b, *, max_deg,
+                         n_steps, block_n, interpret):
     return intersect_count_pallas(col_idx, lo_a, hi_a, lo_b, hi_b,
                                   max_deg=max_deg, n_steps=n_steps,
                                   block_n=block_n, interpret=interpret)
+
+
+def intersect_count(col_idx, lo_a, hi_a, lo_b, hi_b, *, max_deg: int,
+                    n_steps: int, block_n: int = 512,
+                    interpret: bool | None = None):
+    """|N(a) ∩ N(b)| per pair over a sorted CSR chunk (Pallas TPU kernel).
+
+    ``interpret=None`` resolves through the shared kernel-runtime switch
+    (``REPRO_PALLAS_INTERPRET`` env > explicit arg > off-TPU autodetect).
+    """
+    return _intersect_count_jit(col_idx, lo_a, hi_a, lo_b, hi_b,
+                                max_deg=max_deg, n_steps=n_steps,
+                                block_n=block_n,
+                                interpret=resolve_interpret(interpret))

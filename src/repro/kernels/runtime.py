@@ -1,0 +1,60 @@
+"""Shared kernel-runtime knobs for every Pallas kernel family.
+
+One switch decides whether Pallas kernels run compiled or interpreted:
+
+  ``REPRO_PALLAS_INTERPRET`` — environment override, highest precedence.
+    ``1``/``true``/``on``/``yes`` force interpreter mode everywhere;
+    ``0``/``false``/``off``/``no`` force compiled kernels everywhere;
+    ``auto`` (or unset) defers to the caller / backend autodetect.
+
+  explicit ``interpret=`` argument — per-callsite override, used by unit
+    tests that pin interpreter mode regardless of the host.
+
+  autodetect — ``interpret=None`` resolves to "interpret off-TPU": the
+    same backend name works on the CPU CI box (interpreted) and on real
+    hardware (compiled) without touching any callsite.
+
+All four kernel families (``extend_fused``, ``intersect``, ``segsum``,
+``flash_attention``) resolve their ``interpret`` default through
+:func:`resolve_interpret`, so CI and real hardware flip one switch
+instead of auditing every callsite.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+_TRUE = frozenset({"1", "true", "on", "yes"})
+_FALSE = frozenset({"0", "false", "off", "no"})
+
+
+def env_interpret() -> bool | None:
+    """The ``REPRO_PALLAS_INTERPRET`` setting, or None when unset/auto."""
+    raw = os.environ.get(ENV_VAR, "").strip().lower()
+    if raw in _TRUE:
+        return True
+    if raw in _FALSE:
+        return False
+    if raw in ("", "auto"):
+        return None
+    raise ValueError(
+        f"{ENV_VAR}={raw!r}: expected one of 1/0/true/false/on/off/yes/no"
+        "/auto")
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an ``interpret=`` argument to a concrete bool.
+
+    Precedence: the ``REPRO_PALLAS_INTERPRET`` environment variable (the
+    fleet-wide switch) > the explicit per-callsite argument > autodetect
+    (interpret everywhere except on a real TPU backend).
+    """
+    env = env_interpret()
+    if env is not None:
+        return env
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"

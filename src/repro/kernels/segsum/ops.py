@@ -5,18 +5,28 @@ from functools import partial
 
 import jax
 
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.segsum.segsum import sorted_segment_sum_pallas
 
 _VMEM_BUDGET = 8 * 1024 * 1024   # bytes reserved for the one-hot tile
 
 
 @partial(jax.jit, static_argnames=("n_segments", "block_n", "interpret"))
+def _sorted_segment_sum_jit(data, seg_ids, n_segments, block_n, interpret):
+    return sorted_segment_sum_pallas(data, seg_ids, n_segments,
+                                     block_n=block_n, interpret=interpret)
+
+
 def sorted_segment_sum(data, seg_ids, n_segments: int,
                        block_n: int | None = None,
-                       interpret: bool = False):
-    """segment_sum(data, seg_ids) on the MXU (one-hot matmul formulation)."""
+                       interpret: bool | None = None):
+    """segment_sum(data, seg_ids) on the MXU (one-hot matmul formulation).
+
+    ``interpret=None`` resolves through the shared kernel-runtime switch
+    (``REPRO_PALLAS_INTERPRET`` env > explicit arg > off-TPU autodetect).
+    """
     if block_n is None:
         by_budget = max(128, _VMEM_BUDGET // (4 * max(n_segments, 1)))
         block_n = min(1024, 1 << (by_budget.bit_length() - 1))
-    return sorted_segment_sum_pallas(data, seg_ids, n_segments,
-                                     block_n=block_n, interpret=interpret)
+    return _sorted_segment_sum_jit(data, seg_ids, n_segments, block_n,
+                                   resolve_interpret(interpret))

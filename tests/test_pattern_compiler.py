@@ -19,7 +19,7 @@ from repro.core.patterns import enumerate_connected_codes, symmetry_break
 from repro.core.plan import plan_signature
 from repro.graph import generators as G
 
-BACKENDS = ("reference", "pallas")
+BACKENDS = ("reference", "pallas", "pallas-mp")
 
 
 # -- spec / library -----------------------------------------------------------
@@ -224,9 +224,14 @@ def test_labeled_pattern_on_fig2_graph():
                                name="brg-chain")
     expected = pattern_count_bruteforce(g, chain)
     app = pattern_app(chain)
-    assert app.to_add is not None          # labeled -> batch-hook path
-    got = Miner(g, app).run().count
-    assert got == expected == 4
+    # labeled patterns compile to in-kernel per-level predicates (label
+    # gathers happen inside the fused kernel), not the batch to_add hook
+    assert app.to_add is None
+    assert isinstance(app.to_add_kernel, tuple)
+    assert all(getattr(p, "needs_labels", False) for p in app.to_add_kernel)
+    for backend in BACKENDS:
+        got = Miner(g, app, backend=backend).run().count
+        assert got == expected == 4, backend
 
 
 # -- plan cache: pattern hash in the signature --------------------------------

@@ -20,7 +20,7 @@ from repro.core.plan import plan_signature
 from repro.graph import generators as G
 from repro.graph.csr import to_networkx
 
-BACKENDS = ("reference", "pallas")
+BACKENDS = ("reference", "pallas", "pallas-mp")
 
 
 # -- compiler invariants ------------------------------------------------------

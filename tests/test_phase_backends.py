@@ -6,16 +6,26 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, settings, strategies as st
 from oracles import motif_counts, triangle_count
 from repro.core import (Miner, available_backends, bounded_mine_vertex,
-                        get_backend, make_cf_app, make_mc_app, make_tc_app)
+                        get_backend, make_cf_app, make_fsm_app, make_mc_app,
+                        make_tc_app)
 from repro.core.phases import PhaseBackend, register_backend
 from repro.core.phases.pallas import PallasExtendBackend
+from repro.core.phases.pallas_mp import PallasMPBackend
 from repro.core.phases.reference import ReferenceBackend
 from repro.graph import generators as G
 from repro.graph.csr import to_networkx
-from repro.kernels.extend_fused import fused_extend, fused_extend_ref
+from repro.kernels.extend_fused import (fused_extend, fused_extend_pruned,
+                                        fused_extend_pruned_mp,
+                                        fused_extend_pruned_mp_ref,
+                                        fused_extend_pruned_ref,
+                                        fused_extend_ref)
 from repro.sparse.ops import compact_mask, expand_ragged
+
+KERNEL_BACKENDS = pytest.mark.parametrize(
+    "kbackend", ["pallas", "pallas-mp"], ids=["pallas", "pallas_mp"])
 
 
 # -- registry ----------------------------------------------------------------
@@ -23,8 +33,12 @@ from repro.sparse.ops import compact_mask, expand_ragged
 def test_registry_contents():
     names = available_backends()
     assert "reference" in names and "pallas" in names
+    assert "pallas-mp" in names
     assert isinstance(get_backend("reference"), ReferenceBackend)
     assert isinstance(get_backend("pallas"), PallasExtendBackend)
+    assert isinstance(get_backend("pallas-mp"), PallasMPBackend)
+    # pallas-mp shares the whole pallas pipeline except the compaction seam
+    assert issubclass(PallasMPBackend, PallasExtendBackend)
     assert get_backend(None).name == "reference"
 
 
@@ -146,19 +160,21 @@ PRUNED_APPS = [("tc", make_tc_app), ("4-cf", lambda: make_cf_app(4)),
                ("4-mc", lambda: make_mc_app(4))]
 
 
+@KERNEL_BACKENDS
 @pytest.mark.parametrize("aname,make_app", PRUNED_APPS)
 @pytest.mark.parametrize("seed", [0, 7])
-def test_extend_pruned_bitwise_parity(aname, make_app, seed):
+def test_extend_pruned_bitwise_parity(aname, make_app, seed, kbackend):
     """The fused op must return bit-identical levels, embeddings, and
-    counts on both backends (the pallas kernel prunes+compacts in-kernel;
-    the reference backend composes the same predicate in XLA)."""
+    counts on every backend (the pallas kernels prune+compact in-kernel —
+    sequential-SMEM or two-pass-scan; the reference backend composes the
+    same predicate in XLA)."""
     import jax.numpy as jnp
     from repro.core.embedding_list import init_level0_vertex, materialize
 
     g = G.erdos_renyi(24, 0.3, seed=seed)
     app = make_app()
     results = []
-    for backend in ("reference", "pallas"):
+    for backend in ("reference", kbackend):
         m = Miner(g, app, backend=backend)
         src, dst = m.init_edges()
         n = int(src.shape[0])
@@ -273,6 +289,231 @@ def test_pruned_kernel_state_output_matches_oracle():
     assert len(ref3) == len(got3) == 3
     for r, o in zip(ref3, got3):
         np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+# -- two-pass scan compaction (pallas-mp): tile-boundary properties ----------
+#
+# The concurrent-grid contract forbids any tile-to-tile carry, so the
+# dangerous inputs are exactly the tile-boundary shapes: tiles where every
+# lane survives (dest windows must abut exactly), tiles where none does
+# (bases must not advance), straddling tiles, and totals past out_cap
+# (overflow must clamp without corrupting in-range slots).  The predicates
+# below engineer each shape deterministically.
+
+def _pred_alive(emb_cols, u, src_slot, st, conn):
+    return u >= 0                                     # all-alive tiles
+
+
+def _pred_dead(emb_cols, u, src_slot, st, conn):
+    return u < -1                                     # all-dead tiles
+
+
+def _pred_straddle(emb_cols, u, src_slot, st, conn):
+    return (u % 3) == 0                               # straddling tiles
+
+
+_MP_PREDS = {"alive": _pred_alive, "dead": _pred_dead,
+             "straddle": _pred_straddle}
+
+
+@given(seed=st.integers(0, 12), n_emb=st.sampled_from([8, 24, 47]),
+       pred_name=st.sampled_from(sorted(_MP_PREDS)),
+       tight_cap=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_mp_compaction_tile_boundary_property(seed, n_emb, pred_name,
+                                              tight_cap):
+    """Property: the two-pass concurrent-tile compaction is bitwise equal
+    to the sequential kernel AND both jnp oracles across all-alive,
+    all-dead, and straddling tiles — including out_cap overflow, where
+    the true survivor count (the overflow flag's input) must agree on
+    every path."""
+    g = G.erdos_renyi(32, 0.3, seed=seed % 5)
+    rng = np.random.default_rng(seed)
+    emb = jnp.asarray(rng.integers(0, 32, size=(n_emb, 3)), jnp.int32)
+    offsets, starts, emb_flat, vlo, vhi, n_steps = _kernel_inputs(g, emb)
+    state = jnp.zeros((n_emb,), jnp.int32)
+    total = int(offsets[-1])
+    # round the capacity so each (shape, pred) combo traces once but the
+    # live region still straddles several 128-lane tiles
+    cand_cap = (total // 256 + 1) * 256
+    out_cap = 16 if tight_cap else cand_cap
+    pred = _MP_PREDS[pred_name]
+    args = (g.col_idx, offsets, starts, emb_flat, vlo, vhi, state)
+    kw = dict(k=3, cand_cap=cand_cap, out_cap=out_cap, n_steps=n_steps)
+    ref = fused_extend_pruned_ref(*args, pred=pred, **kw)
+    mp_ref = fused_extend_pruned_mp_ref(*args, pred=pred, block_c=128, **kw)
+    bits = jnp.zeros((1,), jnp.uint32)
+    rs = jnp.zeros((1,), jnp.int32)
+    kkw = dict(n_vertices=g.n_vertices, n_words=1, n_rows=1, pred=pred,
+               conn_mode="search", interpret=True, block_c=128, **kw)
+    seq = fused_extend_pruned(*args, bits, rs, **kkw)
+    mp = fused_extend_pruned_mp(*args, bits, rs, **kkw)
+    assert len(seq) == len(mp) == len(ref) == 3
+    for a, b in zip(seq, mp):                         # kernel vs kernel
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(ref, mp):                         # oracle vs kernel
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    row2, u2, n_surv2, tile_counts = mp_ref           # two-pass oracle
+    np.testing.assert_array_equal(np.asarray(row2), np.asarray(mp[0]))
+    np.testing.assert_array_equal(np.asarray(u2), np.asarray(mp[1]))
+    assert int(n_surv2) == int(mp[2]) == int(jnp.sum(tile_counts))
+    if pred_name == "dead":
+        assert int(mp[2]) == 0
+    if pred_name == "alive" and tight_cap and total > out_cap:
+        assert int(mp[2]) > out_cap                   # overflow flag parity
+
+
+def test_mp_kernels_carry_no_cross_tile_state():
+    """Static guard on the concurrent-grid contract: the two-pass kernels
+    (and the fused edge kernel, legal on both grids) must not allocate
+    SMEM scratch or reference the grid-carried offset at all — the only
+    cross-tile information is the bases vector computed OUTSIDE the
+    kernel by the exclusive scan."""
+    import inspect
+
+    from repro.kernels.extend_fused import extend as E
+
+    for fn in (E._mp_count_kernel, E._mp_scatter_kernel,
+               E._edge_extend_kernel, E._tile_enumerate, E._tile_compact):
+        src = inspect.getsource(fn)
+        assert "SMEM" not in src, fn.__name__
+        assert "base_ref" not in src, fn.__name__   # the sequential carry
+    # the sequential kernel is the one that carries — keep the contrast
+    assert "base_ref" in inspect.getsource(E._pruned_extend_kernel)
+
+
+def test_mp_compaction_with_state_column():
+    """The compacted state column rides through the same two-pass scatter
+    (pass 2 recomputes state_upd and places it at the scanned offsets)."""
+    from repro.core.api import is_auto_canonical_kernel
+    from repro.graph.csr import pack_adjacency
+
+    g = G.erdos_renyi(40, 0.25, seed=6)
+    rng = np.random.default_rng(2)
+    emb = jnp.asarray(rng.integers(0, 40, size=(50, 3)), jnp.int32)
+    offsets, starts, emb_flat, vlo, vhi, n_steps = _kernel_inputs(g, emb)
+    state = jnp.asarray(rng.integers(0, 8, size=(50,)), jnp.int32)
+    pg = pack_adjacency(g)
+
+    def upd(emb_cols, u, src_slot, st, conn):
+        return (st * 2) | conn[0].astype(jnp.int32)
+
+    args = (g.col_idx, offsets, starts, emb_flat, vlo, vhi, state)
+    kw = dict(k=3, cand_cap=int(offsets[-1]) + 5, out_cap=128,
+              n_steps=n_steps)
+    ref = fused_extend_pruned_ref(*args, pred=is_auto_canonical_kernel,
+                                  state_upd=upd, **kw)
+    got = fused_extend_pruned_mp(
+        *args, pg.words.reshape(-1), jnp.zeros((1,), jnp.int32),
+        n_vertices=g.n_vertices, n_words=pg.n_words, n_rows=pg.n_packed,
+        pred=is_auto_canonical_kernel, state_upd=upd, conn_mode="bitmap",
+        interpret=True, block_c=128, **kw)
+    assert len(ref) == len(got) == 4
+    for r, o in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+# -- capabilities surface ----------------------------------------------------
+
+def test_backend_capabilities_compaction_contract():
+    ref = get_backend("reference").capabilities()
+    assert ref["compaction"] == "xla-scan"
+    assert ref["compaction_passes"] == 0
+    assert ref["grid_contract"] == "any"
+    pal = get_backend("pallas").capabilities()
+    assert pal["compaction"] == "sequential-smem"
+    assert pal["compaction_passes"] == 1
+    assert pal["grid_contract"] == "sequential"
+    mp = get_backend("pallas-mp").capabilities()
+    assert mp["backend"] == "pallas-mp"
+    assert mp["compaction"] == "two-pass-scan"
+    assert mp["compaction_passes"] == 2
+    assert mp["grid_contract"] == "concurrent"
+
+
+def test_backend_capabilities_per_app():
+    tc = make_tc_app()
+    for name in ("pallas", "pallas-mp"):
+        caps = get_backend(name).capabilities(tc)
+        assert caps["extend_pruned"] == "fused-kernel"
+        assert caps["extend_edge"] == "n/a"
+    assert get_backend("reference").capabilities(tc)["extend_pruned"] == "xla"
+    # edge apps: the vertex-mask eager hook keeps enumeration fusible;
+    # a batch to_add hook would force the xla fallback
+    fsm = make_fsm_app(3, min_support=2)
+    for name in ("pallas", "pallas-mp"):
+        caps = get_backend(name).capabilities(fsm)
+        assert caps["extend_edge"] == "fused-kernel"
+        assert caps["extend_pruned"] == "n/a"
+    import dataclasses
+    batch = dataclasses.replace(fsm, to_add_vertex_mask=None,
+                                to_add=lambda ctx, slots, u, eid: u >= 0)
+    caps = get_backend("pallas").capabilities(batch)
+    assert caps["extend_edge"] == "xla-fallback:batch-to-add"
+
+
+def test_plan_reports_surface_capabilities(er_graph):
+    m = Miner(er_graph, make_tc_app(), backend="pallas-mp")
+    m.run()
+    reports = m.plan_reports()
+    assert reports
+    for rep in reports:
+        caps = rep["capabilities"]
+        assert caps["backend"] == "pallas-mp"
+        assert caps["compaction"] == "two-pass-scan"
+        assert caps["compaction_passes"] == 2
+        assert caps["extend_pruned"] == "fused-kernel"
+
+
+# -- interpret-mode env override ---------------------------------------------
+
+def test_interpret_env_override(monkeypatch):
+    from repro.kernels.runtime import ENV_VAR, env_interpret, resolve_interpret
+
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    assert env_interpret() is None
+    default = resolve_interpret(None)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    for raw, want in [("1", True), ("true", True), ("0", False),
+                      ("false", False)]:
+        monkeypatch.setenv(ENV_VAR, raw)
+        assert env_interpret() is want
+        # the env wins over both the explicit arg and the autodetect
+        assert resolve_interpret(None) is want
+        assert resolve_interpret(not want) is want
+    monkeypatch.setenv(ENV_VAR, "sometimes")
+    with pytest.raises(ValueError, match=ENV_VAR):
+        env_interpret()
+    monkeypatch.delenv(ENV_VAR)
+    assert resolve_interpret(None) is default
+
+
+def test_interpret_env_reaches_kernels(monkeypatch, er_graph):
+    """The override is resolved per call (outside jit), so flipping the
+    env between calls must not be frozen into a stale trace."""
+    from repro.kernels.runtime import ENV_VAR
+
+    monkeypatch.setenv(ENV_VAR, "1")
+    ref = Miner(er_graph, make_tc_app()).run().count
+    assert Miner(er_graph, make_tc_app(),
+                 backend="pallas-mp").run().count == ref
+
+
+# -- fused edge enumeration through the backends ------------------------------
+
+@KERNEL_BACKENDS
+@pytest.mark.parametrize("minsup", [0, 2])
+def test_parity_fsm_edge_kernel(labeled_graph, minsup, kbackend):
+    """FSM rides the fused edge-enumeration kernel (its eager prune is a
+    per-vertex mask, gathered in-kernel): supports and codes must match
+    the reference pipeline exactly."""
+    app = make_fsm_app(3, min_support=minsup, max_patterns=64)
+    r = Miner(labeled_graph, app).run()
+    p = Miner(labeled_graph, app, backend=kbackend).run()
+    np.testing.assert_array_equal(np.asarray(r.codes), np.asarray(p.codes))
+    np.testing.assert_array_equal(np.asarray(r.supports),
+                                  np.asarray(p.supports))
 
 
 # -- fused kernel vs jnp oracle ----------------------------------------------
