@@ -43,7 +43,17 @@ grid — same fused pipeline, no sequential-grid dependence), the
 and a labeled chain pattern on labeled graphs, which ride the fused
 in-kernel edge enumeration on the pallas backends), and per-row
 ``extend_pruned``/``extend_edge`` capability strings so the JSON
-records which rows actually ran fused rather than leaving it implied.
+records which rows actually ran fused rather than leaving it implied;
+schema 8 adds the locality-layout columns — ``peak_live_bytes`` (the
+analytic device-residency model of :mod:`repro.core.blocks`, the
+quantity edge blocking bounds) and ``pack_hit_rate`` (degree-weighted
+probability a connectivity probe hits the packed adjacency bitmap) —
+plus one blocked out-of-core workload row per backend (``tc-oocore``:
+degree-relabeled rmat graph, square bitmap *core* pack under a
+constrained byte budget, worklist streamed through the block scheduler
+at a live-byte budget of a quarter of the unblocked peak), which
+asserts bitwise parity with the unblocked run and records the
+relabeled-vs-plain pack hit rates and blocked-vs-unblocked peaks.
 
 ``--check`` is the CI perf guard: before overwriting, the committed
 baseline is loaded and any (graph, app, backend) row whose warm_plan_s
@@ -82,7 +92,7 @@ OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
 REGRESSION_FACTOR = 2.0
 ABS_SLACK_S = 0.005          # noise floor: ratio alone flags <5ms jitter
 WARM_SAMPLES = 5
-SCHEMA = 7
+SCHEMA = 8
 MAX_EST_REPLANS = 1          # --check: estimate may grow-retry at most once
 
 
@@ -169,6 +179,74 @@ def check_regressions(baseline: dict, records: list[dict]
     return bad, unguarded
 
 
+def blocked_rows(small: bool, out: list[str]) -> list[dict]:
+    """One blocked out-of-core workload row per backend (schema 8).
+
+    Power-law rmat graph, degree-relabeled, square bitmap core pack under
+    a byte budget that cannot hold the full bitmap, worklist streamed
+    through the block scheduler at a live-byte budget of a quarter of the
+    unblocked peak.  Asserts the two layout claims: relabeling materially
+    raises the core pack's hit rate, and blocking bounds peak live bytes
+    below the unblocked run — at bitwise-identical counts.
+    """
+    from repro.graph.csr import pack_adjacency, pack_hit_rate
+
+    gname, g = (("rmat8", G.rmat(8, edge_factor=6, seed=1)) if small
+                else ("rmat10", G.rmat(10, edge_factor=8, seed=1)))
+    n = g.n_vertices
+    full_pack = n * (-(-n // 32)) * 4          # full bitmap bytes
+    pack_budget = max(full_pack // 4, 1 << 10)
+    hit_plain = pack_hit_rate(
+        g, pack_adjacency(g, max_bytes=pack_budget, core=True))
+    records = []
+    ref_count = None
+    for backend in BACKENDS:
+        m_un = Miner(g, make_tc_app(), backend=backend)
+        r_un = m_un.run(plan_source="estimate")
+        peak_un = m_un.peak_live_bytes()
+        budget = max(peak_un // 4, 1 << 12)
+        m_bl = Miner(g, make_tc_app(), backend=backend, relabel=True,
+                     pack_partial=True, pack_max_bytes=pack_budget)
+        hit_rel = m_bl.pack_hit_rate()
+        t0 = time.perf_counter()
+        r_bl = m_bl.run(block_bytes=budget, plan_source="estimate")
+        cold = time.perf_counter() - t0
+        assert r_bl.count == r_un.count, \
+            f"blocked diverged from unblocked: {gname}/{backend}"
+        # warm: re-stream at the block size the byte budget derived
+        cap0 = min(m_bl._executors)
+        samples = []
+        for _ in range(WARM_SAMPLES):
+            t0 = time.perf_counter()
+            r = m_bl.run(block_size=cap0)
+            samples.append(time.perf_counter() - t0)
+        warm = statistics.median(samples)
+        peak_bl = m_bl.peak_live_bytes()
+        assert peak_bl < peak_un, \
+            f"blocked peak not bounded: {gname}/{backend}"
+        match = (r.count == r_un.count
+                 and (ref_count is None or r.count == ref_count))
+        if ref_count is None:
+            ref_count = r.count
+        derived = (f"match={match};cold={cold * 1e6:.0f}us;"
+                   f"peak={peak_bl}/{peak_un};"
+                   f"hit={hit_rel:.4f}/{hit_plain:.4f}")
+        out.append(emit(f"backends/tc-oocore/{gname}/{backend}", warm,
+                        derived))
+        records.append({"graph": gname, "app": "tc-oocore",
+                        "backend": backend, "seconds": warm,
+                        "cold_plan_s": cold, "warm_plan_s": warm,
+                        "blocked": True, "block_cap0": cap0,
+                        "n_replans": 0,
+                        "peak_live_bytes": peak_bl,
+                        "peak_live_bytes_unblocked": peak_un,
+                        "pack_hit_rate": hit_rel,
+                        "pack_hit_rate_plain": hit_plain,
+                        "n_vertices": n, "n_edges": g.n_edges // 2,
+                        "matches_reference": match})
+    return records
+
+
 def run(small: bool = True, check: bool = False) -> list[str]:
     baseline = None
     if OUT_PATH.exists():
@@ -241,9 +319,12 @@ def run(small: bool = True, check: bool = False) -> list[str]:
                             "compaction_passes": caps["compaction_passes"],
                             "extend_pruned": caps["extend_pruned"],
                             "extend_edge": caps["extend_edge"],
+                            "peak_live_bytes": m.peak_live_bytes(),
+                            "pack_hit_rate": m.pack_hit_rate(),
                             "n_vertices": g.n_vertices,
                             "n_edges": g.n_edges // 2,
                             "matches_reference": match})
+    records.extend(blocked_rows(small, out))
     OUT_PATH.write_text(json.dumps({"schema": SCHEMA, "records": records},
                                    indent=2))
     print(f"# wrote {OUT_PATH}")

@@ -60,9 +60,14 @@ class GraphCtx:
                 return hit
             slot = self.packed.row_slot[jnp.clip(u, 0,
                                                  self.n_vertices - 1)]
+            use_bitmap = slot >= 0
+            if self.packed.n_cols < self.n_vertices:
+                # core pack: rows answer only columns < n_cols; probes
+                # outside the covered column prefix fall back to CSR
+                use_bitmap = use_bitmap & (v < self.packed.n_cols)
             fallback = adj_contains(self.row_ptr, self.col_idx, u, v,
                                     self.n_steps, method=self.search)
-            return jnp.where(slot >= 0, hit, fallback)
+            return jnp.where(use_bitmap, hit, fallback)
         return adj_contains(self.row_ptr, self.col_idx, u, v, self.n_steps,
                             method=self.search)
 
@@ -76,7 +81,8 @@ def make_ctx(g: CSRGraph, search: str = "binary",
              with_edge_uids: bool = False,
              pack_bits: bool = True,
              pack_max_bytes: int = 4 << 20,
-             pack_partial: bool = False) -> GraphCtx:
+             pack_partial: bool = False,
+             pack_core: bool = False) -> GraphCtx:
     """Build a GraphCtx from a CSR graph (host-side preprocessing).
 
     ``pack_bits`` builds the bit-packed adjacency bitmap (u32 rows) that
@@ -90,6 +96,12 @@ def make_ctx(g: CSRGraph, search: str = "binary",
     The pruned Pallas kernel is such a consumer: its mixed connectivity
     mode answers packed rows from the bitmap and binary-searches only
     the tail (``Miner(pack_partial=True, pack_max_bytes=...)``).
+
+    ``pack_core`` builds the square *core pack* instead when the full
+    pack is over budget (rows AND columns truncated to the top-id prefix
+    — see :func:`repro.graph.csr.pack_adjacency`); meant for
+    degree-relabeled graphs where the prefix is the high-degree core
+    (``Miner(relabel=...)`` enables it by default).
     """
     max_deg = max(g.max_degree, 1)
     n_steps = max(1, math.ceil(math.log2(max_deg + 1)))
@@ -112,8 +124,10 @@ def make_ctx(g: CSRGraph, search: str = "binary",
     if pack_bits and search == "binary":
         n_words = -(-max(g.n_vertices, 1) // 32)
         would_be_full = g.n_vertices * n_words * 4 <= pack_max_bytes
-        if would_be_full or pack_partial:   # never build a pack we'd drop
-            packed = pack_adjacency(g, max_bytes=pack_max_bytes)
+        if would_be_full or pack_partial or pack_core:
+            # never build a pack we'd drop
+            packed = pack_adjacency(g, max_bytes=pack_max_bytes,
+                                    core=pack_core and not would_be_full)
     return GraphCtx(
         row_ptr=g.row_ptr, col_idx=g.col_idx, labels=g.labels,
         n_vertices=g.n_vertices, n_edges=g.n_edges, max_degree=max_deg,

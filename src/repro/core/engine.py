@@ -35,9 +35,10 @@ is computed on the union of all devices' embeddings.
 
 Fault tolerance: :meth:`Miner.run` optionally checkpoints after every
 level (unblocked: ``cb(level, levels, payload)``) or after every edge
-block (blocked: ``cb(block_index, None, {"count", "p_map"})`` with the
-accumulated totals) via a user callback; restart resumes from the last
-completed unit (see repro.train.checkpoint).
+block (blocked: ``cb(block_index, None, {"count", "p_map", "block"})``
+with the accumulated totals) via a user callback; a killed blocked run
+restarts from the last completed block by passing the saved payload back
+as ``Miner.run(resume_from=...)`` (see repro.train.checkpoint).
 """
 from __future__ import annotations
 
@@ -51,14 +52,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import GraphCtx, MiningApp, make_ctx
+from repro.core.blocks import (BlockQueue, auto_block_size,
+                               estimate_live_bytes, make_blocks, scale_caps,
+                               stack_blocks)
 from repro.core.embedding_list import (EmbeddingLevel, init_level0_edge,
                                        init_level0_vertex, materialize,
                                        materialize_edges, total_bytes)
 from repro.core.phases import BackendSpec, get_backend
 from repro.core.plan import (HostCapPolicy, MiningExecutor, MiningPlan,
                              PlanCache, PlanCapPolicy, bucket_pow2,
-                             estimate_plan, transfer_caps)
+                             compatible_caps, estimate_plan, transfer_caps)
 from repro.graph.csr import CSRGraph, degree_profile
+from repro.graph.csr import pack_hit_rate as _pack_hit_rate
+from repro.graph.csr import relabel as relabel_graph
 from repro.graph.dag import orient_dag
 
 _bucket = bucket_pow2          # back-compat alias
@@ -73,6 +79,7 @@ class LevelStats:
     capacity: int
     bytes: int
     seconds: float
+    live_bytes: int = 0       # embedding list + materialized frontier
 
 
 @dataclasses.dataclass
@@ -192,6 +199,10 @@ class _VertexPipeline:
     def pre_loop(self, policy):
         return None
 
+    def frontier_nbytes(self) -> int:
+        """Bytes of the live materialized frontier (the [n, k] emb matrix)."""
+        return int(self.emb.size) * self.emb.dtype.itemsize
+
     def bound(self):
         return self.ops._bound(self.emb, self.n, self.state)
 
@@ -279,6 +290,13 @@ class _EdgePipeline:
             self._front = materialize_edges(self.levels)
         return self._front
 
+    def frontier_nbytes(self) -> int:
+        """Bytes of the cached per-slot frontier expansion (0 if dropped)."""
+        if self._front is None:
+            return 0
+        return sum(int(a.size) * a.dtype.itemsize for a in self._front
+                   if hasattr(a, "size"))
+
     def bound(self):
         v0, vid, his, _ = self._frontier()
         return self.ops._bound_e(v0, vid, his, self.levels[-1].n)
@@ -350,9 +368,11 @@ def run_level_loop(pipe, policy, collect_stats: bool = False,
     def record(level, n_cand, t0):
         last = pipe.levels[-1]
         jax.block_until_ready(last.vid)
+        nbytes = total_bytes(pipe.levels)
         stats.append(LevelStats(level, n_cand, int(last.n),
-                                last.capacity, total_bytes(pipe.levels),
-                                time.perf_counter() - t0))
+                                last.capacity, nbytes,
+                                time.perf_counter() - t0,
+                                nbytes + pipe.frontier_nbytes()))
 
     t0 = time.perf_counter()
     pre_level = pipe.pre_loop(policy)
@@ -395,17 +415,32 @@ class Miner:
     def __init__(self, graph: CSRGraph, app: MiningApp,
                  search: str = "binary", fuse_filter: bool = True,
                  materialize_fn=None, backend: BackendSpec = None,
-                 pack_max_bytes: int = 4 << 20, pack_partial: bool = False):
+                 pack_max_bytes: int = 4 << 20, pack_partial: bool = False,
+                 relabel: bool | str = False,
+                 pack_core: Optional[bool] = None):
         self.app = app
-        self.graph_in = graph
         self.backend = get_backend(backend if backend is not None
                                    else app.backend)
+        # locality-aware layout: relabel *before* DAG orientation so the
+        # oriented CSR, the packed adjacency core, and the level-0
+        # worklist all live in the permuted id space; every mined
+        # quantity (counts, pattern maps, FSM codes/supports) is
+        # permutation-invariant, so results are bitwise unchanged
+        self.relabeling = None
+        if relabel:
+            order = "degree" if relabel is True else str(relabel)
+            self.relabeling = relabel_graph(graph, order=order)
+            graph = self.relabeling.graph
+        self.graph_in = graph
         g = orient_dag(graph) if app.use_dag else graph
         self.graph = g
+        if pack_core is None:       # core pack only pays off post-relabel
+            pack_core = self.relabeling is not None
         self.ctx = make_ctx(g, search=search,
                             with_edge_uids=(app.kind == "edge"),
                             pack_max_bytes=pack_max_bytes,
-                            pack_partial=pack_partial)
+                            pack_partial=pack_partial,
+                            pack_core=pack_core)
         self.fuse_filter = fuse_filter
         self._materialize = materialize_fn or materialize
         self.ops = _PhaseOps(self.ctx, app, self.backend,
@@ -414,6 +449,7 @@ class Miner:
         self._executors: dict[int, MiningExecutor] = {}
         self._digest: Optional[str] = None
         self._profile: Optional[tuple[tuple[float, ...], int]] = None
+        self._full_plan: Optional[tuple] = None   # (caps, fcaps, cap0)
 
     # -- identity / executors ----------------------------------------------
 
@@ -470,6 +506,23 @@ class Miner:
                             "capabilities": dict(caps_report)})
         return out
 
+    def pack_hit_rate(self) -> Optional[float]:
+        """Degree-weighted probability a connectivity probe hits the
+        packed adjacency bitmap (None when no pack was built)."""
+        if self.ctx.packed is None:
+            return None
+        return _pack_hit_rate(self.graph, self.ctx.packed)
+
+    def peak_live_bytes(self) -> Optional[int]:
+        """Analytic peak device-resident bytes over all planned executors
+        (:func:`repro.core.blocks.estimate_live_bytes`); the bench's
+        ``peak_live_bytes`` column.  Blocked runs plan at block ``cap0``,
+        so their peak prices below the same workload unblocked."""
+        vals = [estimate_live_bytes(self.app.kind, ex.plan.caps,
+                                    ex.plan.filter_caps, ex.cap0)
+                for ex in self._executors.values() if ex.plan is not None]
+        return max(vals) if vals else None
+
     def _p_map_meaningful(self) -> bool:
         return self.app.get_pattern is not None or self.app.needs_reduce
 
@@ -489,7 +542,9 @@ class Miner:
     def run(self, block_size: Optional[int] = None, collect_stats=False,
             checkpoint_cb=None, plan_cache: Optional[str | PlanCache] = None,
             plan_source: str = "inspect", safety_factor: float = 2.0,
-            sample_size: int = 256, plan_seed: int = 0) -> MineResult:
+            sample_size: int = 256, plan_seed: int = 0,
+            block_bytes: Optional[int] = None,
+            resume_from: Optional[dict] = None) -> MineResult:
         """Mine the graph; ``plan_source`` picks how a cold run plans.
 
         * ``"inspect"`` — the paper's inspection-execution: exact per-level
@@ -501,7 +556,16 @@ class Miner:
           backstop guarantees exact results.
         * ``"cache"`` — like ``"estimate"``, but first try transferring
           the cached plan with the nearest degree profile (plan transfer
-          across graphs); fall back to the estimator.
+          across graphs and backends); fall back to the estimator.
+
+        ``block_bytes`` (instead of an explicit ``block_size``) derives
+        the block size from a device-byte budget: the sampled estimator
+        prices the full-worklist plan, :func:`~repro.core.blocks.
+        auto_block_size` picks the largest block that fits, and the
+        scaled plan seeds the block executor.  ``resume_from`` restarts a
+        blocked run from a checkpoint payload (``{"block", "count",
+        "p_map"}``): completed blocks are skipped and the saved totals
+        carried forward.
 
         An exact plan-cache hit (same graph/app/backend/cap0 signature)
         always wins regardless of mode; ``collect_stats`` / per-level
@@ -523,12 +587,34 @@ class Miner:
                                   seeding)
         src, dst = self.init_edges()
         m = int(src.shape[0])
+        if block_bytes and not block_size:
+            block_size = self._auto_block_size(m, block_bytes, sample_size,
+                                               safety_factor, plan_seed)
         if not block_size or block_size >= m:
             return self._run_vertex_full(src, dst, m, collect_stats,
                                          checkpoint_cb, cache, seeding)
         return self._run_vertex_blocked(src, dst, m, block_size,
                                         collect_stats, checkpoint_cb, cache,
-                                        seeding)
+                                        seeding, resume_from)
+
+    def _auto_block_size(self, m: int, budget_bytes: int,
+                         sample_size: int = 256,
+                         safety_factor: float = 2.0,
+                         plan_seed: int = 0) -> int:
+        """Block size fitting ``budget_bytes``, from an estimated plan.
+
+        Prices the *full-worklist* plan with the sampled estimator, then
+        walks block sizes down until the scaled plan's live bytes fit.
+        The full plan is stashed so the block executor can be seeded with
+        its block-ratio rescale instead of a second sampling pass.
+        """
+        cap0 = bucket_pow2(m)
+        caps, fcaps = estimate_plan(self, cap0, sample_size=sample_size,
+                                    safety_factor=safety_factor,
+                                    seed=plan_seed)
+        self._full_plan = (caps, fcaps, cap0)
+        return auto_block_size(m, caps, fcaps, budget_bytes,
+                               kind=self.app.kind)
 
     def _seed_plan(self, ex: MiningExecutor, seeding) -> None:
         """Give a cold executor an estimated or transferred plan."""
@@ -538,8 +624,15 @@ class Miner:
         if plan_source == "cache" and cache is not None:
             profile, n_edges = self.profile_sketch()
             near = cache.nearest(ex.app_key, self.app.kind, profile,
-                                 n_edges, exclude=(ex.signature,))
-            if near is not None:
+                                 n_edges, exclude=(ex.signature,),
+                                 transfer_key=ex.transfer_key,
+                                 cap0=ex.cap0)
+            # cross-backend candidates passed the transfer-key match but
+            # may still have been recorded under an incompatible cap
+            # schedule (different max_size build, truncated plan);
+            # shape-validate before rescaling, else fall through to the
+            # estimator
+            if near is not None and compatible_caps(near, self.app):
                 caps, fcaps = transfer_caps(near, ex.cap0, safety_factor)
                 ex.adopt_plan(caps, fcaps, source="transfer")
                 return
@@ -573,39 +666,49 @@ class Miner:
                           p_map=p_map if self._p_map_meaningful() else None)
 
     def _run_vertex_blocked(self, src, dst, m, block_size, collect_stats,
-                            checkpoint_cb, cache, seeding=None
-                            ) -> MineResult:
-        # Edge blocking (§5.2): process level-0 chunks sequentially,
-        # bounding peak memory; pattern maps / counts accumulate.  One
-        # executor compile serves every block; only the first block of a
-        # cold miner runs the host inspection pass (doubling as planner)
-        # — unless an estimated/transferred plan lets it skip even that.
+                            checkpoint_cb, cache, seeding=None,
+                            resume_from=None) -> MineResult:
+        # Edge blocking (§5.2): stream level-0 chunks through one warm
+        # executor, bounding peak memory; pattern maps / counts
+        # accumulate.  The worklist stays host-side — BlockQueue stages
+        # one block (plus one in flight, double-buffered) to the device.
+        # Only the first block of a cold miner runs the host inspection
+        # pass (doubling as planner) — unless an estimated, transferred,
+        # or block-ratio-rescaled plan lets it skip even that.
         cap0 = bucket_pow2(block_size)
         ex = self.executor(cap0, cache)
+        if not ex.has_plan and self._full_plan is not None:
+            fcaps, ffcaps, fcap0 = self._full_plan
+            sc, fc = scale_caps(fcaps, ffcaps, cap0 / fcap0)
+            ex.adopt_plan(sc, fc, source="estimated")
         self._seed_plan(ex, seeding)
         total = 0
         p_map = None
+        done = -1                 # last completed block index
+        if resume_from:
+            done = int(resume_from.get("block", -1))
+            total = int(resume_from.get("count", 0))
+            pm = resume_from.get("p_map")
+            p_map = None if pm is None else jnp.asarray(pm)
         stats: list[LevelStats] = []
-        for bi, lo in enumerate(range(0, m, block_size)):
-            n_blk = min(block_size, m - lo)
-            pad = cap0 - n_blk
-            s = jnp.pad(jax.lax.dynamic_slice_in_dim(src, lo, n_blk),
-                        (0, pad))
-            d = jnp.pad(jax.lax.dynamic_slice_in_dim(dst, lo, n_blk),
-                        (0, pad))
+        blocks = [b for b in make_blocks(m, block_size) if b.index > done]
+        queue = BlockQueue((np.asarray(src), np.asarray(dst)), blocks, cap0)
+        for blk, (s, d) in queue:
             if collect_stats or not ex.has_plan:
-                r = self._host_run(_VertexPipeline(self.ops, s, d, n_blk),
+                r = self._host_run(_VertexPipeline(self.ops, s, d, blk.n),
                                    ex, collect_stats, None)
                 cnt, pm = r.count, r.p_map
                 stats.extend(r.stats)
             else:
-                cnt, pm_arr = ex.execute(s, d, n_blk)
+                cnt, pm_arr = ex.execute(s, d, blk.n)
                 pm = pm_arr if self._p_map_meaningful() else None
             total += cnt
             if pm is not None:
                 p_map = pm if p_map is None else p_map + pm
             if checkpoint_cb is not None:
-                checkpoint_cb(bi, None, {"count": total, "p_map": p_map})
+                checkpoint_cb(blk.index, None,
+                              {"count": total, "p_map": p_map,
+                               "block": blk.index})
         return MineResult(count=total, p_map=p_map, stats=stats)
 
     # -- edge-induced (FSM) path -------------------------------------------
@@ -690,14 +793,23 @@ def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
                  caps: tuple[tuple[int, int], ...],
                  axis_names: tuple[str, ...] = ("data",),
                  backend: BackendSpec = None,
-                 filter_caps: Optional[tuple[int, ...]] = None):
-    """Distributed mining: level-0 edges sharded over mesh axes.
+                 filter_caps: Optional[tuple[int, ...]] = None,
+                 relabel: bool | str = False):
+    """Distributed mining: level-0 edge *blocks* sharded over mesh axes.
 
-    The graph CSR is replicated (in-memory GPM practice); each device
-    mines its edge block with :func:`bounded_mine_vertex` (vertex apps) or
-    :func:`bounded_mine_edge` (FSM, which needs ``filter_caps``); counts
-    and pattern maps merge with one psum per run, FSM supports via the
-    collective domain reduce.  Returns global values:
+    The graph CSR is replicated (in-memory GPM practice); the worklist is
+    cut into one contiguous :class:`~repro.core.blocks.EdgeBlock` per
+    device (:func:`~repro.core.blocks.make_blocks` /
+    :func:`~repro.core.blocks.stack_blocks` — the same construction the
+    single-host streaming scheduler uses, so ``relabel=True`` gives every
+    device a locality-coherent range of the degree-ordered worklist).
+    Each device mines its block with :func:`bounded_mine_vertex` (vertex
+    apps) or :func:`bounded_mine_edge` (FSM, which needs
+    ``filter_caps``); counts and pattern maps merge with one psum per
+    run, FSM supports via the collective domain reduce — the support
+    filter stays exact over the union of all devices' embeddings
+    (paper's global support sync), so blocking never changes FSM output.
+    Returns global values:
     vertex apps -> (count, p_map, overflowed);
     edge apps   -> (count, codes, supports, overflowed).
     """
@@ -707,21 +819,21 @@ def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
     if app.kind == "edge" and filter_caps is None:
         raise ValueError("sharded FSM needs filter_caps (support-filter "
                          "output capacities per level)")
-    miner = Miner(graph, app, backend=backend)  # reuse ctx preprocessing
+    # reuse ctx preprocessing (DAG orient, packs, uids) + optional relabel
+    miner = Miner(graph, app, backend=backend, relabel=relabel)
     ctx = miner.ctx
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
     spec = PSpec(axis_names)
-
-    def _blocks(arr, cap0, pad):
-        return jnp.pad(arr, (0, pad)).reshape(n_dev, cap0)
 
     if app.kind == "edge":
         m = ctx.n_uedges
         per_dev = -(-m // n_dev)
         cap0 = bucket_pow2(per_dev)
-        pad = cap0 * n_dev - m
-        counts = jnp.minimum(jnp.maximum(m - cap0 * jnp.arange(n_dev), 0),
-                             cap0).astype(jnp.int32)
+        blocks = make_blocks(m, per_dev, count=n_dev)
+        counts = jnp.asarray([b.n for b in blocks], dtype=jnp.int32)
+        src_b, dst_b, eid_b = stack_blocks(
+            (np.asarray(ctx.usrc), np.asarray(ctx.udst),
+             np.arange(m, dtype=np.int32)), blocks, cap0)
 
         def local_e(src_blk, dst_blk, eid_blk, n_blk):
             codes, sup, ovf = bounded_mine_edge(
@@ -735,11 +847,8 @@ def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
         fn = shard_map(local_e, mesh=mesh, in_specs=(spec,) * 4,
                        out_specs=(PSpec(), PSpec(), PSpec()),
                        check_rep=False)
-        eid = jnp.arange(m, dtype=jnp.int32)
         with mesh:
-            codes, sup, ovf = jax.jit(fn)(
-                _blocks(ctx.usrc, cap0, pad), _blocks(ctx.udst, cap0, pad),
-                _blocks(eid, cap0, pad), counts)
+            codes, sup, ovf = jax.jit(fn)(src_b, dst_b, eid_b, counts)
         codes, sup = np.asarray(codes), np.asarray(sup)
         cnt = int(((sup >= app.min_support)
                    & (codes != _INT_MAX)).sum())
@@ -749,9 +858,10 @@ def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
     m = int(src.shape[0])
     per_dev = -(-m // n_dev)
     cap0 = bucket_pow2(per_dev)
-    pad = cap0 * n_dev - m
-    counts = jnp.minimum(jnp.maximum(m - cap0 * jnp.arange(n_dev), 0),
-                         cap0).astype(jnp.int32)
+    blocks = make_blocks(m, per_dev, count=n_dev)
+    counts = jnp.asarray([b.n for b in blocks], dtype=jnp.int32)
+    src_b, dst_b = stack_blocks((np.asarray(src), np.asarray(dst)),
+                                blocks, cap0)
 
     def local(src_blk, dst_blk, n_blk):
         cnt, p_map, ovf = bounded_mine_vertex(ctx, app, src_blk[0],
@@ -766,6 +876,5 @@ def mine_sharded(graph: CSRGraph, app: MiningApp, mesh,
     fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
                    out_specs=(PSpec(), PSpec(), PSpec()), check_rep=False)
     with mesh:
-        cnt, p_map, ovf = jax.jit(fn)(_blocks(src, cap0, pad),
-                                      _blocks(dst, cap0, pad), counts)
+        cnt, p_map, ovf = jax.jit(fn)(src_b, dst_b, counts)
     return int(cnt), np.asarray(p_map), bool(ovf)

@@ -192,13 +192,14 @@ class PallasExtendBackend(ReferenceBackend):
             bits = jnp.zeros((1,), jnp.uint32)
             row_slot = jnp.zeros((1,), jnp.int32)
         n_words = pg.n_words if pg is not None else 1
+        n_cols = pg.n_cols if pg is not None else ctx.n_vertices
         upd = resolve_state_kernel(app, k)
         *out, n_surv = self._pruned_kernel(
             ctx.col_idx, offsets, starts, emb.reshape(-1), vlo, vhi, st,
             bits, row_slot, ctx.labels, k=k, cand_cap=cand_cap,
             out_cap=out_cap, n_steps=ctx.n_steps, n_vertices=ctx.n_vertices,
-            n_words=n_words, n_rows=n_rows, pred=pred, state_upd=upd,
-            conn_mode=conn_mode, block_c=self.block_c,
+            n_words=n_words, n_rows=n_rows, n_cols=n_cols, pred=pred,
+            state_upd=upd, conn_mode=conn_mode, block_c=self.block_c,
             interpret=self._use_interpret())
         row, u = out[0], out[1]
         st_out = out[2] if upd is not None else None

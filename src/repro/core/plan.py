@@ -69,7 +69,7 @@ def bucket_cap(n: int, quantum: int = 128, minimum: int = 128) -> int:
     return -(-n // quantum) * quantum
 
 
-PLAN_SCHEMA = 3
+PLAN_SCHEMA = 4
 
 
 class StalePlanError(ValueError):
@@ -110,6 +110,13 @@ class MiningPlan:
     app_key: str = ""
     profile: tuple[float, ...] = ()
     n_edges: int = 0
+    # backend-agnostic app identity (schema 4): capacities are counts of
+    # candidates/survivors, which every backend produces bitwise equal —
+    # so a plan recorded under "reference" is a valid capacity seed for a
+    # "pallas"/"pallas-mp" run of the same app.  transfer_key drops the
+    # backend name and compaction contract from app_key; cross-backend
+    # lookups (PlanCache.nearest) match on it.
+    transfer_key: str = ""
 
     def grown(self, factor: int = 2) -> "MiningPlan":
         """Overflow response: scale every capacity (stays a power of two)."""
@@ -126,7 +133,7 @@ class MiningPlan:
             "filter_caps": list(self.filter_caps),
             "signature": self.signature, "source": self.source,
             "app_key": self.app_key, "profile": list(self.profile),
-            "n_edges": self.n_edges})
+            "n_edges": self.n_edges, "transfer_key": self.transfer_key})
 
     @classmethod
     def from_json(cls, text: str) -> "MiningPlan":
@@ -145,7 +152,8 @@ class MiningPlan:
                    source=d.get("source", "cache"),
                    app_key=d.get("app_key", ""),
                    profile=tuple(float(x) for x in d.get("profile", ())),
-                   n_edges=int(d.get("n_edges", 0)))
+                   n_edges=int(d.get("n_edges", 0)),
+                   transfer_key=d.get("transfer_key", ""))
 
 
 def plan_app_key(app, backend_name: str, fuse_filter: bool = True,
@@ -169,6 +177,47 @@ def plan_app_key(app, backend_name: str, fuse_filter: bool = True,
               app.directed_worklist, backend_name, bool(fuse_filter),
               str(compaction))
     return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
+
+
+def plan_transfer_key(app, fuse_filter: bool = True) -> str:
+    """App identity for *cross-backend* plan transfer: no backend name,
+    no compaction contract.
+
+    Capacities in a plan are candidate/survivor counts; the phase
+    backends are bitwise equal on those (the parity contract), so the
+    same app mined under any backend produces the same per-level shapes.
+    Plans whose ``transfer_key`` matches are capacity-comparable even
+    when their ``app_key`` (which folds the backend) differs — a plan
+    recorded under ``reference`` seeds a ``pallas``/``pallas-mp`` run.
+    Backend-specific *auxiliary* buffer sizing (e.g. the two-pass
+    tile-count vector) derives from the transferred caps at compile
+    time, so it needs no key of its own.
+    """
+    fields = (app.name, app.kind, app.max_size, app.use_dag,
+              app.needs_reduce, app.needs_filter, app.support_mode,
+              app.max_patterns, app.min_support, app.plan_key,
+              app.directed_worklist, bool(fuse_filter))
+    return hashlib.sha1(repr(fields).encode()).hexdigest()[:20]
+
+
+def compatible_caps(plan: "MiningPlan", app) -> bool:
+    """Can ``plan``'s capacity schedule drive a run of ``app``?
+
+    The shape contract a transferred plan must meet: same embedding
+    kind, one ``(cand_cap, out_cap)`` pair per extension level, and —
+    for support-filtered FSM — one filter capacity per compaction
+    (pre-loop + one per level).  Plans recorded under a different
+    capability surface (older app revision, different max_size) fail
+    here and the caller falls back to the estimator.
+    """
+    if plan.kind != app.kind or not plan.caps:
+        return False
+    n_levels = max(app.max_size - 2, 0)
+    if len(plan.caps) != n_levels:
+        return False
+    if app.kind == "edge" and app.needs_filter:
+        return len(plan.filter_caps) == n_levels + 1
+    return True
 
 
 def plan_signature(graph_digest: str, app, backend_name: str, cap0: int,
@@ -233,16 +282,25 @@ class PlanCache:
         return dataclasses.replace(plan, source="cache")
 
     def nearest(self, app_key: str, kind: str, profile: tuple[float, ...],
-                n_edges: int, exclude: tuple[str, ...] = ()
-                ) -> Optional[MiningPlan]:
-        """The cached plan for ``app_key`` with the closest degree profile.
+                n_edges: int, exclude: tuple[str, ...] = (),
+                transfer_key: Optional[str] = None,
+                cap0: Optional[int] = None) -> Optional[MiningPlan]:
+        """The cached plan for this app with the closest degree profile.
 
         Plan transfer: an exact signature miss (new graph) scans the
-        cache for plans of the *same app/backend semantics* recorded on
-        other graphs and returns the one whose degree-profile sketch is
-        nearest (log-space quantile distance + edge-count term).  The
+        cache for plans of the same app semantics recorded on other
+        graphs/backends and returns the one whose degree-profile sketch
+        is nearest (log-space quantile distance + edge-count term).  The
         caller rescales its capacities (:func:`transfer_caps`) — the
         match seeds the plan, the overflow backstop guarantees exactness.
+
+        Candidates match on ``app_key`` (same backend) or — when
+        ``transfer_key`` is given — on the backend-agnostic transfer key
+        (cross-backend transfer); same-backend plans win ties.  With
+        ``cap0`` the *worklist-size ratio* is weighted into the distance
+        (:data:`CAP0_WEIGHT`): rescaling a tiny graph's plan 1000x
+        amplifies its noise 1000x, so a same-scale plan with a slightly
+        worse profile beats a tiny plan with a perfect one.
         Stale/corrupt entries are skipped (not deleted: only an exact
         ``get`` proves an entry unusable for its own signature).
         """
@@ -258,13 +316,21 @@ class PlanCache:
                     plan = MiningPlan.from_json(f.read())
             except (OSError, StalePlanError, ValueError, KeyError):
                 continue
-            if (plan.app_key != app_key or plan.kind != kind
+            same_backend = plan.app_key == app_key
+            transferable = (transfer_key is not None and plan.transfer_key
+                            and plan.transfer_key == transfer_key)
+            if (not (same_backend or transferable) or plan.kind != kind
                     or plan.signature in exclude or not plan.caps):
                 continue
             d = profile_distance(profile, n_edges, plan.profile,
                                  plan.n_edges)
             if d is None:
                 continue
+            if cap0 is not None and plan.cap0:
+                d += CAP0_WEIGHT * float(
+                    np.log(int(cap0) / plan.cap0) ** 2)
+            if not same_backend:
+                d += CROSS_BACKEND_PENALTY
             if best_d is None or d < best_d:
                 best, best_d = plan, d
         return best
@@ -300,6 +366,17 @@ class PlanCache:
                 os.remove(os.path.join(self.directory, name))
             except OSError:
                 pass
+
+
+# nearest() distance weights: the cap0-ratio term dominates once the
+# worklist sizes are more than ~a decade apart (log^2 10 ~ 5.3 vs the
+# O(0.1) profile terms of roughly-similar graphs), which is the point —
+# a 1000x rescale of a tiny plan is a worse seed than a same-scale plan
+# with a mildly different degree shape.  The cross-backend penalty is a
+# *tiebreak* (capacities transfer exactly across backends; prefer the
+# same backend only when otherwise equally near).
+CAP0_WEIGHT = 1.0
+CROSS_BACKEND_PENALTY = 1e-6
 
 
 def profile_distance(profile_a: tuple[float, ...], m_a: int,
@@ -512,7 +589,8 @@ def estimate_plan(miner, cap0: int, sample_size: int = 256,
     """
     from repro.core import engine as E
     from repro.core.phases import get_backend
-    from repro.graph.sampler import sample_worklist
+    from repro.graph.sampler import (sample_worklist,
+                                     sample_worklist_stratified)
 
     app, ctx = miner.app, miner.ctx
     rng = np.random.default_rng(seed)
@@ -526,8 +604,15 @@ def estimate_plan(miner, cap0: int, sample_size: int = 256,
 
     # sorted sample: FSM's canonical edge-growth test compares edge uids,
     # and a sorted subset preserves every uid comparison the full
-    # worklist would make
-    idx = sample_worklist(m, sample_size, rng, sort=(app.kind == "edge"))
+    # worklist would make.  Relabeled vertex miners sample stratified
+    # over contiguous index bands — post-relabel index order is degree
+    # order, so the bands are degree strata and the hub head can't be
+    # missed (a uniform draw over a skewed worklist can).
+    if app.kind != "edge" and getattr(miner, "relabeling", None) is not None:
+        idx = sample_worklist_stratified(m, sample_size, rng)
+    else:
+        idx = sample_worklist(m, sample_size, rng,
+                              sort=(app.kind == "edge"))
     n_sample = len(idx)
     samp_app = app
     if app.kind == "edge" and app.needs_filter and n_sample < m:
@@ -631,6 +716,7 @@ class MiningExecutor:
                                         miner.fuse_filter, compaction)
         self.app_key = plan_app_key(miner.app, miner.backend.name,
                                     miner.fuse_filter, compaction)
+        self.transfer_key = plan_transfer_key(miner.app, miner.fuse_filter)
         self._plan = plan
         if self._plan is None and cache is not None:
             self._plan = cache.get(self.signature)
@@ -673,7 +759,8 @@ class MiningExecutor:
                                 filter_caps=tuple(filter_caps),
                                 cap0=self.cap0, signature=self.signature,
                                 source=source, app_key=self.app_key,
-                                profile=profile, n_edges=n_edges)
+                                profile=profile, n_edges=n_edges,
+                                transfer_key=self.transfer_key)
         if self.cache is not None:
             self.cache.put(self._plan)
 

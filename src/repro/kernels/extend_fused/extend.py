@@ -175,8 +175,8 @@ def _tile_enumerate(i, offsets, starts, emb_flat, vlo, vhi, col, state,
                     bits, row_slot, labels, *, k: int, m: int,
                     n_parents: int, n_steps: int, n_steps_p: int,
                     block_c: int, cand_cap: int, n_vertices: int,
-                    n_words: int, n_rows: int, conn_mode: str, pred,
-                    state_upd, needs_labels: bool):
+                    n_words: int, n_rows: int, n_cols: int,
+                    conn_mode: str, pred, state_upd, needs_labels: bool):
     """Stages 1-4 of the pruned extend, for grid tile ``i``.
 
     Enumerate one (1, block_c) candidate tile (parent search + CSR
@@ -219,7 +219,10 @@ def _tile_enumerate(i, offsets, starts, emb_flat, vlo, vhi, col, state,
     #   "mixed"  — partial pack: packed rows (row_slot[v] >= 0) answer
     #              from the bitmap, the long tail falls back to the CSR
     #              binary search (both evaluated branchlessly per lane,
-    #              select on the slot sign — the VPU has no divergence);
+    #              select on the slot sign — the VPU has no divergence).
+    #              Core packs additionally cover only columns < n_cols:
+    #              candidates outside the covered prefix take the CSR
+    #              branch of the same select;
     #   "search" — no pack: CSR binary search only.
     base_p = row * k
     u_c = jnp.clip(u, 0, n_vertices - 1)
@@ -238,10 +241,12 @@ def _tile_enumerate(i, offsets, starts, emb_flat, vlo, vhi, col, state,
         probe = jnp.clip(lo_s, 0, m - 1)
         return (_take(col, probe) == u) & (lo_s < hi_b) & (lo_b < hi_b)
 
+    u_b = jnp.clip(u, 0, max(n_cols - 1, 0))
+
     def bitmap_probe(rows):
-        widx = jnp.clip(rows, 0, n_rows - 1) * n_words + (u_c >> 5)
+        widx = jnp.clip(rows, 0, n_rows - 1) * n_words + (u_b >> 5)
         w = _take(bits, widx)
-        return ((w >> (u_c & 31).astype(jnp.uint32))
+        return ((w >> (u_b & 31).astype(jnp.uint32))
                 & jnp.uint32(1)) == 1
 
     for j in range(k):
@@ -252,7 +257,10 @@ def _tile_enumerate(i, offsets, starts, emb_flat, vlo, vhi, col, state,
             found = bitmap_probe(ev_c)
         elif conn_mode == "mixed":
             pack_row = _take(row_slot, ev_c)    # don't shadow `slot` above
-            found = jnp.where(pack_row >= 0, bitmap_probe(pack_row),
+            in_pack = pack_row >= 0
+            if n_cols < n_vertices:             # core pack column guard
+                in_pack = in_pack & (u < n_cols)
+            found = jnp.where(in_pack, bitmap_probe(pack_row),
                               csr_probe(pj))
         else:
             found = csr_probe(pj)
@@ -412,6 +420,7 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                                n_steps: int, n_vertices: int, n_words: int,
                                n_rows: int, pred, state_upd=None,
                                conn_mode: str = "search",
+                               n_cols: int | None = None,
                                block_c: int = 512,
                                interpret: bool = False):
     """Fused EXTEND with eager in-kernel pruning + stream compaction.
@@ -437,7 +446,9 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     ``"mixed"`` (partial pack — ``bits`` holds ``n_rows`` packed rows,
     ``row_slot[v]`` maps a vertex to its row or -1, unpacked rows fall
     back to the CSR binary search), or ``"search"`` (CSR only; ``bits`` /
-    ``row_slot`` may be dummies).
+    ``row_slot`` may be dummies).  ``n_cols`` (default ``n_vertices``)
+    is the pack's column coverage: mixed-mode probes whose candidate id
+    is ``>= n_cols`` take the CSR branch (the core-pack contract).
 
     ``labels`` (i32[n_vertices], optional) feeds labeled predicates:
     when ``pred.needs_labels`` is set, the kernel gathers the candidate's
@@ -450,6 +461,8 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     :func:`fused_extend_pruned_mp_pallas` there.
     """
     needs_labels = bool(getattr(pred, "needs_labels", False))
+    if n_cols is None:
+        n_cols = n_vertices
     inputs, specs, dims = _prep_pruned_inputs(
         col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
         row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
@@ -464,7 +477,7 @@ def fused_extend_pruned_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                           n_steps_p=dims["n_steps_p"], block_c=block_c,
                           cand_cap=cand_cap, out_len=out_len,
                           n_vertices=n_vertices,
-                          n_words=n_words, n_rows=n_rows,
+                          n_words=n_words, n_rows=n_rows, n_cols=n_cols,
                           conn_mode=conn_mode, pred=pred,
                           state_upd=state_upd, needs_labels=needs_labels),
         grid=(dims["n_tiles"],),
@@ -553,6 +566,7 @@ def fused_extend_pruned_mp_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                                   n_words: int, n_rows: int, pred,
                                   state_upd=None,
                                   conn_mode: str = "search",
+                                  n_cols: int | None = None,
                                   block_c: int = 512,
                                   interpret: bool = False):
     """Concurrent-grid fused EXTEND: two-pass tile-count scan compaction.
@@ -584,6 +598,8 @@ def fused_extend_pruned_mp_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
     does not exist anywhere in this pair of kernels.
     """
     needs_labels = bool(getattr(pred, "needs_labels", False))
+    if n_cols is None:
+        n_cols = n_vertices
     inputs, specs, dims = _prep_pruned_inputs(
         col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
         row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
@@ -593,7 +609,7 @@ def fused_extend_pruned_mp_pallas(col_idx: jnp.ndarray, offsets: jnp.ndarray,
                    n_steps=n_steps, n_steps_p=dims["n_steps_p"],
                    block_c=block_c, cand_cap=cand_cap,
                    n_vertices=n_vertices, n_words=n_words, n_rows=n_rows,
-                   conn_mode=conn_mode, pred=pred,
+                   n_cols=n_cols, conn_mode=conn_mode, pred=pred,
                    needs_labels=needs_labels)
     full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
 

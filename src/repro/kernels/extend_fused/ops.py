@@ -43,8 +43,8 @@ def fused_extend(col_idx, offsets, starts, emb_flat, vlo, vhi, *, k: int,
 
 
 _PRUNED_STATICS = ("k", "cand_cap", "out_cap", "n_steps", "n_vertices",
-                   "n_words", "n_rows", "pred", "state_upd", "conn_mode",
-                   "block_c", "interpret")
+                   "n_words", "n_rows", "n_cols", "pred", "state_upd",
+                   "conn_mode", "block_c", "interpret")
 
 
 @partial(jax.jit, static_argnames=_PRUNED_STATICS)
@@ -60,7 +60,7 @@ def fused_extend_pruned(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
                         cand_cap: int, out_cap: int, n_steps: int,
                         n_vertices: int, n_words: int, n_rows: int, pred,
                         state_upd=None, conn_mode: str = "search",
-                        block_c: int = 512,
+                        n_cols: int | None = None, block_c: int = 512,
                         interpret: bool | None = None):
     """Eager-pruning fused extend: enumerate + in-kernel ``pred`` filter +
     stream compaction (sequential-grid SMEM running offset).
@@ -80,8 +80,9 @@ def fused_extend_pruned(col_idx, offsets, starts, emb_flat, vlo, vhi, state,
         col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
         row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
         n_steps=n_steps, n_vertices=n_vertices, n_words=n_words,
-        n_rows=n_rows, pred=pred, state_upd=state_upd, conn_mode=conn_mode,
-        block_c=block_c, interpret=resolve_interpret(interpret))
+        n_rows=n_rows, n_cols=n_cols, pred=pred, state_upd=state_upd,
+        conn_mode=conn_mode, block_c=block_c,
+        interpret=resolve_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=_PRUNED_STATICS)
@@ -97,7 +98,7 @@ def fused_extend_pruned_mp(col_idx, offsets, starts, emb_flat, vlo, vhi,
                            cand_cap: int, out_cap: int, n_steps: int,
                            n_vertices: int, n_words: int, n_rows: int,
                            pred, state_upd=None, conn_mode: str = "search",
-                           block_c: int = 512,
+                           n_cols: int | None = None, block_c: int = 512,
                            interpret: bool | None = None):
     """Concurrent-grid eager-pruning fused extend (two-pass tile-count
     scan compaction).  Identical argument/return contract — and bitwise
@@ -111,8 +112,9 @@ def fused_extend_pruned_mp(col_idx, offsets, starts, emb_flat, vlo, vhi,
         col_idx, offsets, starts, emb_flat, vlo, vhi, state, bits,
         row_slot, labels, k=k, cand_cap=cand_cap, out_cap=out_cap,
         n_steps=n_steps, n_vertices=n_vertices, n_words=n_words,
-        n_rows=n_rows, pred=pred, state_upd=state_upd, conn_mode=conn_mode,
-        block_c=block_c, interpret=resolve_interpret(interpret))
+        n_rows=n_rows, n_cols=n_cols, pred=pred, state_upd=state_upd,
+        conn_mode=conn_mode, block_c=block_c,
+        interpret=resolve_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=("n_slots", "cand_cap", "n_uedges",

@@ -6,7 +6,10 @@ k-FSM on a generated or named graph.  ``--plan-cache`` persists the
 capacity plan so later invocations skip the inspection pass entirely
 (plan-once / execute-many); ``--repeat`` reruns the mining to show the
 warm-executor (single-jit) path; ``--blocks`` splits the level-0 worklist
-into K edge blocks served by one compiled executor.
+into K edge blocks served by one compiled executor (``--blocks auto`` /
+``--block-bytes`` sizes the blocks to a device-byte budget and streams
+them through the double-buffered block scheduler); ``--relabel`` mines
+the degree-ordered relabeling (same results, hot adjacency core packed).
 
 Arbitrary patterns go through the pattern compiler: ``--pattern diamond``
 (any library name; ``--pattern list`` prints them) or ``--pattern-edges
@@ -90,9 +93,23 @@ def main(argv=None):
     ap.add_argument("--labels", type=int, default=None)
     ap.add_argument("--minsup", type=int, default=100)
     ap.add_argument("--block-size", type=int, default=None)
-    ap.add_argument("--blocks", type=int, default=None,
+    ap.add_argument("--blocks", default=None, metavar="K|auto",
                     help="split the level-0 worklist into this many edge "
-                         "blocks (alternative to --block-size)")
+                         "blocks (alternative to --block-size); 'auto' "
+                         "derives the block size from --block-bytes")
+    ap.add_argument("--block-bytes", type=int, default=None, metavar="B",
+                    help="device-byte budget for the streaming block "
+                         "scheduler: the sampled estimator prices the "
+                         "full-worklist plan and the largest block size "
+                         "whose scaled plan fits is used (implies "
+                         "--blocks auto)")
+    ap.add_argument("--relabel", nargs="?", const="degree", default=None,
+                    metavar="ORDER",
+                    help="relabel the graph before mining (default order: "
+                         "degree — hubs first, so the packed adjacency "
+                         "core covers the hot rows and contiguous edge "
+                         "blocks are locality-coherent); results are "
+                         "bitwise identical to the unrelabeled run")
     ap.add_argument("--plan-cache", default=None, metavar="DIR",
                     help="persist/load capacity plans; a warm cache skips "
                          "the per-level inspection pass")
@@ -170,14 +187,25 @@ def main(argv=None):
     if args.backend is not None and args.backend not in available_backends():
         raise SystemExit(f"unknown backend {args.backend!r} "
                          f"(available: {', '.join(available_backends())})")
-    miner = Miner(g, app, backend=args.backend)
+    miner = Miner(g, app, backend=args.backend,
+                  relabel=args.relabel or False)
+    if miner.relabeling is not None:
+        hit = miner.pack_hit_rate()
+        print(f"[mine] relabeled ({args.relabel} order)"
+              + (f", pack hit-rate {hit:.4f}" if hit is not None else ""))
     block_size = args.block_size
-    if args.blocks:
+    block_bytes = args.block_bytes
+    if args.blocks and args.blocks != "auto":
         if app.kind == "edge":
             raise SystemExit("--blocks: FSM blocking is disabled "
                              "(global support sync); use mine_sharded")
         m = int(miner.init_edges()[0].shape[0])
-        block_size = -(-m // args.blocks)
+        block_size = -(-m // int(args.blocks))
+    if (args.blocks == "auto" or block_bytes) and app.kind == "edge":
+        raise SystemExit("--block-bytes: FSM blocking is disabled "
+                         "(global support sync); use mine_sharded")
+    if args.blocks == "auto" and not block_bytes:
+        block_bytes = 64 << 20
     plan_cache = args.plan_cache
     if plan_cache is not None and args.plan_cache_max is not None:
         from repro.core import PlanCache
@@ -185,7 +213,8 @@ def main(argv=None):
     r = None
     for i in range(max(args.repeat, 1)):
         t0 = time.time()
-        r = miner.run(block_size=block_size, collect_stats=args.stats,
+        r = miner.run(block_size=block_size, block_bytes=block_bytes,
+                      collect_stats=args.stats,
                       plan_cache=plan_cache, plan_source=args.plan,
                       safety_factor=args.safety_factor,
                       sample_size=args.sample_size)
@@ -197,6 +226,9 @@ def main(argv=None):
               f"caps={rep['caps']} out_cap_total={rep['out_cap_total']} "
               f"compiles={rep['compiles']} "
               f"executions={rep['executions']} replans={rep['replans']}")
+    peak = miner.peak_live_bytes()
+    if peak is not None and (block_size or block_bytes):
+        print(f"[mine] peak live bytes (analytic): {peak}")
     if app.kind == "edge":
         found = [(int(c), int(s)) for c, s in zip(r.codes, r.supports)
                  if c != np.iinfo(np.int32).max and s >= app.min_support]

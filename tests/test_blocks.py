@@ -1,0 +1,297 @@
+"""Locality-aware layout + streaming block scheduler (PR 8).
+
+Bitwise parity contracts: degree-relabeled mining equals unrelabeled
+mining, blocked equals unblocked, on every phase backend; blocked runs
+checkpoint/resume mid-queue; the core pack's hit rate materially
+improves under relabeling; the analytic live-bytes model bounds blocked
+runs below unblocked ones; plans transfer across backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Miner, PlanCache, make_fsm_app, make_mc_app, \
+    make_tc_app
+from repro.core.blocks import (BlockQueue, EdgeBlock, auto_block_size,
+                               estimate_live_bytes, make_blocks, scale_caps,
+                               stack_blocks)
+from repro.core.plan import bucket_pow2, compatible_caps, plan_transfer_key
+from repro.graph import generators as G
+from repro.graph.csr import core_size, pack_adjacency, pack_hit_rate, relabel
+from repro.graph.sampler import sample_worklist_stratified
+
+BACKENDS = pytest.mark.parametrize(
+    "backend", ["reference", "pallas", "pallas-mp"],
+    ids=["reference", "pallas", "pallas_mp"])
+RELABEL = pytest.mark.parametrize("use_relabel", [False, True],
+                                  ids=["plain", "relabel"])
+
+
+# -- relabeling: permutation invariance ---------------------------------------
+
+def test_relabel_graph_structure():
+    g = G.rmat(7, edge_factor=4, seed=1)
+    rl = relabel(g, order="degree")
+    rp = np.asarray(rl.graph.row_ptr)
+    deg = rp[1:] - rp[:-1]
+    assert (np.diff(deg) <= 0).all()             # hubs first
+    # perm/inv are mutually inverse permutations
+    assert (rl.perm[rl.inv] == np.arange(g.n_vertices)).all()
+    # edge multiset is the permuted original
+    rp0 = np.asarray(g.row_ptr)
+    src0 = np.repeat(np.arange(g.n_vertices), rp0[1:] - rp0[:-1])
+    old = {(min(u, v), max(u, v))
+           for u, v in zip(src0, np.asarray(g.col_idx))}
+    src1 = np.repeat(np.arange(g.n_vertices), deg)
+    new = {(min(u, v), max(u, v))
+           for u, v in zip(rl.inv[src1], rl.inv[np.asarray(rl.graph.col_idx)])}
+    assert old == new
+
+
+@BACKENDS
+def test_relabel_count_parity(er_graph, backend):
+    r0 = Miner(er_graph, make_tc_app(), backend=backend).run()
+    r1 = Miner(er_graph, make_tc_app(), backend=backend,
+               relabel=True).run()
+    assert r1.count == r0.count
+
+
+@BACKENDS
+def test_relabel_pattern_map_parity(er_graph, backend):
+    r0 = Miner(er_graph, make_mc_app(4), backend=backend).run()
+    r1 = Miner(er_graph, make_mc_app(4), backend=backend,
+               relabel=True).run()
+    assert r1.count == r0.count
+    assert (np.asarray(r1.p_map) == np.asarray(r0.p_map)).all()
+
+
+def test_relabel_fsm_parity(labeled_graph):
+    """FSM canonical codes and MNI supports are permutation-invariant."""
+    app = make_fsm_app(3, min_support=2, max_patterns=64)
+    r0 = Miner(labeled_graph, app).run()
+    r1 = Miner(labeled_graph,
+               make_fsm_app(3, min_support=2, max_patterns=64),
+               relabel=True).run()
+    assert r1.count == r0.count
+    assert (np.asarray(r1.codes) == np.asarray(r0.codes)).all()
+    assert (np.asarray(r1.supports) == np.asarray(r0.supports)).all()
+
+
+# -- blocked == unblocked, relabel x backend (CI parity matrix) ---------------
+
+@BACKENDS
+@RELABEL
+def test_blocked_parity(er_graph, backend, use_relabel):
+    r0 = Miner(er_graph, make_mc_app(3), backend=backend).run()
+    r1 = Miner(er_graph, make_mc_app(3), backend=backend,
+               relabel=use_relabel).run(block_size=16)
+    assert r1.count == r0.count
+    assert (np.asarray(r1.p_map) == np.asarray(r0.p_map)).all()
+
+
+@RELABEL
+def test_byte_budget_blocked_parity(er_graph, use_relabel):
+    """--block-bytes path: auto-sized blocks, estimator-seeded executor."""
+    m0 = Miner(er_graph, make_tc_app())
+    r0 = m0.run()
+    m1 = Miner(er_graph, make_tc_app(), relabel=use_relabel)
+    r1 = m1.run(block_bytes=16 << 10, plan_source="estimate")
+    assert r1.count == r0.count
+
+
+# -- core pack: hit rate materially improved by relabeling --------------------
+
+def test_core_pack_hit_rate_improves_on_power_law():
+    g = G.rmat(10, edge_factor=8, seed=7)
+    budget = 16 << 10
+    plain = pack_hit_rate(g, pack_adjacency(g, max_bytes=budget, core=True))
+    rl = relabel(g, order="degree")
+    packed = pack_adjacency(rl.graph, max_bytes=budget, core=True)
+    relabeled = pack_hit_rate(rl.graph, packed)
+    assert relabeled > plain + 0.05              # material, not noise
+    # the square core covers ~sqrt-factor more rows than a full-width
+    # partial pack under the same byte budget
+    c = core_size(g.n_vertices, budget)
+    full_rows = budget // (-(-g.n_vertices // 32) * 4)
+    assert packed.n_cols == c and c > full_rows
+
+
+def test_miner_pack_hit_rate_surface():
+    g = G.rmat(9, edge_factor=8, seed=7)
+    m = Miner(g, make_tc_app(), relabel=True, pack_max_bytes=8 << 10,
+              pack_partial=True)
+    hit = m.pack_hit_rate()
+    assert hit is not None and 0.0 < hit <= 1.0
+
+
+# -- live-bytes model / auto block size ---------------------------------------
+
+def test_estimate_live_bytes_monotone():
+    caps = ((4096, 1024), (8192, 2048))
+    base = estimate_live_bytes("vertex", caps, (), 2048)
+    assert estimate_live_bytes("vertex", caps, (), 4096) > base
+    bigger = tuple((c * 2, o * 2) for c, o in caps)
+    assert estimate_live_bytes("vertex", bigger, (), 2048) > base
+    e = estimate_live_bytes("edge", caps, (512, 512), 2048)
+    assert e > 0
+    assert estimate_live_bytes("edge", caps, (1024, 1024), 2048) > e
+
+
+def test_auto_block_size_fits_budget():
+    caps = ((65536, 16384), (131072, 32768))
+    m = 100_000
+    full = estimate_live_bytes("vertex", caps, (), bucket_pow2(m))
+    assert auto_block_size(m, caps, (), full + 1) == m   # no blocking
+    b = auto_block_size(m, caps, (), full // 8)
+    assert b < m
+    sc, fc = scale_caps(caps, (), b / m)
+    assert estimate_live_bytes("vertex", sc, fc, b) <= full // 8
+    # hopeless budget floors at min_block instead of looping forever
+    assert auto_block_size(m, caps, (), 1) == 128
+
+
+def test_blocked_peak_bounded_below_unblocked():
+    # big enough that the block cap0 clears bucket_pow2's 128 floor
+    g = G.rmat(8, edge_factor=6, seed=3)
+    m_full = Miner(g, make_tc_app())
+    r_full = m_full.run(plan_source="estimate")
+    m_blk = Miner(g, make_tc_app())
+    r_blk = m_blk.run(block_size=128, plan_source="estimate")
+    assert r_blk.count == r_full.count
+    assert m_blk.peak_live_bytes() < m_full.peak_live_bytes()
+
+
+# -- block construction / queue -----------------------------------------------
+
+def test_make_blocks_covers_worklist():
+    blocks = make_blocks(100, 32)
+    assert [b.lo for b in blocks] == [0, 32, 64, 96]
+    assert sum(b.n for b in blocks) == 100
+    padded = make_blocks(100, 64, count=4)
+    assert len(padded) == 4 and padded[-1].n == 0
+    with pytest.raises(ValueError):
+        make_blocks(100, 10, count=2)
+    assert make_blocks(0, 8) == [EdgeBlock(index=0, lo=0, n=0)]
+
+
+def test_block_queue_stages_padded_blocks():
+    src = np.arange(10, dtype=np.int32)
+    q = BlockQueue((src, src * 2), make_blocks(10, 4), cap0=8)
+    out = list(q)
+    assert len(out) == 3
+    blk, (s, d) = out[1]
+    assert blk.lo == 4 and blk.n == 4
+    assert s.shape == (8,) and np.asarray(s)[:4].tolist() == [4, 5, 6, 7]
+    assert np.asarray(s)[4:].tolist() == [0] * 4          # zero padding
+    assert np.asarray(d)[:4].tolist() == [8, 10, 12, 14]
+    # stack_blocks: same padding contract, stacked per block
+    sb, _ = stack_blocks((src, src), make_blocks(10, 4, count=3), cap0=8)
+    assert sb.shape == (3, 8)
+    assert np.asarray(sb)[1, :4].tolist() == [4, 5, 6, 7]
+
+
+# -- checkpoint / resume across the block queue -------------------------------
+
+class _Killed(Exception):
+    pass
+
+
+@RELABEL
+def test_blocked_kill_resume(er_graph, use_relabel):
+    """A run killed mid-block-queue resumes from its last checkpoint
+    payload and finishes with exactly the unblocked counts."""
+    app = make_mc_app(3)
+    r0 = Miner(er_graph, app).run()
+    m = Miner(er_graph, make_mc_app(3), relabel=use_relabel)
+    saved = []
+
+    def cb(bi, levels, payload):
+        saved.append(dict(payload))
+        if bi == 1:
+            raise _Killed
+
+    with pytest.raises(_Killed):
+        m.run(block_size=16, checkpoint_cb=cb)
+    assert saved[-1]["block"] == 1 and len(saved) == 2
+    # fresh miner (process restart): only the payload survives
+    m2 = Miner(er_graph, make_mc_app(3), relabel=use_relabel)
+    r = m2.run(block_size=16, resume_from=saved[-1])
+    assert r.count == r0.count
+    assert (np.asarray(r.p_map) == np.asarray(r0.p_map)).all()
+
+
+def test_resume_past_all_blocks_is_identity(er_graph):
+    r0 = Miner(er_graph, make_tc_app()).run()
+    m = Miner(er_graph, make_tc_app())
+    done = []
+    m.run(block_size=16, checkpoint_cb=lambda b, lv, pl: done.append(pl))
+    r = m.run(block_size=16, resume_from=done[-1])
+    assert r.count == r0.count                   # nothing re-mined, carried
+
+
+# -- cross-backend plan transfer ----------------------------------------------
+
+def test_transfer_key_is_backend_agnostic(er_graph):
+    app = make_tc_app()
+    m_ref = Miner(er_graph, app, backend="reference")
+    m_pal = Miner(er_graph, app, backend="pallas")
+    ex_r = m_ref.executor(64)
+    ex_p = m_pal.executor(64)
+    assert ex_r.transfer_key == ex_p.transfer_key == \
+        plan_transfer_key(app, True)
+    assert ex_r.signature != ex_p.signature      # exact hits stay per-backend
+
+
+def test_cross_backend_plan_transfer(tmp_path, er_graph):
+    """A plan recorded on the reference backend seeds a pallas run on the
+    same graph: exact signature misses (backend differs), the transfer
+    key matches, and the run goes through source=="transfer"."""
+    cache = PlanCache(str(tmp_path))
+    m_ref = Miner(er_graph, make_tc_app(), backend="reference")
+    r_ref = m_ref.run(plan_cache=cache)
+    m_pal = Miner(er_graph, make_tc_app(), backend="pallas")
+    r_pal = m_pal.run(plan_cache=cache, plan_source="cache")
+    assert r_pal.count == r_ref.count
+    (ex,) = m_pal._executors.values()
+    assert ex.plan.source in ("transfer", "grown")
+    # the adopted plan had to pass the shape validation
+    (ex_ref,) = m_ref._executors.values()
+    assert compatible_caps(ex_ref.plan, m_pal.app)
+
+
+def test_nearest_weights_worklist_ratio(tmp_path, er_graph):
+    """With cap0 given, a same-scale plan beats a tiny plan even when the
+    tiny one's degree profile is identical (same graph)."""
+    cache = PlanCache(str(tmp_path))
+    m = Miner(er_graph, make_tc_app())
+    ex_small = m.executor(4, plan_cache=cache)
+    ex_small.adopt_plan(((8, 8),), source="inspect")
+    ex_big = m.executor(256, plan_cache=cache)
+    ex_big.adopt_plan(((1024, 512),), source="inspect")
+    profile, n_edges = m.profile_sketch()
+    near = cache.nearest(ex_big.app_key, "vertex", profile, n_edges,
+                         exclude=(), cap0=128)
+    assert near is not None and near.cap0 == 256
+
+
+# -- stratified estimator sampling --------------------------------------------
+
+def test_stratified_sample_covers_every_band():
+    rng = np.random.default_rng(0)
+    idx = sample_worklist_stratified(1000, 64, rng, bands=8)
+    assert len(idx) == 64 and len(set(idx.tolist())) == 64
+    assert idx.min() >= 0 and idx.max() < 1000
+    # every contiguous eighth of the worklist is represented
+    hist, _ = np.histogram(idx, bins=8, range=(0, 1000))
+    assert (hist > 0).all()
+    # degenerate cases
+    assert len(sample_worklist_stratified(5, 64, rng)) == 5
+    assert len(sample_worklist_stratified(100, 0, rng)) == 0
+
+
+def test_relabeled_estimate_plan_uses_stratified_sample(er_graph):
+    """The estimator stays correct (overflow backstop) under the
+    stratified sampler a relabeled miner selects."""
+    r0 = Miner(er_graph, make_tc_app()).run()
+    m = Miner(er_graph, make_tc_app(), relabel=True)
+    r1 = m.run(plan_source="estimate", sample_size=32)
+    assert r1.count == r0.count

@@ -347,9 +347,10 @@ def test_bench_guard_noise_floor_and_uniform_scope():
     # including the multi-pattern workload the trie is judged by
     import json
     import pathlib
+    from benchmarks.bench_backends import SCHEMA
     data = json.loads((pathlib.Path(__file__).parent.parent /
                        "BENCH_backends.json").read_text())
-    assert data["schema"] == 6
+    assert data["schema"] == SCHEMA
     keys = {(r["graph"], r["app"], r["backend"]) for r in data["records"]}
     for g in ("er100", "er200"):
         for a in ("tc", "4-cf", "3-mc", "psm-diamond", "psm-5-clique",
