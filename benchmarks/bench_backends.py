@@ -53,7 +53,15 @@ degree-relabeled rmat graph, square bitmap *core* pack under a
 constrained byte budget, worklist streamed through the block scheduler
 at a live-byte budget of a quarter of the unblocked peak), which
 asserts bitwise parity with the unblocked run and records the
-relabeled-vs-plain pack hit rates and blocked-vs-unblocked peaks.
+relabeled-vs-plain pack hit rates and blocked-vs-unblocked peaks;
+schema 9 sources two columns from the observability metrics registry
+(:mod:`repro.obs.metrics`) instead of bench-side timing:
+``cap_utilization`` (min over levels of ``mine.cap_utilization`` —
+survivors over planned out_cap, the buffer-tightness figure, recorded
+during each row's host-stats run; None on the warm-replay tc-oocore
+rows, which never inspect) and ``stage_overlap`` (the block scheduler's
+``blocks.stage_overlap`` gauge — mining time over mining+staging wall
+time, 1.0 = host staging fully hidden; None on unblocked rows).
 
 ``--check`` is the CI perf guard: before overwriting, the committed
 baseline is loaded and any (graph, app, backend) row whose warm_plan_s
@@ -85,6 +93,7 @@ from benchmarks.common import emit
 from repro.core import (Miner, Pattern, make_cf_app, make_fsm_app,
                         make_mc_app, make_tc_app, pattern_app)
 from repro.graph import generators as G
+from repro.obs import metrics as obs_metrics
 
 BACKENDS = ("reference", "pallas", "pallas-mp")
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
@@ -92,8 +101,21 @@ OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
 REGRESSION_FACTOR = 2.0
 ABS_SLACK_S = 0.005          # noise floor: ratio alone flags <5ms jitter
 WARM_SAMPLES = 5
-SCHEMA = 8
+SCHEMA = 9
 MAX_EST_REPLANS = 1          # --check: estimate may grow-retry at most once
+
+
+def _min_cap_utilization():
+    """Min over levels of the mine.cap_utilization gauges (None if none).
+
+    The worst (loosest) per-level buffer of the row's host-stats run —
+    sourced from the obs metrics registry rather than bench-side
+    re-derivation, so the bench reports exactly what ``--metrics`` shows.
+    """
+    gauges = obs_metrics.find("mine.cap_utilization")
+    if not gauges:
+        return None
+    return min(g.value for g in gauges.values())
 
 
 def graphs(small: bool):
@@ -216,11 +238,13 @@ def blocked_rows(small: bool, out: list[str]) -> list[dict]:
         # warm: re-stream at the block size the byte budget derived
         cap0 = min(m_bl._executors)
         samples = []
+        obs_metrics.reset()          # stage_overlap reads the warm streams
         for _ in range(WARM_SAMPLES):
             t0 = time.perf_counter()
             r = m_bl.run(block_size=cap0)
             samples.append(time.perf_counter() - t0)
         warm = statistics.median(samples)
+        overlap = obs_metrics.value("blocks.stage_overlap")
         peak_bl = m_bl.peak_live_bytes()
         assert peak_bl < peak_un, \
             f"blocked peak not bounded: {gname}/{backend}"
@@ -238,6 +262,8 @@ def blocked_rows(small: bool, out: list[str]) -> list[dict]:
                         "cold_plan_s": cold, "warm_plan_s": warm,
                         "blocked": True, "block_cap0": cap0,
                         "n_replans": 0,
+                        "cap_utilization": None,   # warm replay: no host
+                        "stage_overlap": overlap,
                         "peak_live_bytes": peak_bl,
                         "peak_live_bytes_unblocked": peak_un,
                         "pack_hit_rate": hit_rel,
@@ -268,10 +294,14 @@ def run(small: bool = True, check: bool = False) -> list[str]:
             t0 = time.perf_counter()
             r_cold = m.run()
             cold = time.perf_counter() - t0
-            # host path, jits warm: the per-level sync being replaced
+            # host path, jits warm: the per-level sync being replaced.
+            # Registry reset first so the cap-utilization column reads
+            # THIS row's host run, not a previous cell's.
+            obs_metrics.reset()
             t0 = time.perf_counter()
             m.run(collect_stats=True)    # collect_stats forces host
             host = time.perf_counter() - t0
+            cap_util = _min_cap_utilization()
             m.run()                      # compiles the plan executor
             # steady state: one jit call per run.  Median of N — the
             # de-flaked statistic both sides of the --check guard use.
@@ -319,6 +349,8 @@ def run(small: bool = True, check: bool = False) -> list[str]:
                             "compaction_passes": caps["compaction_passes"],
                             "extend_pruned": caps["extend_pruned"],
                             "extend_edge": caps["extend_edge"],
+                            "cap_utilization": cap_util,
+                            "stage_overlap": None,   # unblocked: no queue
                             "peak_live_bytes": m.peak_live_bytes(),
                             "pack_hit_rate": m.pack_hit_rate(),
                             "n_vertices": g.n_vertices,

@@ -66,6 +66,8 @@ from repro.graph.csr import CSRGraph, degree_profile
 from repro.graph.csr import pack_hit_rate as _pack_hit_rate
 from repro.graph.csr import relabel as relabel_graph
 from repro.graph.dag import orient_dag
+from repro.obs import metrics as _M
+from repro.obs import trace as _T
 
 _bucket = bucket_pow2          # back-compat alias
 _INT_MAX = np.iinfo(np.int32).max
@@ -96,6 +98,29 @@ class MineResult:
 # Phase-op binding: one (ctx, app, backend) triple, jitted or traceable
 
 
+def _obs_op(name: str, backend_name: str, fn):
+    """Wrap a host-dispatched phase op in an (optional) trace span.
+
+    Dispatch granularity by default: the span measures the host-side
+    dispatch of the jitted op (JAX async dispatch returns before the
+    device finishes), which is exactly what the warm path is allowed to
+    pay — no forced sync.  With ``--trace-sync``
+    (:func:`repro.obs.trace.sync_enabled`) the wrapper blocks on the
+    op's result for exact attribution.  Only applied to the host
+    driver's jitted closures (``_PhaseOps(jit=True)``) — the raw ops
+    traced into the executor's single jit must stay uninstrumented.
+    """
+    def wrapped(*args, **kwargs):
+        if not _T.on:
+            return fn(*args, **kwargs)
+        with _T.span("op." + name, cat="phase", backend=backend_name):
+            out = fn(*args, **kwargs)
+            if _T.sync_enabled():
+                jax.block_until_ready(out)
+        return out
+    return wrapped
+
+
 class _PhaseOps:
     """Backend phase ops bound to one (ctx, app, backend) triple.
 
@@ -103,7 +128,10 @@ class _PhaseOps:
     arguments — the host driver's mode, where per-level closures are
     compiled once per bucketed capacity and reused across runs and blocks.
     ``jit=False`` leaves the ops raw so a whole mining run composes into a
-    single jit (executor / ``shard_map`` / dry-run).
+    single jit (executor / ``shard_map`` / dry-run).  In jitted (host)
+    mode every op is additionally bracketed by a trace span
+    (:func:`_obs_op`) — the ``_PhaseOps`` seam is where backend op
+    timings come from, uniformly for all registered backends.
     """
 
     def __init__(self, ctx: GraphCtx, app: MiningApp, backend,
@@ -130,11 +158,13 @@ class _PhaseOps:
                 return be.reduce_count(ctx, app, emb, n, st)
 
             if jit:
-                inspect = jax.jit(inspect, static_argnames=("cand_cap",))
-                bound = jax.jit(bound)
-                extend = jax.jit(extend,
-                                 static_argnames=("cand_cap", "out_cap"))
-                reduce = jax.jit(reduce)
+                bn = be.name
+                inspect = _obs_op("inspect_vertex", bn, jax.jit(
+                    inspect, static_argnames=("cand_cap",)))
+                bound = _obs_op("bound_vertex", bn, jax.jit(bound))
+                extend = _obs_op("extend_pruned", bn, jax.jit(
+                    extend, static_argnames=("cand_cap", "out_cap")))
+                reduce = _obs_op("reduce_count", bn, jax.jit(reduce))
             self._inspect, self._bound = inspect, bound
             self._extend, self._reduce = extend, reduce
         else:
@@ -156,13 +186,15 @@ class _PhaseOps:
                 return be.filter_levels(lvls, keep, out_cap)
 
             if jit:
-                bound_e = jax.jit(bound_e)
-                inspect_e = jax.jit(inspect_e,
-                                    static_argnames=("cand_cap",))
-                extend_e = jax.jit(extend_e,
-                                   static_argnames=("cand_cap", "out_cap"))
-                reduce_e = jax.jit(reduce_e)
-                filter_e = jax.jit(filter_e, static_argnames=("out_cap",))
+                bn = be.name
+                bound_e = _obs_op("bound_edge", bn, jax.jit(bound_e))
+                inspect_e = _obs_op("inspect_edge", bn, jax.jit(
+                    inspect_e, static_argnames=("cand_cap",)))
+                extend_e = _obs_op("extend_edge", bn, jax.jit(
+                    extend_e, static_argnames=("cand_cap", "out_cap")))
+                reduce_e = _obs_op("reduce_domain", bn, jax.jit(reduce_e))
+                filter_e = _obs_op("filter_levels", bn, jax.jit(
+                    filter_e, static_argnames=("out_cap",)))
             self._bound_e, self._inspect_e = bound_e, inspect_e
             self._extend_e, self._reduce_e = extend_e, reduce_e
             self._filter_e = filter_e
@@ -374,12 +406,19 @@ def run_level_loop(pipe, policy, collect_stats: bool = False,
                                 time.perf_counter() - t0,
                                 nbytes + pipe.frontier_nbytes()))
 
+    # Observability is host-path only: a traceable policy means this
+    # loop body is being traced into a jit (executor / shard_map /
+    # estimator probe), where a span would time tracing, not running,
+    # and any int() would force a device sync the warm path must not pay.
+    host = not policy.traceable
     t0 = time.perf_counter()
     pre_level = pipe.pre_loop(policy)
     if collect_stats and pre_level is not None:
         record(pre_level, 0, t0)
     for level in pipe.level_range():
         t0 = time.perf_counter()
+        sp = (_T.span("level", level=level).__enter__()
+              if (host and _T.on) else None)
         cand_cap, out_cap = policy.extend_caps(pipe)
         # one fused enumeration per level: extend_pruned applies the
         # app's eager toAdd predicate and stream-compacts in the same
@@ -388,11 +427,58 @@ def run_level_loop(pipe, policy, collect_stats: bool = False,
         n_cand, n_surv = pipe.extend(cand_cap, out_cap)
         policy.note_extend(n_cand, n_surv, cand_cap, out_cap)
         pipe.reduce_filter(level, policy)
+        if host:
+            # cap-utilization: true counts over the planned caps — the
+            # exact-planner contract (util <= 1) made visible, and the
+            # figure every later perf PR reports buffer tightness with
+            nc, ns = int(n_cand), int(n_surv)
+            _M.set_gauge("mine.cap_utilization",
+                         ns / out_cap if out_cap else 0.0, level=level)
+            _M.set_gauge("mine.cand_cap_utilization",
+                         nc / cand_cap if cand_cap else 0.0, level=level)
+            _M.inc("mine.candidates", nc, level=level)
+            _M.inc("mine.survivors", ns, level=level)
+            if sp is not None:
+                sp.set(candidates=nc, survivors=ns, cand_cap=cand_cap,
+                       out_cap=out_cap,
+                       utilization=ns / out_cap if out_cap else 0.0)
+                sp.end()
         if collect_stats:
             record(level, int(n_cand), t0)
         if checkpoint_cb is not None:
             checkpoint_cb(level, pipe.levels, pipe.checkpoint_payload())
     return stats
+
+
+def _note_live_bytes(kind: str, plan, cap0: int, stats,
+                     block: Optional[int] = None) -> None:
+    """Record actual-vs-predicted peak live bytes; warn on model drift.
+
+    The PR-8 blocking story rests on :func:`~repro.core.blocks.
+    estimate_live_bytes` upper-bounding what a run actually keeps
+    device-resident ("blocked < unblocked by construction").  Whenever a
+    host run measured real per-level ``live_bytes`` (``collect_stats``),
+    this compares the observed peak against the model's prediction for
+    the plan that drove the run: both land in the metrics registry as
+    gauges, and an over-run (actual > predicted — the model drifted
+    under the claim) emits a ``live_bytes_overrun`` warning event plus a
+    counter, making the construction checkable at runtime instead of
+    asserted in a docstring.
+    """
+    if plan is None or not stats:
+        return
+    actual = max((s.live_bytes for s in stats), default=0)
+    if actual <= 0:
+        return
+    predicted = estimate_live_bytes(kind, plan.caps, plan.filter_caps,
+                                    cap0)
+    labels = {} if block is None else {"block": block}
+    _M.set_gauge("blocks.live_bytes.actual", actual, **labels)
+    _M.set_gauge("blocks.live_bytes.predicted", predicted, **labels)
+    if actual > predicted:
+        _M.inc("blocks.live_bytes.overrun")
+        _T.instant("live_bytes_overrun", cat="warning", actual=actual,
+                   predicted=predicted, **labels)
 
 
 class Miner:
@@ -580,22 +666,26 @@ class Miner:
                    or checkpoint_cb is not None
                    else (plan_source, safety_factor, sample_size,
                          plan_seed, cache))
-        if self.app.kind == "edge":
-            # paper §5.2: blocking disabled for FSM (global support sync);
-            # the bounded/sharded FSM paths live in bounded_mine_edge.
-            return self._run_edge(collect_stats, checkpoint_cb, cache,
-                                  seeding)
-        src, dst = self.init_edges()
-        m = int(src.shape[0])
-        if block_bytes and not block_size:
-            block_size = self._auto_block_size(m, block_bytes, sample_size,
-                                               safety_factor, plan_seed)
-        if not block_size or block_size >= m:
-            return self._run_vertex_full(src, dst, m, collect_stats,
-                                         checkpoint_cb, cache, seeding)
-        return self._run_vertex_blocked(src, dst, m, block_size,
-                                        collect_stats, checkpoint_cb, cache,
-                                        seeding, resume_from)
+        with _T.span("miner.run", app=self.app.name,
+                     backend=self.backend.name, kind=self.app.kind,
+                     plan_source=plan_source):
+            if self.app.kind == "edge":
+                # paper §5.2: blocking disabled for FSM (global support
+                # sync); bounded/sharded FSM paths: bounded_mine_edge.
+                return self._run_edge(collect_stats, checkpoint_cb, cache,
+                                      seeding)
+            src, dst = self.init_edges()
+            m = int(src.shape[0])
+            if block_bytes and not block_size:
+                block_size = self._auto_block_size(m, block_bytes,
+                                                   sample_size,
+                                                   safety_factor, plan_seed)
+            if not block_size or block_size >= m:
+                return self._run_vertex_full(src, dst, m, collect_stats,
+                                             checkpoint_cb, cache, seeding)
+            return self._run_vertex_blocked(src, dst, m, block_size,
+                                            collect_stats, checkpoint_cb,
+                                            cache, seeding, resume_from)
 
     def _auto_block_size(self, m: int, budget_bytes: int,
                          sample_size: int = 256,
@@ -644,11 +734,14 @@ class Miner:
     # -- vertex-induced paths ----------------------------------------------
 
     def _host_run(self, pipe, executor: MiningExecutor, collect_stats,
-                  checkpoint_cb) -> MineResult:
+                  checkpoint_cb, block: Optional[int] = None) -> MineResult:
         """Inspection-execution host run; records the executor's plan."""
         policy = HostCapPolicy()
         stats = run_level_loop(pipe, policy, collect_stats, checkpoint_cb)
         executor.adopt_plan(policy.caps, policy.filter_caps)
+        if collect_stats:
+            _note_live_bytes(self.app.kind, executor.plan, executor.cap0,
+                             stats, block=block)
         return pipe.result(stats)
 
     def _run_vertex_full(self, src, dst, m, collect_stats, checkpoint_cb,
@@ -694,14 +787,16 @@ class Miner:
         blocks = [b for b in make_blocks(m, block_size) if b.index > done]
         queue = BlockQueue((np.asarray(src), np.asarray(dst)), blocks, cap0)
         for blk, (s, d) in queue:
-            if collect_stats or not ex.has_plan:
-                r = self._host_run(_VertexPipeline(self.ops, s, d, blk.n),
-                                   ex, collect_stats, None)
-                cnt, pm = r.count, r.p_map
-                stats.extend(r.stats)
-            else:
-                cnt, pm_arr = ex.execute(s, d, blk.n)
-                pm = pm_arr if self._p_map_meaningful() else None
+            with _T.span("block", index=blk.index, n=blk.n):
+                if collect_stats or not ex.has_plan:
+                    r = self._host_run(
+                        _VertexPipeline(self.ops, s, d, blk.n), ex,
+                        collect_stats, None, block=blk.index)
+                    cnt, pm = r.count, r.p_map
+                    stats.extend(r.stats)
+                else:
+                    cnt, pm_arr = ex.execute(s, d, blk.n)
+                    pm = pm_arr if self._p_map_meaningful() else None
             total += cnt
             if pm is not None:
                 p_map = pm if p_map is None else p_map + pm

@@ -722,6 +722,7 @@ class ReferenceBackend(PhaseBackend):
 
     def extend_pruned(self, ctx, app, emb, n_valid, state, cand_cap,
                       out_cap, fuse_filter=True):
+        self.note_op("extend_pruned", mode="xla")
         emb, state = _pad_empty_frontier(emb, state)
         row, u, src_slot, add, total = self._vertex_candidates(
             ctx, app, emb, n_valid, state, cand_cap)
@@ -751,6 +752,7 @@ class ReferenceBackend(PhaseBackend):
 
     def extend_edge(self, ctx, app, v0, vid, his, eid, n_valid, cand_cap,
                     out_cap):
+        self.note_op("extend_edge", mode="xla")
         row, s, u, new_eid, add, total = self._edge_candidates(
             ctx, app, v0, vid, his, eid, n_valid, cand_cap)
         return finish_extend_edge(row, s, u, new_eid, add, out_cap), total

@@ -41,11 +41,15 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as _M
+from repro.obs import trace as _T
 
 
 def bucket_pow2(n: int, minimum: int = 128) -> int:
@@ -587,6 +591,14 @@ def estimate_plan(miner, cap0: int, sample_size: int = 256,
     overflow-grow-and-retry loop guarantees correct results even when
     every level is under-estimated.
     """
+    with _T.span("plan.estimate", cat="plan", sample_size=sample_size):
+        return _estimate_plan(miner, cap0, sample_size, safety_factor,
+                              seed)
+
+
+def _estimate_plan(miner, cap0, sample_size, safety_factor, seed
+                   ) -> tuple[tuple[tuple[int, int], ...],
+                              tuple[int, ...]]:
     from repro.core import engine as E
     from repro.core.phases import get_backend
     from repro.graph.sampler import (sample_worklist,
@@ -720,6 +732,8 @@ class MiningExecutor:
         self._plan = plan
         if self._plan is None and cache is not None:
             self._plan = cache.get(self.signature)
+            if self._plan is not None:
+                self._note_plan_event("cache_hit")
         self._fns: dict = {}
         self.n_compiles = 0
         self.n_executions = 0
@@ -735,6 +749,17 @@ class MiningExecutor:
     def has_plan(self) -> bool:
         return self._plan is not None
 
+    def _note_plan_event(self, event: str, **extra) -> None:
+        """Record plan provenance: a counter plus a trace instant."""
+        _M.inc("plan." + event, kind=self.kind)
+        if _T.on:
+            args = {"signature": self.signature, "cap0": self.cap0}
+            if self._plan is not None:
+                args["caps"] = str(self._plan.caps)
+                args["source"] = self._plan.source
+            args.update(extra)
+            _T.instant("plan." + event, cat="plan", **args)
+
     def attach_cache(self, cache: Optional[PlanCache]) -> None:
         if cache is None or (self.cache is not None
                              and self.cache.directory == cache.directory):
@@ -742,6 +767,8 @@ class MiningExecutor:
         self.cache = cache
         if self._plan is None:
             self._plan = cache.get(self.signature)
+            if self._plan is not None:
+                self._note_plan_event("cache_hit")
         elif self._plan.signature == self.signature:
             cache.put(self._plan)
 
@@ -761,6 +788,7 @@ class MiningExecutor:
                                 source=source, app_key=self.app_key,
                                 profile=profile, n_edges=n_edges,
                                 transfer_key=self.transfer_key)
+        self._note_plan_event(source)
         if self.cache is not None:
             self.cache.put(self._plan)
 
@@ -772,6 +800,7 @@ class MiningExecutor:
         # lifetime)
         self._fns.pop((self._plan.caps, self._plan.filter_caps), None)
         self._plan = self._plan.grown()
+        self._note_plan_event("grown", replans=self.n_replans)
         if self.cache is not None:
             self.cache.put(self._plan)
 
@@ -811,11 +840,31 @@ class MiningExecutor:
     # -- execution ----------------------------------------------------------
 
     def _run_with_retry(self, *args):
-        """Call the compiled plan; on overflow grow it and recompile."""
+        """Call the compiled plan; on overflow grow it and recompile.
+
+        Timing here is exact without extra syncs: ``bool(ovf)``
+        data-depends on the whole pipeline, so each iteration's wall
+        time covers the full device execution.  A call whose
+        ``(caps, filter_caps)`` key is not in the jit cache yet pays
+        tracing + XLA compilation; that first call is recorded as
+        ``executor.compile_s``, later ones as ``executor.replay_s``.
+        """
         for attempt in range(self.max_retries + 1):
-            *out, ovf = self._fn()(*args)
-            self.n_executions += 1
-            if not bool(ovf):
+            fresh = (self._plan.caps,
+                     self._plan.filter_caps) not in self._fns
+            what = "executor.compile" if fresh else "executor.replay"
+            t0 = time.perf_counter()
+            with _T.span(what, cat="executor", kind=self.kind,
+                         attempt=attempt) as sp:
+                *out, ovf = self._fn()(*args)
+                self.n_executions += 1
+                overflowed = bool(ovf)    # forces the device sync
+                sp.set(overflow=overflowed)
+            dt = time.perf_counter() - t0
+            _M.inc(what + "_s", dt, kind=self.kind)
+            _M.inc("executor.compiles" if fresh else "executor.replays",
+                   kind=self.kind)
+            if not overflowed:
                 return out
             if attempt == self.max_retries:
                 break                 # don't grow/persist a plan never run

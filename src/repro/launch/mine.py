@@ -36,6 +36,7 @@ from repro.core import (Miner, Pattern, graph_stats, make_cf_app,
                         pattern_set_app, pattern_set_names,
                         triangle_count_fused)
 from repro.graph import generators as G
+from repro.obs import metrics, report, trace
 
 
 def load_graph(spec: str, labels: int | None = None):
@@ -143,8 +144,28 @@ def main(argv=None):
                          "else reference)")
     ap.add_argument("--fused-tc", action="store_true",
                     help="DAG+intersection fused triangle count")
-    ap.add_argument("--stats", action="store_true")
+    ap.add_argument("--stats", action="store_true",
+                    help="collect per-level stats and print the "
+                         "structured reporter table (level, candidates, "
+                         "survivors, cap, utilization, time)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record host spans + plan-provenance events and "
+                         "write Chrome trace-event JSON (open in "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--trace-sync", action="store_true",
+                    help="with --trace: block on dispatched device work "
+                         "inside each instrumented span so device phases "
+                         "are attributed exactly (serializes dispatch)")
+    ap.add_argument("--metrics", nargs="?", const="-", default=None,
+                    metavar="OUT",
+                    help="dump the metrics registry after the run: no "
+                         "argument / '-' prints the plain-text form, "
+                         "OUT.json writes the JSON snapshot, any other "
+                         "path the text form")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        trace.enable(sync=args.trace_sync)
 
     if args.pattern == "list":
         print("[mine] pattern library:", ", ".join(pattern_names()))
@@ -249,10 +270,18 @@ def main(argv=None):
     else:
         print(f"[mine] {app.name}: count = {r.count} in {dt:.3f}s")
     if args.stats:
-        for s in r.stats:
-            print(f"        level {s.level}: {s.n_embeddings} embeddings, "
-                  f"cap {s.capacity}, {s.bytes / 1e6:.1f} MB, "
-                  f"{s.seconds:.3f}s")
+        print(report.level_table(r.stats))
+    if args.trace:
+        path = trace.save(args.trace)
+        print(f"[mine] trace: {path} ({len(trace.get().events)} events; "
+              f"open in https://ui.perfetto.dev)")
+    if args.metrics is not None:
+        out = metrics.dump(args.metrics)
+        if args.metrics == "-":
+            print("[mine] metrics:")
+            print(out)
+        else:
+            print(f"[mine] metrics: {out}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
+from repro.obs import metrics, report, trace
 
 
 def serve_lm(arch, smoke: bool, batch: int, prompt_len: int,
@@ -68,6 +69,14 @@ def serve_recsys(arch, smoke: bool, batch: int, seed: int):
 
 
 def serve_mine(args):
+    """Answer mining queries on a resident graph; returns per-query dicts.
+
+    Each query runs once cold (plan + compile) and ``--query-repeats``
+    warm repeats; latencies feed the ``serve.first_ms`` /
+    ``serve.warm_ms`` histograms so the summary can report p50/p99 over
+    the whole query stream, and each response carries the executor's
+    plan provenance (``plan_reports()``).
+    """
     from repro.core import Miner, Pattern, graph_stats, pattern_app
     from repro.launch.mine import load_graph, make_app
 
@@ -76,6 +85,8 @@ def serve_mine(args):
     print(f"[serve] mining graph {args.graph}: {g.n_vertices} vertices, "
           f"{g.n_edges // 2} edges, plan={args.plan}")
     results = []
+    first_h = metrics.histogram("serve.first_ms")
+    warm_h = metrics.histogram("serve.warm_ms")
     for query in [q.strip() for q in args.queries.split(",") if q.strip()]:
         try:
             app = make_app(query, args.minsup)
@@ -84,21 +95,34 @@ def serve_mine(args):
             # matching order picked by the resident graph's statistics
             app = pattern_app(Pattern.named(query), stats=stats)
         miner = Miner(g, app)
-        t0 = time.time()
-        r = miner.run(plan_source=args.plan, plan_cache=args.plan_cache,
-                      safety_factor=args.safety_factor)
-        cold_ms = (time.time() - t0) * 1e3
-        t0 = time.time()
-        miner.run(plan_source=args.plan, plan_cache=args.plan_cache,
-                  safety_factor=args.safety_factor)
-        warm_ms = (time.time() - t0) * 1e3
+        with trace.span("serve.query", cat="serve", query=query):
+            t0 = time.time()
+            r = miner.run(plan_source=args.plan,
+                          plan_cache=args.plan_cache,
+                          safety_factor=args.safety_factor)
+            cold_ms = (time.time() - t0) * 1e3
+            first_h.observe(cold_ms)
+            warm_ms = []
+            for _ in range(max(args.query_repeats, 1)):
+                t0 = time.time()
+                miner.run(plan_source=args.plan,
+                          plan_cache=args.plan_cache,
+                          safety_factor=args.safety_factor)
+                w = (time.time() - t0) * 1e3
+                warm_ms.append(w)
+                warm_h.observe(w)
         rep = miner.plan_reports()
         source = rep[0]["source"] if rep else "?"
         replans = sum(x["replans"] for x in rep)
         print(f"[serve] query {query!r}: count={r.count} "
-              f"first={cold_ms:.0f}ms warm={warm_ms:.1f}ms "
+              f"first={cold_ms:.0f}ms "
+              f"warm={min(warm_ms):.1f}ms x{len(warm_ms)} "
               f"plan={source} replans={replans}")
-        results.append((query, r))
+        results.append({"query": query, "result": r,
+                        "first_ms": cold_ms, "warm_ms": warm_ms,
+                        "plan_reports": rep})
+    print("[serve] " + report.latency_summary("first", first_h))
+    print("[serve] " + report.latency_summary("warm", warm_h))
     return results
 
 
@@ -128,9 +152,31 @@ def main(argv=None):
     ap.add_argument("--safety-factor", type=float, default=2.0)
     ap.add_argument("--minsup", type=int, default=100)
     ap.add_argument("--labels", type=int, default=None)
+    ap.add_argument("--query-repeats", type=int, default=1,
+                    help="mining mode: warm repeats per query (feeds the "
+                         "serve.warm_ms latency histogram)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record host spans + plan events; write Chrome "
+                         "trace-event JSON (open in ui.perfetto.dev)")
+    ap.add_argument("--trace-sync", action="store_true",
+                    help="with --trace: exact device attribution "
+                         "(serializes dispatch)")
+    ap.add_argument("--metrics", nargs="?", const="-", default=None,
+                    metavar="OUT",
+                    help="dump the metrics registry after serving "
+                         "('-'/no arg = text to stdout, *.json = JSON "
+                         "snapshot) — the /metrics endpoint shape")
     args = ap.parse_args(argv)
+    if args.trace:
+        trace.enable(sync=args.trace_sync)
     if args.mine:
         serve_mine(args)
+        if args.trace:
+            print(f"[serve] trace: {trace.save(args.trace)}")
+        if args.metrics is not None:
+            out = metrics.dump(args.metrics)
+            print("[serve] metrics:" + ("\n" + out if args.metrics == "-"
+                                        else " " + out))
         return
     if args.arch is None:
         raise SystemExit("--arch is required (or pass --mine)")

@@ -1,0 +1,18 @@
+"""Lightweight, dependency-free observability: tracing + metrics.
+
+* :mod:`repro.obs.trace` — span-based host tracer with Chrome-trace
+  JSON export (Perfetto); module-level no-op fast path when disabled.
+* :mod:`repro.obs.metrics` — process-global registry of counters,
+  gauges, and log-bucketed histograms with text/JSON dumps.
+* :mod:`repro.obs.report` — structured plain-text reporters (per-level
+  mining table, plan provenance, latency summaries).
+* :mod:`repro.obs.validate` — schema validation for exported trace and
+  metrics files (the CI check, ``python -m repro.obs.validate``).
+
+The package imports nothing from the rest of repro (nor any third-party
+package), so every layer — engine, plan, blocks, phase backends, launch
+CLIs, benchmarks — can instrument through it without import cycles.
+"""
+from repro.obs import metrics, report, trace
+
+__all__ = ["metrics", "report", "trace"]
