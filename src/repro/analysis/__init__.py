@@ -1,0 +1,29 @@
+"""repro.analysis — the repo's contract linter (stdlib-only).
+
+``python -m repro.analysis`` checks the source tree against the
+contracts the test suite cannot see (they fail silently, or only at
+scale, or only on hardware CI doesn't have):
+
+* ``grid-contract`` — concurrent-grid backends never reach sequential
+  SMEM-carry kernels;
+* ``host-sync`` — no device round-trips inside the jit-traced set;
+* ``obs-purity`` — observability guarded off the measured path;
+* ``plan-signature`` — every semantic MiningApp field digested into
+  the plan-cache key;
+* ``predicate-purity`` — in-kernel hooks elementwise and trace-clean.
+
+See ``repro.analysis.core`` for the ``# repro: ignore[rule]`` /
+``# repro: host-module`` escape hatches.
+"""
+from repro.analysis.core import (Finding, Project, RULE_DOCS, RULES,
+                                 SourceFile, render_json, render_text,
+                                 rule, run_analysis)
+
+__all__ = ["Finding", "Project", "RULES", "RULE_DOCS", "SourceFile",
+           "register_builtin_rules", "render_json", "render_text",
+           "rule", "run_analysis"]
+
+
+def register_builtin_rules() -> None:
+    """Import the built-in rule modules (idempotent self-registration)."""
+    from repro.analysis import rules  # noqa: F401  (import = register)

@@ -1,0 +1,6 @@
+"""Built-in contract rules.  Importing this package registers them."""
+from repro.analysis.rules import (grid_contract, host_sync, obs_purity,
+                                  plan_signature, predicate_purity)
+
+__all__ = ["grid_contract", "host_sync", "obs_purity", "plan_signature",
+           "predicate_purity"]

@@ -1,0 +1,137 @@
+"""grid-contract: concurrent-grid backends must not reach SMEM carries.
+
+A backend class declaring ``grid_contract = "concurrent"`` promises its
+kernels are legal under any tile execution order (the GPU half of the
+paper's claims; PR 7's two-pass-scan compaction exists to honor it).
+That promise dies silently if a refactor points the backend's kernel
+seam (``_pruned_kernel = staticmethod(...)`` or a direct call) back at
+a sequential-grid kernel.  This rule walks every function reachable
+from such a backend's op methods — with receiver-class attribute
+binding, so a subclass's kernel substitution is honored — and flags:
+
+* ``pl.pallas_call`` sites allocating SMEM ``scratch_shapes`` (the
+  sequential running-offset mechanism);
+* kernel bodies that both load and store the same ref argument — a
+  cross-tile accumulator carry (``base = ref[0] ... ref[0] = base + n``)
+  only a sequential grid makes well-defined.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import callgraph as cg
+from repro.analysis.core import Finding, rule
+
+RULE = "grid-contract"
+
+
+def _class_reachable(idx, ci):
+    """Functions reachable from ``ci``'s op methods, receiver-bound."""
+    seen = {}
+    stack = []
+    for c in idx.mro(ci):
+        for name, mi in c.methods.items():
+            if idx.effective_method(ci, name) is mi:
+                mod = idx.modules.get(mi.module)
+                if mod is not None:
+                    stack.append((mi.node, mod.sf, mi.module, ci))
+    # class-attr kernel seams reachable even without a calling method
+    for c in idx.mro(ci):
+        for aname in c.attrs:
+            expr = idx.effective_attr(ci, aname)
+            name = cg._attr_value_name(expr)
+            if name is None:
+                continue
+            got = idx.resolve_name(ci.module, name)
+            if isinstance(got, cg.FuncInfo):
+                mod = idx.modules.get(got.module)
+                if mod is not None:
+                    stack.append((got.node, mod.sf, got.module, got.cls))
+    while stack:
+        item = stack.pop()
+        node, sf, modname, cls = item
+        if id(node) in seen:
+            continue
+        seen[id(node)] = item
+        nested = cg.local_defs(node)
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            for tgt in cg.resolve_call(idx, call, sf, modname, cls,
+                                       nested):
+                stack.append(tgt)
+        # kernel bodies handed to pallas_call by name
+        for kname, ctx_node in cg.jit_argument_names(node):
+            got = idx.resolve_name(modname, kname)
+            if kname in nested:
+                stack.append((nested[kname], sf, modname, cls))
+            elif isinstance(got, cg.FuncInfo):
+                mod = idx.modules.get(got.module)
+                if mod is not None:
+                    stack.append((got.node, mod.sf, got.module, got.cls))
+    return seen.values()
+
+
+def _smem_scratch_findings(node, sf, backend):
+    for call in ast.walk(node):
+        if not isinstance(call, ast.Call) or \
+                cg._call_name(call.func) != "pallas_call":
+            continue
+        for kw in call.keywords:
+            if kw.arg != "scratch_shapes" or kw.value is None:
+                continue
+            for sub in ast.walk(kw.value):
+                is_smem = (isinstance(sub, ast.Attribute)
+                           and sub.attr == "SMEM") or \
+                          (isinstance(sub, ast.Name) and sub.id == "SMEM")
+                if is_smem:
+                    yield Finding(
+                        RULE, sf.rel.replace("\\", "/"), sub.lineno,
+                        sub.col_offset,
+                        f"SMEM scratch allocated in a kernel reachable "
+                        f"from backend {backend!r} "
+                        f"(grid_contract=\"concurrent\"): sequential-"
+                        f"grid running offsets are illegal under a "
+                        f"concurrent tile schedule")
+                    break
+
+
+def _carry_findings(node, sf, backend):
+    """Refs both loaded and stored in one kernel body: a tile carry."""
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return
+    params = {a.arg for a in node.args.args + node.args.posonlyargs
+              + node.args.kwonlyargs}
+    loads, stores = {}, {}
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Subscript) or \
+                not isinstance(sub.value, ast.Name):
+            continue
+        name = sub.value.id
+        if name not in params:
+            continue
+        if isinstance(sub.ctx, ast.Store):
+            stores.setdefault(name, sub)
+        else:
+            loads.setdefault(name, sub)
+    for name in sorted(set(loads) & set(stores)):
+        store = stores[name]
+        yield Finding(
+            RULE, sf.rel.replace("\\", "/"), store.lineno,
+            store.col_offset,
+            f"kernel {node.name!r} reads and writes ref {name!r} — a "
+            f"cross-tile accumulator carry — but is reachable from "
+            f"backend {backend!r} (grid_contract=\"concurrent\"), "
+            f"which guarantees no tile ordering")
+
+
+@rule(RULE, "concurrent-grid backends must not reach SMEM scratch or "
+            "cross-tile accumulator carries")
+def check(project):
+    idx = cg.ProjectIndex(project)
+    for ci in idx.all_classes():
+        if idx.const_attr(ci, "grid_contract") != "concurrent":
+            continue
+        for node, sf, _modname, _cls in _class_reachable(idx, ci):
+            yield from _smem_scratch_findings(node, sf, ci.name)
+            yield from _carry_findings(node, sf, ci.name)

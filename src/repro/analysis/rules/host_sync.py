@@ -1,0 +1,102 @@
+"""host-sync: the warm jit path must never force a device round-trip.
+
+PR 2/9's contract: once a plan exists, a mining run is ONE jit call —
+``run_level_loop`` under ``PlanCapPolicy``, the ``_PhaseOps`` jitted
+ops, and every kernel body trace with no host sync.  A stray ``int()``
+/ ``.item()`` / ``np.asarray`` in that set silently serializes the
+pipeline (each one blocks on the device), which no parity test catches
+— results stay right, latency quietly triples.
+
+The rule walks the jit-traced set (:class:`~repro.analysis.callgraph.
+TracedSet`: jit/pallas_call/shard_map roots, ``traceable = True``
+policies, backend op methods, ``kernels/``) and flags, outside
+host-guarded regions:
+
+* ``.item()`` calls and ``jax.device_get`` / ``block_until_ready``;
+* ``int()`` / ``float()`` / ``bool()`` coercions whose argument is not
+  statically shaped (``.shape`` / ``.ndim`` / ``.size`` / ``len()``
+  expressions stay host-side constants under tracing and are exempt);
+* ``np.asarray`` / ``np.array`` materializations.
+
+Host-only code is exempted the way the codebase itself marks it: the
+``traceable = False`` policy flag, ``if host:`` guards derived from
+``policy.traceable``, and the ``# repro: host-module`` marker.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import callgraph as cg
+from repro.analysis.core import Finding, rule
+
+RULE = "host-sync"
+
+_COERCIONS = ("int", "float", "bool")
+_STATIC_ATTRS = {"shape", "ndim", "size", "itemsize", "dtype",
+                 "bit_length"}
+_NP_NAMES = {"np", "numpy"}
+_SYNC_ATTRS = {"item", "block_until_ready", "device_get"}
+
+
+def _is_static_expr(expr: ast.expr) -> bool:
+    """Is the coerced value a trace-time constant (shape arithmetic)?"""
+    if isinstance(expr, ast.Constant):
+        return True
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and \
+                node.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(node, ast.Call):
+            name = cg._call_name(node.func)
+            # len/getattr/etc. yield trace-time constants (shape math,
+            # static attribute probes like pred.needs_labels)
+            if name in ("len", "getattr", "hasattr", "isinstance",
+                        "callable"):
+                return True
+    return False
+
+
+def _findings_in(fn_node, sf):
+    rel = sf.rel.replace("\\", "/")
+    for node in cg.iter_unguarded(fn_node):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in _SYNC_ATTRS:
+                recv = fn.value
+                recv_name = recv.id if isinstance(recv, ast.Name) \
+                    else None
+                if fn.attr == "item" or recv_name in ("jax",) or \
+                        fn.attr == "block_until_ready":
+                    yield Finding(
+                        RULE, rel, node.lineno, node.col_offset,
+                        f".{fn.attr}() forces a device sync inside "
+                        f"the jit-traced set (function "
+                        f"{getattr(fn_node, 'name', '<lambda>')!r})")
+            elif fn.attr in ("asarray", "array") and \
+                    isinstance(fn.value, ast.Name) and \
+                    fn.value.id in _NP_NAMES:
+                yield Finding(
+                    RULE, rel, node.lineno, node.col_offset,
+                    f"np.{fn.attr}() materializes a traced value on "
+                    f"the host inside the jit-traced set (function "
+                    f"{getattr(fn_node, 'name', '<lambda>')!r})")
+        elif isinstance(fn, ast.Name) and fn.id in _COERCIONS:
+            if node.args and not any(_is_static_expr(a)
+                                     for a in node.args):
+                yield Finding(
+                    RULE, rel, node.lineno, node.col_offset,
+                    f"{fn.id}() coerces a traced value to a host "
+                    f"scalar inside the jit-traced set (function "
+                    f"{getattr(fn_node, 'name', '<lambda>')!r}); "
+                    f"use jnp ops or guard the host path")
+
+
+@rule(RULE, "no host sync (.item/int()/np.asarray/block_until_ready) "
+            "reachable from the jit-traced set")
+def check(project):
+    idx = cg.ProjectIndex(project)
+    traced = cg.TracedSet(idx)
+    for fn_node, sf, _modname, _cls in traced.items():
+        yield from _findings_in(fn_node, sf)

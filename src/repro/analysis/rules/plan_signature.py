@@ -1,0 +1,98 @@
+"""plan-signature: every semantic MiningApp field must reach the plan key.
+
+The planner caches ``MiningPlan``s under ``plan_app_key(app, ...)``.
+Any field of :class:`MiningApp` that changes mining semantics but is
+*not* digested into that key aliases two different apps onto one cached
+plan — capacities planned for one app silently execute another.  This
+is exactly the bug class a field addition introduces: the dataclass
+grows, the key function doesn't, and nothing fails until capacities are
+wrong on the second app.
+
+The rule cross-checks the ``MiningApp`` dataclass fields against the
+``app.<field>`` attribute loads inside ``plan_app_key``:
+
+* ``Callable``-annotated fields are exempt — hooks are digested
+  indirectly via ``plan_key`` (the app author's hash hook) because
+  function identity is not stable across processes;
+* ``backend`` is exempt — the resolved backend name is a separate,
+  explicit component of the key.
+
+Absent either symbol (fixture trees), the rule is silent.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import callgraph as cg
+from repro.analysis.core import Finding, rule
+
+RULE = "plan-signature"
+
+APP_CLASS = "MiningApp"
+KEY_FUNC = "plan_app_key"
+EXEMPT_FIELDS = {"backend"}
+
+
+def _is_callable_field(annotation) -> bool:
+    if annotation is None:
+        return False
+    for node in ast.walk(annotation):
+        if isinstance(node, ast.Name) and node.id == "Callable":
+            return True
+        if isinstance(node, ast.Attribute) and node.attr == "Callable":
+            return True
+        # string annotations ("Optional[Callable]") under future import
+        if isinstance(node, ast.Constant) and \
+                isinstance(node.value, str) and "Callable" in node.value:
+            return True
+    return False
+
+
+def _dataclass_fields(ci):
+    """(name, annotation, lineno, col) of every dataclass field."""
+    for item in ci.node.body:
+        if isinstance(item, ast.AnnAssign) and \
+                isinstance(item.target, ast.Name):
+            yield (item.target.id, item.annotation, item.lineno,
+                   item.col_offset)
+
+
+def _digested_attrs(fn_node):
+    """Attribute names loaded off any parameter inside the key func."""
+    out = set()
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name):
+            out.add(node.attr)
+    return out
+
+
+@rule(RULE, "every non-hook MiningApp field must be digested into "
+            "plan_app_key (plan-cache aliasing guard)")
+def check(project):
+    idx = cg.ProjectIndex(project)
+    app_ci = None
+    key_fi = None
+    for ci in idx.all_classes():
+        if ci.name == APP_CLASS:
+            app_ci = ci
+    for mod in idx.modules.values():
+        if KEY_FUNC in mod.functions:
+            key_fi = mod.functions[KEY_FUNC]
+    if app_ci is None or key_fi is None:
+        return
+    digested = _digested_attrs(key_fi.node)
+    rel = app_ci.sf.rel.replace("\\", "/")
+    for name, annotation, lineno, col in _dataclass_fields(app_ci):
+        if name in EXEMPT_FIELDS or name.startswith("_"):
+            continue
+        if _is_callable_field(annotation):
+            continue
+        if name not in digested:
+            yield Finding(
+                RULE, rel, lineno, col,
+                f"MiningApp.{name} is not digested into "
+                f"{KEY_FUNC}() — two apps differing only in "
+                f"{name!r} would alias onto one cached plan; add it "
+                f"to the key (or exempt it with a documented "
+                f"suppression if it is plan-neutral)")

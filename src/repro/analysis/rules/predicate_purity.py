@@ -1,0 +1,259 @@
+"""predicate-purity: in-kernel hooks must be elementwise and trace-clean.
+
+``to_add_kernel`` / ``update_state_kernel`` hooks are traced twice —
+on flat jnp batches by the reference backend and on VMEM lane tiles
+inside the fused Pallas extend kernel.  The contract (api.py): every
+operation elementwise over ``fn(emb_cols, u, src_slot, state, conn)``;
+no ``ctx``, no gathers, and in particular no *Python* control flow over
+traced values — ``if u > 3:`` raises ``TracerBoolConversionError`` only
+at trace time, on whichever backend traces the hook first, far from the
+app author's code.
+
+Static half (this rule): find predicate-shaped functions — positional
+parameters containing the contiguous ``(u, src_slot, state, conn)``
+run, or functions handed to ``to_add_kernel=`` / ``update_state_kernel=``
+— and flag ``if`` / ``while`` / ``for`` / conditional expressions whose
+condition (or iterated value) is tainted by a traced parameter.  Static
+constructs stay legal: ``len(emb_cols)``, ``range(k)``, iteration over
+the ``emb_cols`` / ``conn`` / ``lab_cols`` tuples (static length), and
+closure variables (pattern-compiler constants).
+
+Runtime half: :func:`verify_elementwise` traces a hook with
+``jax.eval_shape`` on symbolic batches and asserts the output is the
+same-shape elementwise result — zero FLOPs, catches shape-bending and
+trace-breaking hooks.  Tests run it over the real pattern-compiler
+factories.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import callgraph as cg
+from repro.analysis.core import Finding, rule
+
+RULE = "predicate-purity"
+
+# the traced-scalar part of the hook signature, in order
+SIG_RUN = ("u", "src_slot", "state", "conn")
+# tuple-of-arrays params: static length (iterable), traced elements
+CONTAINER_PARAMS = {"emb_cols", "conn", "conn_cols", "lab_cols"}
+HOOK_KWARGS = ("to_add_kernel", "update_state_kernel")
+LAUNDER_CALLS = {"len", "range", "bool", "int", "isinstance", "getattr",
+                 "hasattr", "callable"}
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "needs_labels"}
+
+
+def _has_sig_run(fn_node) -> bool:
+    names = [a.arg for a in fn_node.args.posonlyargs + fn_node.args.args]
+    for i in range(len(names) - len(SIG_RUN) + 1):
+        if tuple(names[i:i + len(SIG_RUN)]) == SIG_RUN:
+            return True
+    return False
+
+
+def _hook_kwarg_names(tree):
+    """Names passed as ``to_add_kernel=`` / ``update_state_kernel=``."""
+    out = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg not in HOOK_KWARGS:
+                continue
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Name):
+                    out.add(v.id)
+    return out
+
+
+def _tainted(expr, taint) -> bool:
+    """Does ``expr`` depend on a traced value (laundering-aware)?"""
+    if expr is None:
+        return False
+    stack = [expr]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.Name) and node.id in taint:
+            return True
+        if isinstance(node, ast.Call) and \
+                cg._call_name(node.func) in LAUNDER_CALLS:
+            continue  # whole subtree is a trace-time constant
+        if isinstance(node, ast.Attribute) and \
+                node.attr in STATIC_ATTRS:
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+    return False
+
+
+def _loop_iter_static(node, taint, containers):
+    """Is a ``for`` loop's iterable static?  Returns (static, elt_taint).
+
+    Iterating a container param (static-length tuple of arrays) is
+    legal but binds *tainted* elements; ``range``/``enumerate`` over
+    static values is fully static.
+    """
+    it = node.iter
+    if isinstance(it, ast.Name):
+        if it.id in containers:
+            return True, True
+        return not _tainted(it, taint), it.id in taint
+    if isinstance(it, ast.Call):
+        name = cg._call_name(it.func)
+        if name in ("range", "len"):
+            return True, False
+        if name in ("enumerate", "zip", "reversed"):
+            elt = any(isinstance(a, ast.Name) and a.id in containers
+                      for a in it.args)
+            static = all(
+                (isinstance(a, ast.Name) and a.id in containers)
+                or not _tainted(a, taint) for a in it.args)
+            return static, elt
+    if isinstance(it, (ast.Tuple, ast.List)):
+        return True, _tainted(it, taint)
+    return not _tainted(it, taint), False
+
+
+def _target_names(tgt):
+    return [n.id for n in ast.walk(tgt) if isinstance(n, ast.Name)]
+
+
+def _check_hook(fn_node, sf):
+    rel = sf.rel.replace("\\", "/")
+    args = fn_node.args
+    params = [a.arg for a in args.posonlyargs + args.args
+              + args.kwonlyargs]
+    containers = {p for p in params if p in CONTAINER_PARAMS}
+    # every non-container param carries traced values; propagate taint
+    # through assignments to a fixpoint (loops can feed back)
+    taint = {p for p in params if p not in containers}
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn_node):
+            if isinstance(node, ast.Assign):
+                if _tainted(node.value, taint):
+                    for tgt in node.targets:
+                        for name in _target_names(tgt):
+                            if name not in taint:
+                                taint.add(name)
+                                changed = True
+            elif isinstance(node, ast.AugAssign) and \
+                    isinstance(node.target, ast.Name):
+                if _tainted(node.value, taint) and \
+                        node.target.id not in taint:
+                    taint.add(node.target.id)
+                    changed = True
+            elif isinstance(node, ast.For):
+                static, elt_taint = _loop_iter_static(node, taint,
+                                                      containers)
+                if (not static or elt_taint):
+                    for name in _target_names(node.target):
+                        if name not in taint:
+                            taint.add(name)
+                            changed = True
+
+    hook = fn_node.name
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.If) and _tainted(node.test, taint):
+            yield Finding(
+                RULE, rel, node.lineno, node.col_offset,
+                f"in-kernel hook {hook!r} branches on a traced value "
+                f"with Python `if` — use jnp.where / boolean algebra "
+                f"(TracerBoolConversionError at trace time)")
+        elif isinstance(node, ast.IfExp) and _tainted(node.test, taint):
+            yield Finding(
+                RULE, rel, node.lineno, node.col_offset,
+                f"in-kernel hook {hook!r} uses a conditional "
+                f"expression over a traced value — use jnp.where")
+        elif isinstance(node, ast.While) and _tainted(node.test, taint):
+            yield Finding(
+                RULE, rel, node.lineno, node.col_offset,
+                f"in-kernel hook {hook!r} loops `while` on a traced "
+                f"value — trace-time error; use lax primitives")
+        elif isinstance(node, ast.For):
+            static, _elt = _loop_iter_static(node, taint, containers)
+            if not static:
+                yield Finding(
+                    RULE, rel, node.lineno, node.col_offset,
+                    f"in-kernel hook {hook!r} iterates a traced value "
+                    f"with Python `for` — only static-length "
+                    f"structures (emb_cols, range(k)) are iterable "
+                    f"under tracing")
+        elif isinstance(node, ast.Assert) and _tainted(node.test, taint):
+            yield Finding(
+                RULE, rel, node.lineno, node.col_offset,
+                f"in-kernel hook {hook!r} asserts on a traced value — "
+                f"trace-time error; use checkify or drop the assert")
+
+
+@rule(RULE, "to_add_kernel/update_state_kernel hooks must not run "
+            "Python control flow over traced values")
+def check(project):
+    idx = cg.ProjectIndex(project)
+    for mod, fn_node in idx.all_functions():
+        if _has_sig_run(fn_node):
+            yield from _check_hook(fn_node, mod.sf)
+    # hooks referenced by name at app-construction sites whose
+    # signatures use different parameter names
+    for modname, mod in idx.modules.items():
+        names = _hook_kwarg_names(mod.sf.tree)
+        for name in sorted(names):
+            got = idx.resolve_name(modname, name)
+            if isinstance(got, cg.FuncInfo) and \
+                    not _has_sig_run(got.node):
+                tgt_mod = idx.modules.get(got.module)
+                if tgt_mod is not None:
+                    yield from _check_hook(got.node, tgt_mod.sf)
+
+
+# ---------------------------------------------------------------------------
+# Runtime half — used by tests and available to app authors.
+
+
+def verify_elementwise(pred, k: int, *, batch: int = 8,
+                       labeled: bool = False, is_state: bool = False):
+    """Trace ``pred`` with ``jax.eval_shape`` and assert elementwise-ness.
+
+    Builds symbolic ``(batch,)`` candidate columns — ``emb_cols`` /
+    ``conn`` as length-``k`` tuples, ``u`` / ``src_slot`` / ``state`` as
+    flat arrays — and checks the hook (a) traces cleanly (no Python
+    control flow over tracers, no host sync) and (b) returns one value
+    per candidate: shape ``(batch,)``, dtype bool (predicates) or an
+    integer state (``is_state=True``).  Costs zero FLOPs — only
+    abstract evaluation runs.  Raises ``TypeError`` with the violated
+    contract on failure.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    col = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    flag = jax.ShapeDtypeStruct((batch,), jnp.bool_)
+    emb_cols = (col,) * k
+    conn = (flag,) * k
+    args = [emb_cols, col, col, col, conn]
+    if labeled or bool(getattr(pred, "needs_labels", False)):
+        args += [(col,) * k, col]
+    try:
+        out = jax.eval_shape(pred, *args)
+    except Exception as e:  # surface the contract, keep the cause
+        raise TypeError(
+            f"in-kernel hook {getattr(pred, '__name__', pred)!r} is not "
+            f"trace-clean: {e}") from e
+    shape = getattr(out, "shape", None)
+    if shape != (batch,):
+        raise TypeError(
+            f"in-kernel hook {getattr(pred, '__name__', pred)!r} is not "
+            f"elementwise: output shape {shape} for batch ({batch},)")
+    dtype = getattr(out, "dtype", None)
+    if is_state:
+        if dtype is None or not jnp.issubdtype(dtype, jnp.integer):
+            raise TypeError(
+                f"state hook {getattr(pred, '__name__', pred)!r} must "
+                f"return integer memo state, got dtype {dtype}")
+    elif dtype != jnp.bool_:
+        raise TypeError(
+            f"predicate {getattr(pred, '__name__', pred)!r} must return "
+            f"a bool keep-mask, got dtype {dtype}")
+    return out

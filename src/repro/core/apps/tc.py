@@ -8,9 +8,7 @@ on TPU (Table 4a comparison point).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.api import MiningApp
 from repro.core.apps.cf import make_cf_app

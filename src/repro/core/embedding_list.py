@@ -128,7 +128,6 @@ def materialize_edges(levels: list[EmbeddingLevel]
         eids.append(lvl.eid[ptr])
         ptr = lvl.idx[ptr]
     v0 = ptr
-    k = len(levels)
     vid = jnp.stack(vids[::-1], axis=1)      # [cap, k]
     his = jnp.stack(hiss[::-1], axis=1)
     eid = jnp.stack(eids[::-1], axis=1)

@@ -24,9 +24,7 @@ Pattern-ID enums for motifs:
 from __future__ import annotations
 
 import itertools
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

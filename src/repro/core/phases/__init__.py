@@ -27,10 +27,31 @@ _INSTANCES: dict[str, PhaseBackend] = {}
 
 BackendSpec = Union[str, PhaseBackend, None]
 
+# The legal grid-ordering guarantees (PhaseBackend.grid_contract).  A
+# typo like "concurent" must not silently pass as "not sequential" —
+# the plan signature and the grid-contract linter rule both key off
+# these exact strings.
+GRID_CONTRACTS = ("any", "sequential", "concurrent")
+
+
+def _check_grid_contract(name: str, owner) -> None:
+    gc = getattr(owner, "grid_contract", None)
+    if gc not in GRID_CONTRACTS:
+        raise ValueError(
+            f"backend {name!r} declares grid_contract={gc!r}; expected "
+            f"one of {list(GRID_CONTRACTS)} (see PhaseBackend)")
+
 
 def register_backend(name: str,
                      factory: Callable[[], PhaseBackend]) -> None:
-    """Register a backend factory under ``name`` (idempotent overwrite)."""
+    """Register a backend factory under ``name`` (idempotent overwrite).
+
+    When ``factory`` is the backend class itself (the usual case), its
+    declared ``grid_contract`` is validated here — at import time —
+    instead of failing obscurely when a plan first keys on it.
+    """
+    if isinstance(factory, type):
+        _check_grid_contract(name, factory)
     _REGISTRY[name] = factory
     _INSTANCES.pop(name, None)
 
@@ -49,7 +70,11 @@ def get_backend(spec: BackendSpec = None) -> PhaseBackend:
         raise KeyError(f"unknown phase backend {spec!r}; "
                        f"available: {available_backends()}")
     if spec not in _INSTANCES:
-        _INSTANCES[spec] = _REGISTRY[spec]()
+        inst = _REGISTRY[spec]()
+        # non-class factories (lambdas, partials) are validated on the
+        # instance at first resolution
+        _check_grid_contract(spec, inst)
+        _INSTANCES[spec] = inst
     return _INSTANCES[spec]
 
 

@@ -53,7 +53,9 @@ class PhaseBackend:
         Called from op overrides; keyed by backend name so the metrics
         dump shows which backend's kernels a run actually compiled.
         """
-        _M.inc("phase.op_tracings", op=op, backend=self.name, **labels)
+        if _M.on:
+            _M.inc("phase.op_tracings", op=op, backend=self.name,
+                   **labels)
 
     # -- capability metadata ----------------------------------------------
     # How the backend's extend_pruned resolves cross-tile survivor offsets,

@@ -499,13 +499,15 @@ def _domain_contributions(vert_vid, n_verts, valid, perms, codes_all,
     parked at ``park``.
     """
     cap, V = vert_vid.shape
-    inv_perms = np.argsort(np.asarray(perms), axis=1)    # [n_perms, V]
+    # ``perms`` is the pattern's static automorphism list (plain Python,
+    # never traced) — this is trace-time constant arithmetic, not a sync.
+    inv_perms = np.argsort(np.asarray(perms), axis=1)  # repro: ignore[host-sync]
     is_min = codes_all == canon[:, None]                 # [cap, n_perms]
     doms, vids, oks = [], [], []
     for pi, p in enumerate(perms):
-        inv = inv_perms[pi]
+        inv = inv_perms[pi]  # static [n_perms, V] host array (see above)
         for l in range(V):
-            doms.append(jnp.full((cap,), int(inv[l]), jnp.int32))
+            doms.append(jnp.full((cap,), int(inv[l]), jnp.int32))  # repro: ignore[host-sync]
             vids.append(vert_vid[:, l])
             oks.append(is_min[:, pi] & valid & (l < n_verts))
     dom = jnp.stack(doms, axis=1).reshape(-1)

@@ -763,7 +763,6 @@ def fused_extend_edge_pallas(col_idx: jnp.ndarray, edge_uid: jnp.ndarray,
     """
     n_parents = offsets.shape[0]
     m = col_idx.shape[0]
-    E = n_slots - 1
     p_pad = _rup(n_parents, 128)
 
     def pad_to(x, size, fill=0):

@@ -21,6 +21,10 @@ instead of auditing every callsite.
 """
 from __future__ import annotations
 
+# repro: host-module
+# Config resolution only (env vars, backend autodetect) — runs before
+# any kernel traces, never inside one.
+
 import os
 
 import jax

@@ -147,7 +147,7 @@ def run_mining(multi_pod: bool, out_dir: str) -> dict:
     """Dry-run the distributed mining step on the production mesh."""
     from jax.sharding import PartitionSpec as PSpec
     from jax.experimental.shard_map import shard_map
-    from repro.launch.mesh import make_production_mesh, dp_axes
+    from repro.launch.mesh import make_production_mesh
     from repro.core import make_mc_app, bounded_mine_vertex
     from repro.core.api import GraphCtx
     import jax.numpy as jnp

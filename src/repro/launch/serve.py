@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.obs import metrics, report, trace

@@ -14,7 +14,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import ArchSpec, get_arch
 from repro.launch import sharding as SH

@@ -3,8 +3,6 @@
 per cell (isolation against XLA state), skip-if-artifact-exists so the
 sweep is restartable."""
 import argparse
-import itertools
-import json
 import os
 import subprocess
 import sys

@@ -9,17 +9,13 @@ Production behaviors on any device topology (1 CPU to multi-pod TPU):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.data import pipeline as data_pipe
-from repro.launch.steps import (build_cell, concrete_inputs,
-                                opt_config_for, train_policy_for)
+from repro.launch.steps import build_cell
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import init_opt_state
 

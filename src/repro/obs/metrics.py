@@ -1,9 +1,13 @@
 """In-process metrics registry: counters, gauges, log-bucketed histograms.
 
 One process-global :class:`Registry` (module-level convenience
-functions), dependency-free and always on — recording is a couple of
-dict operations, and every instrumented site sits next to a host sync
-that costs orders of magnitude more.  Consumers are the launch CLIs
+functions), dependency-free and on by default — recording is a couple
+of dict operations, and every instrumented site sits next to a host
+sync that costs orders of magnitude more.  The module-level ``on``
+flag (mirroring ``trace.on``) gates the convenience recorders so
+instrumented call sites outside obvious host guards can stay
+contract-clean (``if metrics.on: ...``) and overhead-sensitive runs
+can switch recording off wholesale.  Consumers are the launch CLIs
 (``--metrics`` plain-text / JSON dump, the serve ``/metrics``-style
 endpoint shape) and the bench (``cap_utilization`` / ``stage_overlap``
 columns read from this registry instead of bespoke bench-side timing).
@@ -32,6 +36,11 @@ from __future__ import annotations
 import json
 import math
 from typing import Optional
+
+# Module-level fast-path flag, same idiom as ``trace.on``: call sites
+# guard on it (or rely on the convenience recorders below, which check
+# it) and recording becomes a no-op when flipped off.
+on: bool = True
 
 
 def _key(name: str, labels: dict) -> tuple:
@@ -213,15 +222,18 @@ def histogram(name: str, **labels) -> Histogram:
 
 
 def inc(name: str, value: float = 1.0, **labels) -> None:
-    REGISTRY.counter(name, **labels).inc(value)
+    if on:
+        REGISTRY.counter(name, **labels).inc(value)
 
 
 def set_gauge(name: str, value: float, **labels) -> None:
-    REGISTRY.gauge(name, **labels).set(value)
+    if on:
+        REGISTRY.gauge(name, **labels).set(value)
 
 
 def observe(name: str, value: float, **labels) -> None:
-    REGISTRY.histogram(name, **labels).observe(value)
+    if on:
+        REGISTRY.histogram(name, **labels).observe(value)
 
 
 def find(name: str) -> dict[tuple, object]:

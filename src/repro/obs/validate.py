@@ -61,6 +61,10 @@ def validate_metrics(doc: dict) -> dict:
     for section in ("counters", "gauges", "histograms"):
         if not isinstance(doc.get(section), dict):
             raise ValueError(f"metrics: missing {section!r} section")
+    if not any(doc[s] for s in ("counters", "gauges", "histograms")):
+        raise ValueError("metrics: snapshot vacuously empty — the run "
+                         "recorded nothing (metrics.on off, or the "
+                         "dump was taken before any work)")
     util = [k for k in doc["gauges"] if k.startswith("mine.cap_utilization")]
     if not util:
         raise ValueError("metrics: no mine.cap_utilization gauges")
@@ -78,18 +82,35 @@ def validate_metrics(doc: dict) -> dict:
             "histograms": len(doc["histograms"])}
 
 
+def _load(path: str, kind: str) -> dict:
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        raise ValueError(f"{kind}: cannot read {path}: {e}") from e
+    if not text.strip():
+        raise ValueError(f"{kind}: {path} is empty (zero bytes is not "
+                         f"a valid export — the run produced nothing)")
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{kind}: {path} is not JSON: {e}") from e
+
+
 def main(argv=None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
     if not argv:
         raise SystemExit("usage: python -m repro.obs.validate "
                          "TRACE.json [METRICS.json]")
-    with open(argv[0]) as f:
-        info = validate_trace(json.load(f))
-    print(f"[obs.validate] trace ok: {info}")
-    if len(argv) > 1:
-        with open(argv[1]) as f:
-            info = validate_metrics(json.load(f))
-        print(f"[obs.validate] metrics ok: {info}")
+    try:
+        info = validate_trace(_load(argv[0], "trace"))
+        print(f"[obs.validate] trace ok: {info}")
+        if len(argv) > 1:
+            info = validate_metrics(_load(argv[1], "metrics"))
+            print(f"[obs.validate] metrics ok: {info}")
+    except ValueError as e:
+        # loud, single-line, exit 1 — the CI job gates on this
+        raise SystemExit(f"[obs.validate] FAIL: {e}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ for the VPU.  These are the pure-jnp implementations; the Pallas kernel in
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -1,6 +1,5 @@
 """Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
 benches must see exactly 1 device; only launch/dryrun.py forces 512."""
-import numpy as np
 import pytest
 
 from repro.graph import generators as G

@@ -1,0 +1,427 @@
+"""Contract linter (PR 10): the five rules, suppressions, and the gate.
+
+Contracts under test:
+
+* each rule fires on a minimal known-bad fixture tree with the exact
+  rule id and file:line (the CI diagnostic the linter exists for);
+* the real tree is clean — ``python -m repro.analysis`` exits 0 after
+  this PR's fixes, which is what the ``static-analysis`` CI job gates;
+* plan-signature is *live*: grafting a synthetic result-affecting
+  field onto the real ``MiningApp`` without digesting it into
+  ``plan_app_key`` is caught at the field's definition line;
+* ``# repro: ignore[rule]`` suppresses exactly its line and rule,
+  ``# repro: host-module`` removes a module from the traced set;
+* ``verify_elementwise`` (the ``jax.eval_shape`` half of
+  predicate-purity) accepts the repo's real in-kernel hooks and
+  rejects shape-bending / trace-breaking ones;
+* ``register_backend`` / ``get_backend`` reject unknown
+  ``grid_contract`` strings at registration time;
+* ``repro.obs.validate`` fails loudly on empty/vacuous exports.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import RULES, register_builtin_rules, run_analysis
+
+register_builtin_rules()
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src", "repro")
+
+
+def _tree(tmp_path, files):
+    """Materialize ``{relpath: source}`` under a root named ``repro``."""
+    root = tmp_path / "repro"
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return str(root)
+
+
+def _findings(root, rule):
+    _, fs = run_analysis(root, [rule])
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# rule fixtures: exact rule id + file:line
+
+
+def test_grid_contract_flags_smem_and_carry(tmp_path):
+    root = _tree(tmp_path, {"phases.py": (
+        "import jax.numpy as jnp\n"
+        "from jax.experimental import pallas as pl\n"
+        "from jax.experimental.pallas import tpu as pltpu\n"
+        "\n"
+        "\n"
+        "def bad_kernel(x_ref, base_ref, o_ref):\n"
+        "    base = base_ref[0]\n"
+        "    base_ref[0] = base + 1\n"                       # line 8
+        "    o_ref[0] = base\n"
+        "\n"
+        "\n"
+        "def launch(x):\n"
+        "    return pl.pallas_call(\n"
+        "        bad_kernel,\n"
+        "        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],\n"  # 15
+        "    )(x)\n"
+        "\n"
+        "\n"
+        "class BadBackend:\n"
+        "    grid_contract = \"concurrent\"\n"
+        "\n"
+        "    def extend(self, x):\n"
+        "        return launch(x)\n")})
+    fs = _findings(root, "grid-contract")
+    assert [(f.rule, f.path, f.line) for f in fs] == [
+        ("grid-contract", "phases.py", 8),
+        ("grid-contract", "phases.py", 15)]
+    assert "carry" in fs[0].message and "SMEM" in fs[1].message
+
+
+def test_grid_contract_ok_for_sequential_contract(tmp_path):
+    root = _tree(tmp_path, {"phases.py": (
+        "def bad_kernel(base_ref, o_ref):\n"
+        "    base = base_ref[0]\n"
+        "    base_ref[0] = base + 1\n"
+        "\n"
+        "class SeqBackend:\n"
+        "    grid_contract = \"sequential\"\n"
+        "    def extend(self, x):\n"
+        "        return bad_kernel(x, x)\n")})
+    assert _findings(root, "grid-contract") == []
+
+
+def test_grid_contract_class_attr_seam(tmp_path):
+    # the pallas-mp idiom: the kernel is wired through a staticmethod
+    # class attribute, not a direct call — receiver binding must see it
+    root = _tree(tmp_path, {"phases.py": (
+        "def carry_kernel(ref, o_ref):\n"
+        "    v = ref[0]\n"
+        "    ref[0] = v + 1\n"                               # line 3
+        "\n"
+        "class AttrBackend:\n"
+        "    grid_contract = \"concurrent\"\n"
+        "    _kernel = staticmethod(carry_kernel)\n")})
+    fs = _findings(root, "grid-contract")
+    assert [(f.path, f.line) for f in fs] == [("phases.py", 3)]
+
+
+def test_host_sync_flags_jit_path(tmp_path):
+    root = _tree(tmp_path, {"engine.py": (
+        "import jax\n"
+        "\n"
+        "\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    total = x.sum()\n"
+        "    return int(total)\n")})                          # line 7
+    fs = _findings(root, "host-sync")
+    assert [(f.rule, f.path, f.line) for f in fs] == [
+        ("host-sync", "engine.py", 7)]
+    assert "int()" in fs[0].message
+
+
+def test_host_sync_follows_calls_and_honors_guards(tmp_path):
+    root = _tree(tmp_path, {"engine.py": (
+        "import jax\n"
+        "import numpy as np\n"
+        "\n"
+        "def helper(x, host):\n"
+        "    k = int(x.shape[0])\n"          # static: exempt
+        "    if host:\n"
+        "        print(float(x))\n"          # host-guarded: exempt
+        "    return np.asarray(x)\n"         # line 8: flagged
+        "\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    return helper(x, False)\n")})
+    fs = _findings(root, "host-sync")
+    assert [(f.path, f.line) for f in fs] == [("engine.py", 8)]
+
+
+def test_obs_purity_flags_unguarded_span_in_phases(tmp_path):
+    root = _tree(tmp_path, {
+        "obs/trace.py": "on = False\n",
+        "phases/bad.py": (
+            "from repro.obs import trace as _T\n"
+            "\n"
+            "\n"
+            "def extend_op(x):\n"
+            "    _T.instant('extend', n=3)\n"                 # line 5
+            "    if _T.on:\n"
+            "        _T.instant('guarded-fine', n=4)\n"
+            "    return x\n")})
+    fs = _findings(root, "obs-purity")
+    assert [(f.rule, f.path, f.line) for f in fs] == [
+        ("obs-purity", "phases/bad.py", 5)]
+
+
+def test_obs_purity_bans_obs_import_in_kernels(tmp_path):
+    root = _tree(tmp_path, {
+        "obs/metrics.py": "def inc(*a, **k): pass\n",
+        "kernels/k.py": (
+            "from repro.obs import metrics\n"                 # line 1
+            "\n"
+            "def kernel(ref):\n"
+            "    ref[0] = 1\n")})
+    fs = _findings(root, "obs-purity")
+    assert [(f.rule, f.path, f.line) for f in fs] == [
+        ("obs-purity", "kernels/k.py", 1)]
+
+
+def test_plan_signature_flags_undigested_field(tmp_path):
+    root = _tree(tmp_path, {"plan.py": (
+        "import dataclasses\n"
+        "from typing import Callable, Optional\n"
+        "\n"
+        "\n"
+        "@dataclasses.dataclass\n"
+        "class MiningApp:\n"
+        "    kind: str = 'vertex'\n"
+        "    widget: int = 0\n"                               # line 8
+        "    to_add: Optional[Callable] = None\n"  # hook: exempt
+        "    backend: Optional[str] = None\n"      # by-name: exempt
+        "\n"
+        "\n"
+        "def plan_app_key(app, backend_name):\n"
+        "    return (app.kind, backend_name)\n")})
+    fs = _findings(root, "plan-signature")
+    assert [(f.rule, f.path, f.line) for f in fs] == [
+        ("plan-signature", "plan.py", 8)]
+    assert "widget" in fs[0].message
+
+
+def test_plan_signature_live_on_real_tree(tmp_path):
+    """Acceptance: a synthetic undigested MiningApp field is caught."""
+    copy = tmp_path / "repro"
+    shutil.copytree(REPO_SRC, copy,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    api = copy / "core" / "api.py"
+    text = api.read_text()
+    anchor = "    backend: Optional[str] = None"
+    assert anchor in text
+    api.write_text(text.replace(
+        anchor, "    synthetic_knob: int = 0\n" + anchor, 1))
+    fs = _findings(str(copy), "plan-signature")
+    assert len(fs) == 1
+    f = fs[0]
+    assert f.rule == "plan-signature" and f.path == "core/api.py"
+    assert "synthetic_knob" in f.message
+    line = api.read_text().splitlines()[f.line - 1]
+    assert "synthetic_knob" in line
+
+
+def test_predicate_purity_flags_tracer_branch(tmp_path):
+    root = _tree(tmp_path, {"apps.py": (
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def pred(emb_cols, u, src_slot, state, conn):\n"
+        "    ok = conn[0]\n"
+        "    for j in range(len(emb_cols)):\n"   # static loop: fine
+        "        ok = ok & (u != emb_cols[j])\n"
+        "    if state > 0:\n"                                 # line 8
+        "        ok = ~ok\n"
+        "    return ok\n")})
+    fs = _findings(root, "predicate-purity")
+    assert [(f.rule, f.path, f.line) for f in fs] == [
+        ("predicate-purity", "apps.py", 8)]
+    assert "jnp.where" in fs[0].message
+
+
+def test_predicate_purity_finds_hooks_by_kwarg(tmp_path):
+    # hook with nonstandard parameter names, wired via to_add_kernel=
+    root = _tree(tmp_path, {"apps.py": (
+        "def mypred(cols, cand, slot, st, adj):\n"
+        "    for c in cols:\n"
+        "        if cand == c:\n"                             # line 3
+        "            return False\n"
+        "    return True\n"
+        "\n"
+        "\n"
+        "def build(make_app):\n"
+        "    return make_app(to_add_kernel=mypred)\n")})
+    fs = _findings(root, "predicate-purity")
+    assert ("predicate-purity", "apps.py", 3) in [
+        (f.rule, f.path, f.line) for f in fs]
+
+
+def test_suppression_is_line_and_rule_scoped(tmp_path):
+    src = (
+        "import jax\n"
+        "\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    a = int(x.sum())  # repro: ignore[host-sync]\n"
+        "    b = int(x.max())  # repro: ignore[grid-contract]\n"  # 6
+        "    return a + b\n")
+    fs = _findings(_tree(tmp_path, {"engine.py": src}), "host-sync")
+    # the wrong-rule suppression on line 6 does not apply
+    assert [(f.path, f.line) for f in fs] == [("engine.py", 6)]
+
+
+def test_host_module_marker_exempts_module(tmp_path):
+    root = _tree(tmp_path, {"engine.py": (
+        "# repro: host-module\n"
+        "import jax\n"
+        "\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    return int(x.sum())\n")})
+    assert _findings(root, "host-sync") == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree and the CLI gate
+
+
+def test_real_tree_is_clean():
+    project, findings = run_analysis(REPO_SRC)
+    assert project.errors == []
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(REPO_SRC)
+    bad = _tree(tmp_path, {"engine.py": (
+        "import jax\n\n@jax.jit\ndef step(x):\n    return int(x.sum())\n"
+    )})
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", bad, "--format",
+         "json"], capture_output=True, text=True, env=env)
+    assert out.returncode == 1
+    doc = json.loads(out.stdout)
+    assert doc["checked_files"] == 1
+    assert [f["rule"] for f in doc["findings"]] == ["host-sync"]
+
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", REPO_SRC],
+        capture_output=True, text=True, env=env)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+    usage = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", bad, "--rules",
+         "no-such-rule"], capture_output=True, text=True, env=env)
+    assert usage.returncode == 2
+
+    lst = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        capture_output=True, text=True, env=env)
+    assert lst.returncode == 0
+    for rid in ("grid-contract", "host-sync", "obs-purity",
+                "plan-signature", "predicate-purity"):
+        assert rid in lst.stdout and rid in RULES
+
+
+# ---------------------------------------------------------------------------
+# predicate-purity runtime half: jax.eval_shape over real hooks
+
+
+def test_verify_elementwise_accepts_real_hooks():
+    import jax.numpy as jnp
+    from repro.analysis.rules.predicate_purity import verify_elementwise
+    from repro.core.api import is_auto_canonical_kernel
+
+    out = verify_elementwise(is_auto_canonical_kernel, k=3)
+    assert out.shape == (8,) and out.dtype == jnp.bool_
+
+
+def test_verify_elementwise_rejects_bad_hooks():
+    import jax.numpy as jnp
+    from repro.analysis.rules.predicate_purity import verify_elementwise
+
+    def shape_bender(emb_cols, u, src_slot, state, conn):
+        return jnp.sum(u) > 0  # scalar, not per-candidate
+
+    with pytest.raises(TypeError, match="not elementwise"):
+        verify_elementwise(shape_bender, k=2)
+
+    def tracer_brancher(emb_cols, u, src_slot, state, conn):
+        if u[0] > 0:  # Python branch on a tracer
+            return conn[0]
+        return ~conn[0]
+
+    with pytest.raises(TypeError, match="not trace-clean"):
+        verify_elementwise(tracer_brancher, k=2)
+
+    def wrong_dtype(emb_cols, u, src_slot, state, conn):
+        return u + 1  # i32, not a keep-mask
+
+    with pytest.raises(TypeError, match="bool keep-mask"):
+        verify_elementwise(wrong_dtype, k=2)
+    # ... but the same signature is a fine *state* hook
+    verify_elementwise(wrong_dtype, k=2, is_state=True)
+
+
+# ---------------------------------------------------------------------------
+# satellite: grid_contract validated at registration
+
+
+def test_register_backend_rejects_unknown_grid_contract():
+    from repro.core.phases import (PhaseBackend, get_backend,
+                                   register_backend, _REGISTRY,
+                                   _INSTANCES)
+
+    class TypoBackend(PhaseBackend):
+        name = "typo"
+        grid_contract = "concurent"  # the classic silent typo
+
+    with pytest.raises(ValueError, match="concurent"):
+        register_backend("typo", TypoBackend)
+    assert "typo" not in _REGISTRY
+
+    # non-class factories are validated at first resolution
+    register_backend("typo-lazy", lambda: TypoBackend())
+    try:
+        with pytest.raises(ValueError, match="concurent"):
+            get_backend("typo-lazy")
+    finally:
+        _REGISTRY.pop("typo-lazy", None)
+        _INSTANCES.pop("typo-lazy", None)
+
+
+def test_register_backend_accepts_all_legal_contracts():
+    from repro.core.phases import (GRID_CONTRACTS, PhaseBackend,
+                                   register_backend, _REGISTRY,
+                                   _INSTANCES)
+    for gc in GRID_CONTRACTS:
+        cls = type(f"B_{gc}", (PhaseBackend,),
+                   {"name": f"b-{gc}", "grid_contract": gc})
+        register_backend(f"b-{gc}", cls)
+        _REGISTRY.pop(f"b-{gc}", None)
+        _INSTANCES.pop(f"b-{gc}", None)
+
+
+# ---------------------------------------------------------------------------
+# satellite: obs.validate fails loudly on vacuous exports
+
+
+def test_obs_validate_rejects_empty_exports(tmp_path):
+    from repro.obs import validate as V
+
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    with pytest.raises(SystemExit, match="zero bytes"):
+        V.main([str(empty)])
+
+    hollow = tmp_path / "hollow.json"
+    hollow.write_text(json.dumps({"traceEvents": []}))
+    with pytest.raises(SystemExit, match="traceEvents empty"):
+        V.main([str(hollow)])
+
+    with pytest.raises(ValueError, match="vacuously empty"):
+        V.validate_metrics(
+            {"counters": {}, "gauges": {}, "histograms": {}})
+
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    with pytest.raises(SystemExit, match="not JSON"):
+        V.main([str(garbage)])

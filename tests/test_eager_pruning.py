@@ -20,7 +20,6 @@ from repro.core.plan import PLAN_SCHEMA, bucket_cap
 from repro.graph import generators as G
 from repro.graph.csr import pack_adjacency, packed_contains
 from repro.sparse.intersect import adj_contains
-from repro.sparse.ops import compact_mask
 
 APPS = [("tc", make_tc_app),
         ("3-cf-nodag", lambda: make_cf_app(3, use_dag=False)),

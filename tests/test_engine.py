@@ -2,17 +2,12 @@
 mode, materialization ablation, stats."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from oracles import motif_counts, triangle_count
 from repro.core import (Miner, bounded_mine_vertex, make_cf_app, make_mc_app,
                         make_tc_app)
-from repro.core.api import make_ctx
 from repro.core.embedding_list import (init_level0_vertex, materialize,
                                        total_bytes)
-from repro.graph import generators as G
-from repro.graph.csr import to_networkx
-from repro.graph.dag import orient_dag
 
 
 def test_materialize_backtracks():

@@ -1,10 +1,9 @@
 """Graph substrate: CSR, DAG orientation, generators."""
 import numpy as np
-import pytest
 from _hyp import given, settings, strategies as st
 
 from repro.graph import generators as G
-from repro.graph.csr import from_edge_list, neighbors_np, to_networkx
+from repro.graph.csr import from_edge_list, neighbors_np
 from repro.graph.dag import orient_dag
 
 

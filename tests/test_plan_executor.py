@@ -11,7 +11,6 @@ from repro.core import (Miner, MiningPlan, PlanCache, bounded_mine_edge,
                         make_fsm_app, make_mc_app, make_tc_app)
 from repro.core.plan import bucket_pow2, plan_signature
 from repro.graph import generators as G
-from repro.graph.csr import to_networkx
 
 INT_MAX = np.iinfo(np.int32).max
 

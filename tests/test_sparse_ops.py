@@ -4,12 +4,10 @@ import math
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, strategies as st
 
 from repro.graph import generators as G
-from repro.sparse.intersect import (adj_contains, binary_contains,
-                                    intersect_count_sorted, linear_contains)
+from repro.sparse.intersect import adj_contains, intersect_count_sorted
 from repro.sparse.ops import (compact_mask, edge_softmax, embedding_bag,
                               expand_ragged, segment_mean, segment_sum)
 
